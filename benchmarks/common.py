@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timing, table printing, result records."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print benchmark rows as aligned text + machine-readable CSV lines."""
+    if not rows:
+        print(f"[{name}] no rows")
+        return
+    keys = list(rows[0].keys())
+    widths = {k: max(len(str(k)), *(len(_fmt(r.get(k))) for r in rows))
+              for k in keys}
+    print(f"\n== {name} ==")
+    print("  ".join(str(k).ljust(widths[k]) for k in keys))
+    for r in rows:
+        print("  ".join(_fmt(r.get(k)).ljust(widths[k]) for k in keys))
+    for r in rows:
+        print("CSV," + name + "," +
+              ",".join(f"{k}={_fmt(r.get(k))}" for k in keys))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float) or isinstance(v, np.floating):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+def time_to_uncertain(trace: list, frac: float) -> float:
+    """First wall-clock time at which uncertain space <= frac (inf if never)."""
+    for t, unc, _ in trace:
+        if unc <= frac:
+            return t
+    return float("inf")

@@ -1,0 +1,108 @@
+"""Expt 1 (paper Fig. 4): batch 2D (latency, cost) — PF-AS/PF-AP vs
+Weighted Sum / Normalized Constraints / NSGA-II.
+
+Reports, per method: time to first Pareto set, uncertain space over time,
+frontier size + 2D hypervolume, and the deadline test (1 s / 2 s) across
+jobs — the paper's Fig. 4(a)(f) and the 2-50x speedup claim.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    MOGDConfig,
+    hypervolume_2d,
+    normalized_constraints,
+    nsga2,
+    solve_pf,
+    weighted_sum,
+)
+from repro.data import batch_problem, batch_suite
+
+from .common import Timer, emit, time_to_uncertain
+
+MOGD = MOGDConfig(steps=100, multistart=8)
+
+
+def _hv_ref(problem):
+    from repro.core import estimate_objective_bounds
+
+    b = estimate_objective_bounds(problem)
+    return b[1] + 0.1 * (b[1] - b[0])
+
+
+def run(quick: bool = True) -> dict:
+    n_jobs = 6 if quick else 40
+    probes = 24 if quick else 60
+    suite = batch_suite()[:n_jobs]
+    rows, deadline_rows = [], []
+    for w in suite:
+        problem = batch_problem(w)
+        ref = np.asarray(_hv_ref(problem))
+        # Amortized (recurring-job) regime: the first tiny run compiles the
+        # per-problem MOGD/eval jits, which all methods share via
+        # ``problem.solver_for`` — the paper's optimizer is invoked per
+        # *recurrence* of a job, so steady-state latency is the figure of
+        # merit. Cold time is recorded separately.
+        with Timer() as t_cold:
+            solve_pf(problem, mode="AP", n_probes=2, mogd=MOGD)
+        with Timer() as t_ap:
+            ap = solve_pf(problem, mode="AP", n_probes=probes, mogd=MOGD)
+        with Timer() as t_as:
+            asr = solve_pf(problem, mode="AS", n_probes=probes, mogd=MOGD)
+        with Timer() as t_ws:
+            ws = weighted_sum(problem, n_probes=10, mogd=MOGD)
+        with Timer() as t_nc:
+            nc = normalized_constraints(problem, n_probes=10, mogd=MOGD)
+        with Timer() as t_evo:
+            evo = nsga2(problem, n_probes=probes, pop_size=40,
+                        n_gens=8 if quick else 30)
+        rows.append({
+            "job": w.name, "cold_s": t_cold.s,
+            "pfap_s": t_ap.s, "pfap_pts": len(ap.F),
+            "pfap_hv": hypervolume_2d(ap.F, ref),
+            "pfas_s": t_as.s, "pfas_pts": len(asr.F),
+            "ws_s": t_ws.s, "ws_pts": len(ws.F),
+            "ws_hv": hypervolume_2d(ws.F, ref),
+            "nc_s": t_nc.s, "nc_pts": len(nc.F),
+            "evo_s": t_evo.s, "evo_pts": len(evo.F),
+            "evo_hv": hypervolume_2d(evo.F, ref),
+        })
+        deadline_rows.append({
+            "job": w.name,
+            "pfap_unc@1s": _unc_at(ap.trace, 1.0),
+            "pfap_unc@2s": _unc_at(ap.trace, 2.0),
+            "evo_first_set_s": evo.trace[0][0] if evo.trace else np.inf,
+            "pfap_first_set_s": time_to_uncertain(ap.trace, 0.999),
+        })
+    emit(rows, "expt1_batch2d")
+    emit(deadline_rows, "expt1_deadline")
+    med = lambda k: float(np.median([r[k] for r in rows]))
+    summary = {
+        "jobs": n_jobs,
+        "pfap_median_s": med("pfap_s"),
+        "ws_median_s": med("ws_s"),
+        "nc_median_s": med("nc_s"),
+        "evo_median_s": med("evo_s"),
+        "pfap_median_pts": med("pfap_pts"),
+        "ws_median_pts": med("ws_pts"),
+        "median_unc_at_1s": float(np.median(
+            [r["pfap_unc@1s"] for r in deadline_rows])),
+        "pfap_hv_ge_ws_hv_frac": float(np.mean(
+            [r["pfap_hv"] >= r["ws_hv"] - 1e-9 for r in rows])),
+    }
+    emit([summary], "expt1_summary")
+    return summary
+
+
+def _unc_at(trace, t_s):
+    unc = 1.0
+    for t, u, _ in trace:
+        if t <= t_s:
+            unc = u
+    return unc
+
+
+if __name__ == "__main__":
+    run(quick=True)

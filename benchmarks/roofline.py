@@ -1,0 +1,80 @@
+"""Roofline harness: tabulates the dry-run artifacts (results/dryrun/*.json)
+into the EXPERIMENTS.md §Roofline table — three terms, bottleneck,
+MODEL_FLOPS/HLO ratio, bytes/chip — and flags the hillclimb candidates
+(worst useful ratio, most collective-bound, paper-representative)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from .common import emit
+
+DRYRUN_DIR = pathlib.Path("results/dryrun")
+
+
+def load_artifacts(mesh: str = "16x16", tag: str = "") -> list[dict]:
+    out = []
+    suffix = f"__{tag}.json" if tag else ".json"
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}{suffix}")):
+        if not tag and p.stem.count("__") != 2:
+            continue  # skip tagged (hillclimb) variants in the baseline table
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def rows_from(arts: list[dict]) -> list[dict]:
+    rows = []
+    for a in arts:
+        r = a["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append({
+            "arch": a["arch"], "shape": a["shape"], "mesh": a["mesh"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": r["useful_ratio"],
+            "roofline_frac": (r["compute_s"] / dom) if dom > 0 else 0.0,
+            "bytes_per_dev_GB":
+                a["memory"].get("total_bytes_per_device", 0) / 1e9,
+            "coll_GB_chip": a["collectives"]["wire_bytes_per_chip"] / 1e9,
+        })
+    return rows
+
+
+def run(quick: bool = True) -> dict:
+    rows = rows_from(load_artifacts("16x16"))
+    emit(rows, "roofline_16x16")
+    rows_mp = rows_from(load_artifacts("2x16x16"))
+    if rows_mp:
+        emit(rows_mp, "roofline_2x16x16")
+    if not rows:
+        return {"cells": 0}
+    # hillclimb candidate selection
+    trains = [r for r in rows if r["shape"] == "train_4k"]
+    worst = min(rows, key=lambda r: (r["useful_ratio"]
+                                     if r["shape"] != "decode_32k" else 1))
+    coll = max(rows, key=lambda r: r["collective_s"]
+               / max(r["compute_s"] + r["memory_s"] + r["collective_s"],
+                     1e-12))
+    summary = {
+        "cells_16x16": len(rows),
+        "cells_2x16x16": len(rows_mp),
+        "memory_bound": sum(r["bottleneck"] == "memory" for r in rows),
+        "collective_bound": sum(r["bottleneck"] == "collective"
+                                for r in rows),
+        "compute_bound": sum(r["bottleneck"] == "compute" for r in rows),
+        "worst_useful": f"{worst['arch']}/{worst['shape']}",
+        "most_collective": f"{coll['arch']}/{coll['shape']}",
+        "median_useful_train": float(np.median(
+            [r["useful_ratio"] for r in trains])) if trains else 0.0,
+    }
+    emit([summary], "roofline_summary")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

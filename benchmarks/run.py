@@ -1,0 +1,64 @@
+"""Benchmark runner: one module per paper table/figure + the roofline and
+planner harnesses.
+
+    python -m benchmarks.run            # quick mode (CI-sized)
+    python -m benchmarks.run --full     # paper-sized workload counts
+    python -m benchmarks.run --only expt1_batch2d,roofline
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import time
+import traceback
+
+SUITES = [
+    "expt1_batch2d",     # Fig. 4: batch 2D vs WS/NC/Evo
+    "expt2_streaming",   # Fig. 5: streaming 2D/3D + Evo inconsistency
+    "expt3_recommend",   # Fig. 6a-d: PF-WUN vs weighted-SO (accurate)
+    "expt4_uncertain",   # Fig. 6e-f: learned models + uncertainty
+    "speedup",           # §6.1: 2-50x claim
+    "solver_compare",    # §4.2: MOGD vs reference solver
+    "roofline",          # §Roofline: dry-run artifact table
+    "planner_frontier",  # beyond-paper: plan-space Pareto frontier
+    "kernelbench",       # kernel vs oracle + VMEM accounting
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/bench_summary.json")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else SUITES
+    summaries, failures = {}, []
+    t0 = time.perf_counter()
+    for name in names:
+        print(f"\n########## {name} ##########")
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            t = time.perf_counter()
+            summaries[name] = mod.run(quick=not args.full)
+            summaries[name]["_wall_s"] = time.perf_counter() - t
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\n===== benchmark summaries ({time.perf_counter()-t0:.0f}s) =====")
+    print(json.dumps(summaries, indent=1, default=str))
+    try:
+        import pathlib
+
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        pathlib.Path(args.out).write_text(
+            json.dumps(summaries, indent=1, default=str))
+    except OSError:
+        pass
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

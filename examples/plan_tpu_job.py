@@ -1,0 +1,39 @@
+"""Plan a TPU training/serving job with the paper's optimizer (the repo's
+systems tie-in): PF-AP over the 12-knob execution-plan space, calibrated
+against the dry-run artifacts when present, + an elastic replan event.
+
+    PYTHONPATH=src python examples/plan_tpu_job.py [--arch grok-1-314b]
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.planner import plan_job, replan_elastic
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="grok-1-314b")
+ap.add_argument("--shape", default="train_4k")
+args = ap.parse_args()
+
+cfg = get_config(args.arch)
+print(f"planning {args.arch} x {args.shape} "
+      f"({cfg.param_count() / 1e9:.0f}B params)\n")
+
+rec = plan_job(cfg, args.shape, weights=(0.5, 0.5), n_probes=24,
+               deadline_s=None)
+print(f"frontier: {len(rec.frontier_F)} plans in {rec.elapsed_s:.2f}s")
+for f, (plan, chips, tp) in zip(rec.frontier_F[:6], rec.frontier_plans[:6]):
+    print(f"  lat={f[0]:6.2f}s cost=${f[1]:7.4f}  chips={chips:3d} tp={tp:2d} "
+          f"remat={plan.remat} pdt={plan.param_dtype[:4]} "
+          f"sdt={plan.state_dtype[:4]} mb={plan.microbatches}")
+
+print(f"\nbalanced recommendation: {rec.num_chips} chips, "
+      f"tp={rec.model_parallel}, {rec.plan}")
+print(f"  -> latency {rec.objectives[0]:.2f}s/step, "
+      f"${rec.objectives[1] * 3600 / max(rec.objectives[0], 1e-9):,.0f}/h")
+
+# a node fails: replan for the survivors under the paper's 2.5s deadline
+el = replan_elastic(cfg, args.shape, surviving_chips=192)
+print(f"\nelastic replan (192 chips survive, {el.elapsed_s:.2f}s): "
+      f"{el.num_chips} chips, tp={el.model_parallel}, "
+      f"lat={el.objectives[0]:.2f}s")

@@ -1,0 +1,32 @@
+"""Batched serving example: continuous-batching engine over a reduced
+model — prefill into free slots, decode all active slots each step, slot
+reuse as requests finish (the serverless use case the paper optimizes).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.nn import init_params
+from repro.serving import Request, ServeEngine
+
+cfg = get_smoke("qwen3-4b")
+params, _ = init_params(jax.random.PRNGKey(0), cfg)
+engine = ServeEngine(params, cfg, batch=4, max_seq=96)
+
+rng = np.random.default_rng(0)
+reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 12).astype(np.int32),
+                max_new=12 + 4 * (i % 3)) for i in range(10)]
+t0 = time.perf_counter()
+engine.run(reqs)
+wall = time.perf_counter() - t0
+toks = sum(len(r.out) for r in reqs)
+print(f"{len(reqs)} requests ({toks} tokens) in {wall:.2f}s "
+      f"-> {toks / wall:.1f} tok/s on 4 slots")
+for r in reqs[:3]:
+    print(f"  req {r.rid}: {len(r.out)} tokens: {r.out[:8]}...")
+assert all(r.done for r in reqs)

@@ -1,0 +1,77 @@
+"""Regenerate the EXPERIMENTS.md dry-run/roofline markdown tables from
+results/dryrun/*.json (run after any new dry-run sweep)."""
+
+import json
+import pathlib
+import sys
+
+D = pathlib.Path("results/dryrun")
+
+
+def fmt(v, nd=3):
+    return f"{v:.{nd}f}" if isinstance(v, float) else str(v)
+
+
+def table(mesh: str) -> str:
+    rows = []
+    for p in sorted(D.glob(f"*__{mesh}.json")):
+        if p.stem.count("__") != 2:
+            continue
+        a = json.loads(p.read_text())
+        r = a["roofline"]
+        m = a["memory"].get("total_bytes_per_device", 0) / 1e9
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | {m:.0f} | "
+            f"{a['collectives']['wire_bytes_per_chip'] / 1e9:.1f} | "
+            f"{a['compile_s']:.0f}s |")
+    head = ("| arch | shape | compute_s | memory_s | collective_s | "
+            "bottleneck | useful | GB/dev | wireGB/chip | compile |\n"
+            "|---|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def perf_table(cells: list[tuple[str, str, list[str]]]) -> str:
+    out = []
+    for arch, shape, tags in cells:
+        out.append(f"\n**{arch} × {shape} (16x16):**\n")
+        out.append("| iteration | compute_s | memory_s | collective_s | "
+                   "dominant | useful | GB/dev |")
+        out.append("|---|---|---|---|---|---|---|")
+        for tag in ["baseline"] + tags:
+            p = (D / f"{arch}__{shape}__16x16.json" if tag == "baseline"
+                 else D / f"{arch}__{shape}__16x16__{tag}.json")
+            if not p.exists():
+                continue
+            a = json.loads(p.read_text())
+            r = a["roofline"]
+            dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            m = a["memory"].get("total_bytes_per_device", 0) / 1e9
+            out.append(
+                f"| {tag} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                f"{r['collective_s']:.3f} | **{dom:.2f}** | "
+                f"{r['useful_ratio']:.2f} | {m:.0f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "16x16"):
+        print("### Single-pod (16x16 = 256 chips)\n")
+        print(table("16x16"))
+    if which in ("all", "2x16x16"):
+        print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+        print(table("2x16x16"))
+    if which in ("all", "perf"):
+        print("\n### Perf iterations\n")
+        print(perf_table([
+            ("musicgen-medium", "train_4k",
+             ["M1_attn_batch", "M2_pure_dp", "M3_no_remat"]),
+            ("qwen2-moe-a2.7b", "train_4k",
+             ["Q1_gather", "Q2_puredp_g512", "Q3_bf16_master", "Q4_no_remat", "Q5_zero3_all"]),
+            ("internvl2-76b", "train_4k",
+             ["I1_bf16_gradrs", "I2_zero3_all", "I3_bf16_master", "I4_no_remat"]),
+            ("grok-1-314b", "train_4k",
+             ["G1_bf16_states_zero3", "G2_puredp_zero3", "G3_no_remat"]),
+        ]))

@@ -1,0 +1,66 @@
+"""Core MOO library: the paper's contribution (Progressive Frontier + MOGD).
+
+Public API::
+
+    from repro.core import (
+        MOOProblem, continuous, integer, categorical, boolean,
+        MOGDConfig, MOGDSolver,
+        ProgressiveFrontier, solve_pf,
+        weighted_sum, normalized_constraints, nsga2,
+        utopia_nearest, weighted_utopia_nearest,
+        pareto_mask, pareto_filter, hypervolume,
+    )
+"""
+
+from .problem import (
+    MOOProblem,
+    SpaceEncoder,
+    VariableSpec,
+    boolean,
+    categorical,
+    continuous,
+    integer,
+)
+from .pareto import (
+    coverage_spread,
+    crowding_distance,
+    dominates,
+    hypervolume,
+    hypervolume_2d,
+    pareto_filter,
+    pareto_filter_masked,
+    pareto_mask,
+)
+from .hyperrectangle import (
+    Rectangle,
+    RectangleQueue,
+    compute_bounds,
+    grid_cells,
+    make_rectangle,
+    split_rectangle,
+)
+from .mogd import (
+    COResult,
+    MOGDConfig,
+    MOGDSolver,
+    estimate_objective_bounds,
+    grid_reference_solve,
+)
+from .progressive_frontier import PFResult, PFState, ProgressiveFrontier, solve_pf
+from .baselines import (
+    BaselineResult,
+    normalized_constraints,
+    nsga2,
+    weight_lattice,
+    weighted_sum,
+)
+from .recommend import (
+    WorkloadClassWeights,
+    classify_workload,
+    utopia_nearest,
+    weighted_single_objective_pick,
+    weighted_utopia_nearest,
+    workload_aware_wun,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,310 @@
+"""Competitor MOO methods from the paper's evaluation (§3.2, §6.1).
+
+* Weighted Sum (WS) [Marler & Arora 2004] — scalarize with a lattice of
+  weight vectors; known to give poor frontier coverage (Fig. 4b).
+* Normalized Constraints (NC) [Messac et al. 2003] — probe an evenly spaced
+  grid of the objective space; realized here as the ε-constraint grid the
+  paper describes ("divides the objective space into an evenly distributed
+  grid and probes the grid points").  Non-incremental by construction.
+* NSGA-II (Evo) [Deb et al. 2002] — full implementation: fast non-dominated
+  sort, crowding distance, tournament selection, SBX crossover, polynomial
+  mutation.  Exhibits the paper's inconsistency-across-probe-budgets issue.
+
+All methods consume the same :class:`MOOProblem` and the same gradient /
+evaluation machinery as PF so timing comparisons are apples-to-apples.
+Each returns ``(F, X, trace)`` where trace rows are
+``(elapsed_s, uncertain_fraction_or_nan, n_points)`` — WS/NC/Evo produce
+their first frontier only at the end of a full pass, which is exactly the
+latency pathology Fig. 4(a) highlights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pareto
+from .mogd import MOGDConfig, MOGDSolver, estimate_objective_bounds
+from .problem import MOOProblem
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    F: np.ndarray
+    X: np.ndarray
+    trace: list
+    probes: int
+    elapsed: float
+
+
+# ---------------------------------------------------------------------------
+# Weight lattices (Das-Dennis simplex) for WS
+# ---------------------------------------------------------------------------
+
+
+def weight_lattice(k: int, n_points: int) -> np.ndarray:
+    """~n_points weight vectors on the k-simplex."""
+    if k == 2:
+        w = np.linspace(0.0, 1.0, n_points)
+        return np.stack([w, 1.0 - w], axis=1)
+    # smallest H with C(H+k-1, k-1) >= n_points
+    H = 1
+    while True:
+        cnt = len(list(itertools.combinations(range(H + k - 1), k - 1)))
+        if cnt >= n_points:
+            break
+        H += 1
+    ws = []
+    for c in itertools.combinations(range(H + k - 1), k - 1):
+        prev, w = -1, []
+        for ci in c:
+            w.append(ci - prev - 1)
+            prev = ci
+        w.append(H + k - 2 - prev)
+        ws.append(np.array(w, dtype=np.float64) / H)
+    ws = np.stack(ws)
+    if len(ws) > n_points:
+        idx = np.linspace(0, len(ws) - 1, n_points).astype(int)
+        ws = ws[idx]
+    return ws
+
+
+def weighted_sum(
+    problem: MOOProblem,
+    n_probes: int = 10,
+    mogd: MOGDConfig = MOGDConfig(),
+    bounds: np.ndarray | None = None,
+) -> BaselineResult:
+    """WS: each weight vector defines one scalarized SO problem, solved by
+    multi-start gradient descent on sum_i w_i * F̂_i."""
+    t0 = time.perf_counter()
+    if bounds is None:
+        bounds = estimate_objective_bounds(problem)
+    lo, hi = jnp.asarray(bounds[0]), jnp.asarray(bounds[1])
+    width = jnp.maximum(hi - lo, 1e-12)
+    obj = problem.objectives
+    snap = problem.encoder.snap
+    W = jnp.asarray(weight_lattice(problem.k, n_probes))
+
+    def descend(w, x0):
+        loss = lambda x: jnp.sum(w * (obj(x) - lo) / width)
+        grad = jax.grad(loss)
+
+        def step(carry, _):
+            x, m, v, t = carry
+            g = grad(x)
+            g = jnp.where(jnp.isfinite(g), g, 0.0)
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * g * g
+            x = x - mogd.lr * (m / (1 - 0.9 ** t)) / (
+                jnp.sqrt(v / (1 - 0.999 ** t)) + 1e-8
+            )
+            return (jnp.clip(x, 0.0, 1.0), m, v, t + 1.0), None
+
+        z = jnp.zeros_like(x0)
+        (x, _, _, _), _ = jax.lax.scan(step, (x0, z, z, jnp.float32(1.0)), None,
+                                       length=mogd.steps)
+        return x
+
+    @jax.jit
+    def run(W, x0s):
+        finals = jax.vmap(lambda w, xs: jax.vmap(lambda x0: descend(w, x0))(xs))(
+            W, x0s
+        )  # (B, S, D)
+        snapped = snap(finals)
+        fv = jax.vmap(jax.vmap(obj))(snapped)
+        score = jnp.einsum("bk,bsk->bs", W, (fv - lo) / width)
+        best = jnp.argmin(score, axis=1)
+        g = lambda a: jnp.take_along_axis(
+            a, best[:, None, None] if a.ndim == 3 else best[:, None], 1
+        ).squeeze(1)
+        return g(snapped), g(fv)
+
+    key = jax.random.PRNGKey(mogd.seed)
+    x0s = jax.random.uniform(key, (len(W), mogd.multistart, problem.dim))
+    X, F = run(W, x0s)
+    F, X = np.asarray(F), np.asarray(X)
+    mask = np.asarray(pareto.pareto_mask(F))
+    el = time.perf_counter() - t0
+    return BaselineResult(F[mask], X[mask], [(el, np.nan, int(mask.sum()))],
+                          int(len(W)), el)
+
+
+def normalized_constraints(
+    problem: MOOProblem,
+    n_probes: int = 10,
+    mogd: MOGDConfig = MOGDConfig(),
+    bounds: np.ndarray | None = None,
+) -> BaselineResult:
+    """NC as an even ε-constraint grid over objectives 2..k: minimize F_1
+    subject to F_j within each grid slab.  Requires N^p = n_probes grid
+    points fixed *up front* (the paper's efficiency criticism: not
+    incremental, cost grows with grid resolution).
+
+    Like the original NC method, the grid spans the box of the k anchor
+    (reference) points, which are found first by k single-objective solves
+    — part of why NC's time-to-first-frontier is long (Fig. 4a).
+    """
+    t0 = time.perf_counter()
+    if bounds is None:
+        bounds = estimate_objective_bounds(problem)
+        # Anchor-point pass (Def. 3.4): shrink the grid box to the span of
+        # the reference points, as NC prescribes.
+        anchor_solver = problem.solver_for(mogd)
+        refs = []
+        for i in range(problem.k):
+            r = anchor_solver.solve_single_objective(i, bounds)
+            if bool(r.feasible[0]):
+                refs.append(r.f[0])
+        if len(refs) == problem.k:
+            refs = np.stack(refs)
+            lo_a, hi_a = refs.min(0), refs.max(0)
+            span = np.maximum(hi_a - lo_a, 1e-9)
+            bounds = np.stack([lo_a, lo_a + span])
+    k = problem.k
+    per_axis = max(2, int(round(n_probes ** (1.0 / max(k - 1, 1)))))
+    lo, hi = bounds[0], bounds[1]
+    edges = [np.linspace(lo[j], hi[j], per_axis + 1) for j in range(1, k)]
+    boxes = []
+    for idx in itertools.product(range(per_axis), repeat=k - 1):
+        blo, bhi = lo.copy(), hi.copy()
+        for a, j in enumerate(range(1, k)):
+            blo[j] = edges[a][idx[a]]
+            bhi[j] = edges[a][idx[a] + 1]
+        boxes.append(np.stack([blo, bhi]))
+    boxes = np.stack(boxes)
+    solver = problem.solver_for(mogd)
+    res = solver.solve(boxes, target=0)
+    F, X = res.f[res.feasible], res.x[res.feasible]
+    if len(F):
+        mask = np.asarray(pareto.pareto_mask(F))
+        F, X = F[mask], X[mask]
+    el = time.perf_counter() - t0
+    return BaselineResult(F, X, [(el, np.nan, len(F))], len(boxes), el)
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II
+# ---------------------------------------------------------------------------
+
+
+def _fast_non_dominated_sort(F: np.ndarray) -> np.ndarray:
+    """Return front index per individual (0 = best front)."""
+    n = len(F)
+    leq = np.all(F[:, None, :] <= F[None, :, :], axis=2)
+    lt = np.any(F[:, None, :] < F[None, :, :], axis=2)
+    dom = leq & lt  # dom[i, j] = i dominates j
+    n_dom = dom.sum(axis=0)  # how many dominate j
+    fronts = np.full(n, -1)
+    current = np.where(n_dom == 0)[0]
+    rank = 0
+    while len(current):
+        fronts[current] = rank
+        n_dom = n_dom - dom[current].sum(axis=0)
+        n_dom[fronts >= 0] = np.iinfo(np.int64).max
+        current = np.where(n_dom == 0)[0]
+        rank += 1
+    return fronts
+
+
+def nsga2(
+    problem: MOOProblem,
+    n_probes: int = 50,
+    pop_size: int = 40,
+    seed: int = 0,
+    eta_c: float = 15.0,
+    eta_m: float = 20.0,
+    record_every_gen: bool = True,
+    n_gens: int | None = None,
+) -> BaselineResult:
+    """NSGA-II; ``n_probes`` caps the number of *frontier points* requested,
+    generations continue until the population's first front stabilizes at
+    that size or the generation budget runs out."""
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    D = problem.dim
+    snap = problem.encoder.snap
+
+    def evaluate(P):
+        return np.asarray(problem.evaluate_batch(problem_encoder_snap(P)))
+
+    def problem_encoder_snap(P):
+        return np.asarray(snap(jnp.asarray(P)))
+
+    P = rng.random((pop_size, D))
+    F = evaluate(P)
+    trace = []
+    if n_gens is None:
+        n_gens = max(4, int(np.ceil(3 * n_probes / pop_size)) + 6)
+    evals = pop_size
+    for gen in range(n_gens):
+        # --- variation: binary tournament on (rank, crowding) ------------
+        ranks = _fast_non_dominated_sort(F)
+        crowd = np.zeros(len(F))
+        for r in np.unique(ranks):
+            idx = np.where(ranks == r)[0]
+            crowd[idx] = pareto.crowding_distance(F[idx])
+
+        def tournament():
+            a, b = rng.integers(0, pop_size, 2)
+            if ranks[a] != ranks[b]:
+                return a if ranks[a] < ranks[b] else b
+            return a if crowd[a] > crowd[b] else b
+
+        children = np.empty_like(P)
+        for i in range(0, pop_size, 2):
+            p1, p2 = P[tournament()], P[tournament()]
+            # SBX crossover
+            u = rng.random(D)
+            beta = np.where(
+                u <= 0.5,
+                (2 * u) ** (1.0 / (eta_c + 1)),
+                (1.0 / (2 * (1 - u))) ** (1.0 / (eta_c + 1)),
+            )
+            c1 = 0.5 * ((1 + beta) * p1 + (1 - beta) * p2)
+            c2 = 0.5 * ((1 - beta) * p1 + (1 + beta) * p2)
+            children[i] = c1
+            children[min(i + 1, pop_size - 1)] = c2
+        # polynomial mutation
+        mut = rng.random(children.shape) < (1.0 / D)
+        u = rng.random(children.shape)
+        delta = np.where(
+            u < 0.5,
+            (2 * u) ** (1.0 / (eta_m + 1)) - 1.0,
+            1.0 - (2 * (1 - u)) ** (1.0 / (eta_m + 1)),
+        )
+        children = np.clip(children + mut * delta, 0.0, 1.0)
+        Fc = evaluate(children)
+        evals += pop_size
+        # --- environmental selection -------------------------------------
+        allP = np.concatenate([P, children])
+        allF = np.concatenate([F, Fc])
+        ranks = _fast_non_dominated_sort(allF)
+        order = []
+        for r in np.unique(ranks):
+            idx = np.where(ranks == r)[0]
+            if len(order) + len(idx) <= pop_size:
+                order.extend(idx.tolist())
+            else:
+                cd = pareto.crowding_distance(allF[idx])
+                take = idx[np.argsort(-cd)][: pop_size - len(order)]
+                order.extend(take.tolist())
+                break
+        P, F = allP[order], allF[order]
+        if record_every_gen:
+            first = F[_fast_non_dominated_sort(F) == 0]
+            trace.append((time.perf_counter() - t0, np.nan, len(first)))
+        first_front = F[_fast_non_dominated_sort(F) == 0]
+        if len(np.unique(np.round(first_front, 9), axis=0)) >= n_probes:
+            break
+    ranks = _fast_non_dominated_sort(F)
+    sel = ranks == 0
+    Fo, Xo = F[sel], problem_encoder_snap(P[sel])
+    _, uniq = np.unique(np.round(Fo, 9), axis=0, return_index=True)
+    el = time.perf_counter() - t0
+    return BaselineResult(Fo[uniq], Xo[uniq], trace, evals, el)

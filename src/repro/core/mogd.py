@@ -1,0 +1,296 @@
+"""Multi-Objective Gradient Descent (MOGD) solver — paper §4.2.
+
+Solves the constrained optimization (CO) problems produced by the
+Progressive Frontier:
+
+    x* = argmin_x  F_t(x)   s.t.  C_j^L <= F_j(x) <= C_j^U  for all j,
+                                   x in [0,1]^D
+
+via multi-start projected gradient descent on the penalty loss of Eq. 4:
+
+    L(x) = 1{0 <= F̂_t <= 1} · F̂_t(x)^2
+         + Σ_j 1{F̂_j < 0 or F̂_j > 1} · [(F̂_j(x) - 1/2)^2 + P]
+
+with F̂_j = (F_j - C_j^L) / (C_j^U - C_j^L).
+
+TPU adaptation (DESIGN.md §2): the paper dispatches CO problems to a
+multi-threaded solver; here *all* (problems × multi-starts) descend in a
+single ``vmap``-batched, ``jit``-compiled program — the batched surrogate
+forward is the compute hot spot and has a fused Pallas kernel
+(``repro.kernels.mogd_mlp``).  Subgradients of the non-smooth indicator
+terms are handled by JAX's autodiff exactly as the paper prescribes
+("machine learning libraries allow subgradients").
+
+Model uncertainty (§4.2.3) enters by replacing F with F̃ = E[F] + α·std[F]
+before loss construction (see ``MOOProblem.effective_objectives``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .problem import MOOProblem
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MOGDConfig:
+    steps: int = 120
+    lr: float = 0.1
+    multistart: int = 16
+    penalty: float = 100.0  # P in Eq. 4
+    feas_tol: float = 1e-4  # relative slack when checking box feasibility
+    alpha: float = 0.0  # uncertainty weight: F̃ = E[F] + alpha * std[F]
+    # Tie-break regularizer: adds eps * Σ_{j≠t} clip(F̂_j,0,1)^2 so that when
+    # the target-objective minimizer is non-unique the solver lands on the
+    # Pareto-optimal representative (Prop. 3.1 assumes uniqueness; learned
+    # models can be flat in knobs an objective ignores).  eps is small enough
+    # never to trade target-objective value for it.
+    tie_break_eps: float = 1e-4
+    # Cosine LR decay floor (fraction of lr); improves landing precision on
+    # tight constraint boxes.
+    lr_floor: float = 0.05
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class COResult:
+    """Batched result of solving B constrained-optimization problems."""
+
+    x: np.ndarray  # (B, D) snapped encoded configurations
+    f: np.ndarray  # (B, k) objective values at x
+    feasible: np.ndarray  # (B,) bool — Prop 3.3: probe may return nothing
+
+
+def _eq4_loss(
+    f: Array, lo: Array, hi: Array, target: Array, penalty: float,
+    tie_break_eps: float = 0.0,
+) -> Array:
+    """Paper Eq. 4 over one objective vector ``f: (k,)``.
+
+    ``target`` is a *traced* index (one-hot selection) so a single jit
+    serves every CO target — the PF session compiles once per problem.
+    """
+    width = jnp.maximum(hi - lo, 1e-12)
+    fhat = (f - lo) / width
+    onehot = jax.nn.one_hot(target, f.shape[-1], dtype=fhat.dtype)
+    ft = jnp.sum(fhat * onehot)
+    inside_t = jnp.logical_and(ft >= 0.0, ft <= 1.0)
+    target_term = jnp.where(inside_t, ft * ft, 0.0)
+    violated = jnp.logical_or(fhat < 0.0, fhat > 1.0)
+    viol_term = jnp.where(violated, (fhat - 0.5) ** 2 + penalty, 0.0).sum()
+    tie_term = tie_break_eps * jnp.sum(
+        jnp.where(violated, 0.0, jnp.clip(fhat, 0.0, 1.0) ** 2)
+    )
+    return target_term + viol_term + tie_term
+
+
+class MOGDSolver:
+    """Batched MOGD over a fixed :class:`MOOProblem`.
+
+    One instance caches a jit per (target objective) — the PF algorithms
+    only ever use a handful of targets, so compilation is amortized across
+    the thousands of CO probes of a planning session.
+    """
+
+    def __init__(self, problem: MOOProblem, config: MOGDConfig = MOGDConfig()):
+        self.problem = problem
+        self.config = config
+        self._solver: Callable | None = None
+        self._key = jax.random.PRNGKey(config.seed)
+
+    # ------------------------------------------------------------------
+    def _next_key(self) -> Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _build(self) -> Callable:
+        cfg = self.config
+        obj_fn = self.problem.effective_objectives(cfg.alpha)
+        snap = self.problem.encoder.snap
+        penalty = cfg.penalty
+
+        def descend_one(x0: Array, lo: Array, hi: Array, target: Array) -> Array:
+            """GD from one start for one CO problem -> final x (D,)."""
+
+            loss_fn = lambda x: _eq4_loss(
+                obj_fn(x), lo, hi, target, penalty, cfg.tie_break_eps
+            )
+            grad_fn = jax.grad(loss_fn)
+
+            def step(carry, _):
+                x, m, v, t = carry
+                g = grad_fn(x)
+                g = jnp.where(jnp.isfinite(g), g, 0.0)
+                m = cfg.adam_b1 * m + (1 - cfg.adam_b1) * g
+                v = cfg.adam_b2 * v + (1 - cfg.adam_b2) * g * g
+                mh = m / (1 - cfg.adam_b1 ** t)
+                vh = v / (1 - cfg.adam_b2 ** t)
+                frac = (t - 1.0) / cfg.steps
+                lr = cfg.lr * (
+                    cfg.lr_floor
+                    + (1 - cfg.lr_floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+                )
+                x = x - lr * mh / (jnp.sqrt(vh) + cfg.adam_eps)
+                # Projection: walk back to the boundary of [0,1]^D (§4.2.1).
+                x = jnp.clip(x, 0.0, 1.0)
+                return (x, m, v, t + 1.0), None
+
+            z = jnp.zeros_like(x0)
+            (x, _, _, _), _ = jax.lax.scan(
+                step, (x0, z, z, jnp.float32(1.0)), None, length=cfg.steps
+            )
+            return x
+
+        def solve_batch(x0s: Array, los: Array, his: Array, target: Array):
+            """x0s: (B, S, D); los/his: (B, k) -> per-problem best."""
+            finals = jax.vmap(
+                lambda x0_s, lo, hi: jax.vmap(
+                    lambda x0: descend_one(x0, lo, hi, target))(x0_s)
+            )(x0s, los, his)  # (B, S, D)
+            snapped = snap(finals)
+            fvals = jax.vmap(jax.vmap(obj_fn))(snapped)  # (B, S, k)
+            width = jnp.maximum(his - los, 1e-12)[:, None, :]
+            fhat = (fvals - los[:, None, :]) / width
+            feas = jnp.all(
+                jnp.logical_and(fhat >= -cfg.feas_tol, fhat <= 1.0 + cfg.feas_tol),
+                axis=-1,
+            )  # (B, S)
+            onehot = jax.nn.one_hot(target, fvals.shape[-1],
+                                    dtype=fvals.dtype)
+            ft = jnp.sum(fvals * onehot, axis=-1)  # (B, S)
+            score = jnp.where(feas, ft, jnp.inf)
+            best = jnp.argmin(score, axis=1)  # (B,)
+            take = lambda a: jnp.take_along_axis(
+                a, best[:, None, None] if a.ndim == 3 else best[:, None], axis=1
+            ).squeeze(1)
+            return take(snapped), take(fvals), jnp.any(feas, axis=1)
+
+        return jax.jit(solve_batch)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _bucket(B: int) -> int:
+        """Pad batch sizes to a small set of buckets so a PF session hits
+        at most ~3 jit specializations instead of one per grid size."""
+        b = 4
+        while b < B:
+            b *= 2
+        return b
+
+    def _run(self, x0s, los, his, target: int):
+        if self._solver is None:
+            self._solver = self._build()
+        B = x0s.shape[0]
+        Bp = self._bucket(B)
+        if Bp != B:
+            pad = lambda a: jnp.concatenate(
+                [a, jnp.broadcast_to(a[:1], (Bp - B, *a.shape[1:]))], 0)
+            x0s, los, his = pad(x0s), pad(los), pad(his)
+        x, f, feas = self._solver(x0s, los, his, jnp.int32(target))
+        return x[:B], f[:B], feas[:B]
+
+    def solve(self, boxes: np.ndarray, target: int = 0) -> COResult:
+        """Solve B CO problems; ``boxes: (B, 2, k)`` rows are (lo, hi)."""
+        boxes = np.asarray(boxes, dtype=np.float64)
+        if boxes.ndim == 2:
+            boxes = boxes[None]
+        B = boxes.shape[0]
+        cfg = self.config
+        x0s = jax.random.uniform(
+            self._next_key(), (B, cfg.multistart, self.problem.dim)
+        )
+        x, f, feas = self._run(
+            x0s, jnp.asarray(boxes[:, 0]), jnp.asarray(boxes[:, 1]), target)
+        return COResult(np.asarray(x), np.asarray(f), np.asarray(feas))
+
+    def refine(self, x0s: np.ndarray, box: np.ndarray, target: int = 0):
+        """Descend from given starts (reference-solver elite refinement).
+
+        ``x0s: (B, D)``; ``box: (2, k)``. Returns (x, f, feasible) arrays.
+        """
+        B = x0s.shape[0]
+        lo = jnp.broadcast_to(jnp.asarray(box[0]), (B, len(box[0])))
+        hi = jnp.broadcast_to(jnp.asarray(box[1]), (B, len(box[1])))
+        x, f, feas = self._run(jnp.asarray(x0s)[:, None, :], lo, hi, target)
+        return np.asarray(x), np.asarray(f), np.asarray(feas)
+
+    def solve_single_objective(self, target: int, bounds: np.ndarray) -> COResult:
+        """Unconstrained single-objective min (reference points, Def 3.4).
+
+        The constraint box is the global objective bounds *widened downward*
+        by one full span: sampled bounds under-estimate the achievable
+        minimum, and an over-tight lower edge would make the true optimum
+        look like a constraint violation.
+        """
+        bounds = np.asarray(bounds, dtype=np.float64)
+        span = np.maximum(bounds[1] - bounds[0], 1e-12)
+        widened = np.stack([bounds[0] - span, bounds[1]])
+        return self.solve(widened[None], target=target)
+
+
+# ---------------------------------------------------------------------------
+# Reference solver (Knitro stand-in, DESIGN.md §6): dense random multistart
+# + elite gradient refinement.  Slow but model-agnostic; used by tests and
+# ``benchmarks/solver_compare.py``.
+# ---------------------------------------------------------------------------
+
+
+def grid_reference_solve(
+    problem: MOOProblem,
+    box: np.ndarray,
+    target: int = 0,
+    n_samples: int = 20000,
+    n_refine: int = 64,
+    refine_steps: int = 300,
+    seed: int = 0,
+):
+    """Solve one CO problem by brute force.  ``box: (2, k)``."""
+    key = jax.random.PRNGKey(seed)
+    X = problem.sample(key, n_samples)
+    X = problem.encoder.snap(X)
+    F = np.asarray(problem.evaluate_batch(X))
+    lo, hi = box[0], box[1]
+    width = np.maximum(hi - lo, 1e-12)
+    fhat = (F - lo) / width
+    feas = np.all((fhat >= -1e-9) & (fhat <= 1 + 1e-9), axis=1)
+    if not feas.any():
+        elite_idx = np.argsort(np.abs(fhat - 0.5).max(1))[:n_refine]
+    else:
+        score = np.where(feas, F[:, target], np.inf)
+        elite_idx = np.argsort(score)[:n_refine]
+    # Elite refinement with the MOGD machinery (high budget).
+    cfg = MOGDConfig(steps=refine_steps, multistart=1, lr=0.02, seed=seed)
+    solver = MOGDSolver(problem, cfg)
+    x, f, fs = solver.refine(np.asarray(X)[elite_idx], np.stack([lo, hi]),
+                             target=target)
+    score = np.where(fs, f[:, target], np.inf)
+    b = int(np.argmin(score))
+    return COResult(x[b : b + 1], f[b : b + 1], fs[b : b + 1])
+
+
+def estimate_objective_bounds(
+    problem: MOOProblem, n: int = 4096, seed: int = 0, margin: float = 0.05
+) -> np.ndarray:
+    """Estimate global objective bounds by snapped random sampling.
+
+    Returns ``(2, k)`` [lo, hi] with a relative margin.  Used to normalize
+    reference-point solves when the user gave no value constraints.
+    """
+    key = jax.random.PRNGKey(seed)
+    X = problem.encoder.snap(problem.sample(key, n))
+    F = np.asarray(problem.evaluate_batch(X))
+    F = F[np.all(np.isfinite(F), axis=1)]
+    lo, hi = F.min(0), F.max(0)
+    span = np.maximum(hi - lo, 1e-12)
+    return np.stack([lo - margin * span, hi + margin * span])

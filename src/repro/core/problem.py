@@ -1,0 +1,237 @@
+"""MOO problem abstraction (paper §3.1, Problem 3.1).
+
+A :class:`MOOProblem` bundles
+
+* a mixed-type configuration space ``Σ`` described by :class:`VariableSpec`s
+  (continuous / integer / categorical / boolean knobs — the paper's Spark
+  parameters, our TPU mesh-plan parameters),
+* ``k`` objective functions ``F_i(x) = Ψ_i(x)`` given as JAX-differentiable
+  callables over the *encoded* space (one-hot + [0,1] normalization per
+  paper §4.2), optionally with predictive-std callables for
+  uncertainty-aware optimization (§4.2.3),
+* optional hard value constraints ``[F_i^L, F_i^U]`` on each objective.
+
+Encoding follows the paper exactly: categorical variables become one-hot
+blocks, integers are normalized then relaxed to [0,1], continuous variables
+are min-max normalized.  ``decode`` rounds/argmaxes back to the raw space.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Variable specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VariableSpec:
+    """One knob of the configuration space."""
+
+    name: str
+    kind: str  # "continuous" | "integer" | "categorical" | "boolean"
+    low: float = 0.0
+    high: float = 1.0
+    choices: tuple = ()  # categorical only
+
+    def __post_init__(self):
+        if self.kind not in ("continuous", "integer", "categorical", "boolean"):
+            raise ValueError(f"unknown variable kind {self.kind!r}")
+        if self.kind == "categorical" and len(self.choices) < 2:
+            raise ValueError(f"categorical variable {self.name} needs >=2 choices")
+        if self.kind in ("continuous", "integer") and not self.high > self.low:
+            raise ValueError(f"variable {self.name}: high must exceed low")
+
+    @property
+    def width(self) -> int:
+        """Number of encoded dimensions this variable occupies."""
+        if self.kind == "categorical":
+            return len(self.choices)
+        return 1
+
+
+def continuous(name: str, low: float, high: float) -> VariableSpec:
+    return VariableSpec(name, "continuous", low=low, high=high)
+
+
+def integer(name: str, low: int, high: int) -> VariableSpec:
+    return VariableSpec(name, "integer", low=float(low), high=float(high))
+
+
+def categorical(name: str, choices: Sequence) -> VariableSpec:
+    return VariableSpec(name, "categorical", choices=tuple(choices))
+
+
+def boolean(name: str) -> VariableSpec:
+    return VariableSpec(name, "boolean", low=0.0, high=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Encoder: raw mixed space  <->  [0,1]^D relaxed space  (paper §4.2 step 1)
+# ---------------------------------------------------------------------------
+
+
+class SpaceEncoder:
+    """Encodes a list of VariableSpecs into a flat [0,1]^D box."""
+
+    def __init__(self, specs: Sequence[VariableSpec]):
+        self.specs = tuple(specs)
+        self.dim = sum(s.width for s in self.specs)
+        offs, o = [], 0
+        for s in self.specs:
+            offs.append(o)
+            o += s.width
+        self._offsets = tuple(offs)
+
+    # -- decoding: relaxed vector -> dict of raw knob values ---------------
+    def decode(self, x: np.ndarray) -> dict:
+        x = np.asarray(x)
+        out = {}
+        for spec, off in zip(self.specs, self._offsets):
+            block = x[off : off + spec.width]
+            if spec.kind == "categorical":
+                out[spec.name] = spec.choices[int(np.argmax(block))]
+            elif spec.kind == "boolean":
+                out[spec.name] = bool(block[0] >= 0.5)
+            elif spec.kind == "integer":
+                v = spec.low + float(block[0]) * (spec.high - spec.low)
+                out[spec.name] = int(np.clip(round(v), spec.low, spec.high))
+            else:
+                out[spec.name] = spec.low + float(block[0]) * (spec.high - spec.low)
+        return out
+
+    # -- encoding: dict of raw values -> relaxed vector --------------------
+    def encode(self, cfg: dict) -> np.ndarray:
+        x = np.zeros(self.dim, dtype=np.float64)
+        for spec, off in zip(self.specs, self._offsets):
+            v = cfg[spec.name]
+            if spec.kind == "categorical":
+                x[off + spec.choices.index(v)] = 1.0
+            elif spec.kind == "boolean":
+                x[off] = 1.0 if v else 0.0
+            else:
+                x[off] = (float(v) - spec.low) / (spec.high - spec.low)
+        return x
+
+    def decode_soft(self, x: Array) -> dict:
+        """Differentiable decode: continuous/integer knobs return their
+        de-normalized (unrounded) value; boolean returns the raw [0,1]
+        relaxation; categorical returns the one-hot block *normalized to a
+        convex combination* (soft weights summing to 1).  Normalization is
+        essential: with raw blocks, gradient descent saturates every dummy
+        variable to 1 (inflating any block-weighted quantity) and the
+        paper's "highest dummy variable" argmax ties arbitrarily.
+        Ground-truth/analytic objective models consume this so MOGD can
+        differentiate through knob semantics (paper §4.2 relaxation)."""
+        out = {}
+        for spec, off in zip(self.specs, self._offsets):
+            block = x[..., off : off + spec.width]
+            if spec.kind == "categorical":
+                out[spec.name] = block / (
+                    jnp.sum(block, axis=-1, keepdims=True) + 1e-9
+                )
+            elif spec.kind in ("boolean",):
+                out[spec.name] = block[..., 0]
+            else:
+                out[spec.name] = spec.low + block[..., 0] * (spec.high - spec.low)
+        return out
+
+    def snap(self, x: Array) -> Array:
+        """Project a relaxed point onto the feasible (rounded) manifold,
+        staying inside [0,1]^D.  JAX-traceable; used to report *realizable*
+        objective values for integer/categorical knobs (paper §4.2: "round
+        the solution returned for a normalized integer variable")."""
+        parts = []
+        for spec, off in zip(self.specs, self._offsets):
+            block = x[..., off : off + spec.width]
+            if spec.kind == "categorical":
+                hard = jax.nn.one_hot(jnp.argmax(block, axis=-1), spec.width,
+                                      dtype=block.dtype)
+                parts.append(hard)
+            elif spec.kind == "boolean":
+                parts.append(jnp.round(block))
+            elif spec.kind == "integer":
+                n = spec.high - spec.low
+                parts.append(jnp.round(block * n) / jnp.maximum(n, 1.0))
+            else:
+                parts.append(block)
+        return jnp.concatenate(parts, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MOO problem
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MOOProblem:
+    """k-objective minimization problem over an encoded [0,1]^D box.
+
+    ``objectives`` maps an encoded point ``x: (D,)`` to ``(k,)`` objective
+    values (all to be minimized; flip signs upstream for maximization, per
+    paper §3.1).  ``objective_stds`` optionally returns predictive standard
+    deviations of the same shape for uncertainty-aware solving
+    (``F̃ = E[F] + α·std[F]``, paper §4.2.3).
+    """
+
+    specs: Sequence[VariableSpec]
+    objectives: Callable[[Array], Array]
+    k: int
+    names: tuple = ()
+    objective_stds: Callable[[Array], Array] | None = None
+    # Optional user value constraints per objective (paper: [F_i^L, F_i^U]).
+    value_constraints: np.ndarray | None = None  # (k, 2) or None
+
+    def __post_init__(self):
+        self.encoder = SpaceEncoder(self.specs)
+        if not self.names:
+            self.names = tuple(f"F{i+1}" for i in range(self.k))
+        self._batch_fn = jax.jit(jax.vmap(self.objectives))
+
+    @property
+    def dim(self) -> int:
+        return self.encoder.dim
+
+    def effective_objectives(self, alpha: float = 0.0) -> Callable[[Array], Array]:
+        """Mean + alpha * std objective vector function (paper Eq. for F̃)."""
+        if alpha == 0.0 or self.objective_stds is None:
+            return self.objectives
+        mean_fn, std_fn = self.objectives, self.objective_stds
+
+        def fn(x: Array) -> Array:
+            return mean_fn(x) + alpha * std_fn(x)
+
+        return fn
+
+    def evaluate_batch(self, X: Array) -> Array:
+        """(N, D) -> (N, k) objective values."""
+        return self._batch_fn(X)
+
+    def decode_batch(self, X: Array) -> list[dict]:
+        X = np.asarray(X)
+        return [self.encoder.decode(x) for x in X]
+
+    def sample(self, key: Array, n: int) -> Array:
+        """Uniform random encoded points (multi-start seeds, Evo init)."""
+        return jax.random.uniform(key, (n, self.dim))
+
+    def solver_for(self, mogd_config):
+        """Per-problem MOGD solver cache: PF, WS and NC all reuse the same
+        compiled solver (the recurring-job amortization the paper assumes —
+        one compile per problem, thousands of CO probes)."""
+        if not hasattr(self, "_solver_cache"):
+            self._solver_cache = {}
+        if mogd_config not in self._solver_cache:
+            from .mogd import MOGDSolver
+
+            self._solver_cache[mogd_config] = MOGDSolver(self, mogd_config)
+        return self._solver_cache[mogd_config]

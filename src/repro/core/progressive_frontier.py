@@ -1,0 +1,246 @@
+"""Progressive Frontier algorithms — paper §3.3 + §4 (Algorithm 1, §4.3).
+
+Three variants share one incremental engine:
+
+* **PF-S**  — deterministic sequential: middle-point probes solved by the
+  dense reference solver (Knitro stand-in).  Slow, used as ground truth.
+* **PF-AS** — approximate sequential: probes solved by MOGD (§4.2).
+* **PF-AP** — approximate parallel: the popped hyperrectangle is split into
+  an ``l^k`` grid and *all* cells' CO problems are solved simultaneously
+  in one vmap-batched MOGD call (the paper's thread pool becomes a SIMD
+  batch — DESIGN.md §2).
+
+All variants are *incremental* (state carries the rectangle queue, so more
+probes extend the same frontier) and *uncertainty-aware* (the queue is
+prioritized by uncertain-space volume; the live uncertain fraction per
+Def. 3.7 is traced after every probe, which is the y-axis of Fig. 4(a)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from . import pareto
+from .hyperrectangle import (
+    Rectangle,
+    RectangleQueue,
+    compute_bounds,
+    grid_cells,
+    make_rectangle,
+    split_rectangle,
+)
+from .mogd import COResult, MOGDConfig, MOGDSolver, estimate_objective_bounds, grid_reference_solve
+from .problem import MOOProblem
+
+
+@dataclasses.dataclass
+class PFState:
+    """Resumable solver state (the paper's incrementality requirement)."""
+
+    queue: RectangleQueue
+    points_f: list  # objective-space Pareto candidates, each (k,)
+    points_x: list  # encoded configurations, each (D,)
+    utopia: np.ndarray
+    nadir: np.ndarray
+    bounds: np.ndarray  # (2, k) global objective bounds used for probes
+    probes: int = 0
+    elapsed: float = 0.0
+    trace: list = dataclasses.field(default_factory=list)  # (t, unc, npts)
+
+    def record(self) -> None:
+        self.trace.append(
+            (self.elapsed, self.queue.uncertain_fraction, len(self.points_f))
+        )
+
+
+@dataclasses.dataclass
+class PFResult:
+    F: np.ndarray  # (N, k) Pareto-filtered objective values
+    X: np.ndarray  # (N, D) encoded configurations
+    utopia: np.ndarray
+    nadir: np.ndarray
+    trace: list
+    probes: int
+    elapsed: float
+    state: PFState  # resume handle
+
+
+class ProgressiveFrontier:
+    def __init__(
+        self,
+        problem: MOOProblem,
+        mode: str = "AP",
+        mogd: MOGDConfig = MOGDConfig(),
+        grid_l: int = 2,
+        target: int = 0,
+    ):
+        if mode not in ("S", "AS", "AP"):
+            raise ValueError(f"unknown PF mode {mode!r}")
+        self.problem = problem
+        self.mode = mode
+        self.grid_l = grid_l
+        self.target = target
+        self.solver = problem.solver_for(mogd)
+        self._k = problem.k
+
+    # ------------------------------------------------------------------
+    def _probe(self, boxes: np.ndarray) -> COResult:
+        """Solve a batch of CO problems (one per box, (B,2,k))."""
+        if self.mode == "S":
+            rs = [
+                grid_reference_solve(self.problem, b, target=self.target)
+                for b in boxes
+            ]
+            return COResult(
+                np.concatenate([r.x for r in rs]),
+                np.concatenate([r.f for r in rs]),
+                np.concatenate([r.feasible for r in rs]),
+            )
+        return self.solver.solve(boxes, target=self.target)
+
+    # ------------------------------------------------------------------
+    def initialize(self) -> PFState:
+        """Init phase of Alg. 1: k single-objective solves -> reference
+        points -> global Utopia/Nadir -> first rectangle."""
+        t0 = time.perf_counter()
+        if self.problem.value_constraints is not None:
+            bounds = np.asarray(self.problem.value_constraints, dtype=np.float64).T
+            bounds = bounds.reshape(2, self._k)
+        else:
+            bounds = estimate_objective_bounds(self.problem)
+        refs, xs = [], []
+        for i in range(self._k):
+            r = (
+                grid_reference_solve(self.problem, bounds, target=i)
+                if self.mode == "S"
+                else self.solver.solve_single_objective(i, bounds)
+            )
+            refs.append(r.f[0])
+            xs.append(r.x[0])
+        refs = np.stack(refs)
+        utopia, nadir = compute_bounds(refs)
+        # Reference-point Nadirs can be degenerate in k>=3: every reference
+        # solve may drive some objective j to (near) its minimum (the MOGD
+        # tie-break explicitly encourages this), collapsing the initial
+        # hyperrectangle to a sliver along j and hiding most of the front.
+        # Widen any axis whose ref-span is <1% of the sampled global span up
+        # to the sampled upper bound (safe: overestimating Nadir only adds
+        # uncertain space, never loses Pareto points — Prop. 3.2).
+        global_span = np.maximum(bounds[1] - bounds[0], 1e-12)
+        degenerate = (nadir - utopia) < 0.01 * global_span
+        nadir = np.where(degenerate, np.maximum(bounds[1], utopia + 1e-9), nadir)
+        span = np.maximum(nadir - utopia, 1e-9)
+        nadir = utopia + span
+        state = PFState(
+            queue=RectangleQueue(make_rectangle(utopia, nadir)),
+            points_f=[refs[i] for i in range(self._k)],
+            points_x=[xs[i] for i in range(self._k)],
+            utopia=utopia,
+            nadir=nadir,
+            bounds=bounds,
+            probes=self._k,
+        )
+        state.elapsed = time.perf_counter() - t0
+        state.record()
+        return state
+
+    # ------------------------------------------------------------------
+    def _step_sequential(self, state: PFState) -> None:
+        """One middle-point probe (PF-S / PF-AS; Alg. 1 lines 9-23)."""
+        rect = state.queue.pop()
+        u, n = rect.utopia, rect.nadir
+        mid = (u + n) / 2.0
+        box = np.stack([u, mid])  # probe the lower half-box (Def. 3.6)
+        res = self._probe(box[None])
+        state.probes += 1
+        if bool(res.feasible[0]):
+            fm = np.clip(res.f[0], u, n)
+            state.points_f.append(fm)
+            state.points_x.append(res.x[0])
+            for sub in split_rectangle(u, fm, n):
+                state.queue.push(sub)
+        else:
+            # Prop. 3.4: no Pareto point in the probed half-box; the rest of
+            # the rectangle stays uncertain (all mid-split blocks except the
+            # all-lower corner).
+            for sub in split_rectangle(u, mid, n):
+                state.queue.push(sub)
+            upper = make_rectangle(mid, n)
+            state.queue.push(upper)
+
+    def _step_parallel(self, state: PFState) -> None:
+        """One PF-AP iteration (§4.3): grid the popped rectangle, solve all
+        cell CO problems in a single batched MOGD call."""
+        rect = state.queue.pop()
+        cells = grid_cells(rect.utopia, rect.nadir, self.grid_l)
+        boxes = np.stack([np.stack([c.utopia, c.nadir]) for c in cells])
+        res = self._probe(boxes)
+        state.probes += len(cells)
+        for c, ok, f, x in zip(cells, res.feasible, res.f, res.x):
+            if not bool(ok):
+                continue  # cell has no Pareto candidate -> omitted (§4.3)
+            fm = np.clip(f, c.utopia, c.nadir)
+            state.points_f.append(fm)
+            state.points_x.append(x)
+            for sub in split_rectangle(c.utopia, fm, c.nadir):
+                state.queue.push(sub)
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        n_probes: int = 32,
+        state: PFState | None = None,
+        deadline_s: float | None = None,
+    ) -> PFResult:
+        """Run (or resume) until ``n_probes`` additional probes, an empty
+        queue, or the wall-clock deadline."""
+        if state is None:
+            state = self.initialize()
+        t0 = time.perf_counter() - state.elapsed
+        budget = state.probes + n_probes
+        while state.probes < budget and len(state.queue):
+            if deadline_s is not None and time.perf_counter() - t0 > deadline_s:
+                break
+            if self.mode == "AP":
+                self._step_parallel(state)
+            else:
+                self._step_sequential(state)
+            state.elapsed = time.perf_counter() - t0
+            state.record()
+        return self.finalize(state)
+
+    def finalize(self, state: PFState) -> PFResult:
+        """Alg. 1 line 25: filter dominated candidates (needed in k>2)."""
+        F = np.stack(state.points_f)
+        X = np.stack(state.points_x)
+        # Dedupe near-identical points before the O(N^2) filter.
+        _, uniq = np.unique(np.round(F, 9), axis=0, return_index=True)
+        F, X = F[np.sort(uniq)], X[np.sort(uniq)]
+        mask = np.asarray(pareto.pareto_mask(F))
+        return PFResult(
+            F=F[mask],
+            X=X[mask],
+            utopia=state.utopia,
+            nadir=state.nadir,
+            trace=list(state.trace),
+            probes=state.probes,
+            elapsed=state.elapsed,
+            state=state,
+        )
+
+
+def solve_pf(
+    problem: MOOProblem,
+    mode: str = "AP",
+    n_probes: int = 32,
+    mogd: MOGDConfig = MOGDConfig(),
+    grid_l: int = 2,
+    deadline_s: float | None = None,
+) -> PFResult:
+    """One-call convenience wrapper."""
+    pf = ProgressiveFrontier(problem, mode=mode, mogd=mogd, grid_l=grid_l)
+    return pf.run(n_probes=n_probes, deadline_s=deadline_s)

@@ -1,0 +1,20 @@
+"""Data pipeline: synthetic workload families + trace generation for the
+modeling engine, and dry-run trace harvesting for the TPU planner."""
+
+from .harvest import harvest, harvest_all
+from .workloads import (
+    BatchWorkload,
+    StreamingWorkload,
+    batch_cost,
+    batch_latency,
+    batch_problem,
+    batch_suite,
+    default_config,
+    generate_traces,
+    spark_space,
+    streaming_metrics,
+    streaming_problem,
+    streaming_suite,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

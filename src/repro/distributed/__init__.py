@@ -1,0 +1,25 @@
+"""Distribution layer: logical sharding rules with divisibility fallbacks,
+activation constraints, and collective helpers (compressed all-reduce).
+
+The model substrate (``repro.nn``) annotates parameters with *logical axis
+names*; this package maps them onto physical mesh axes per a
+:class:`ShardingRules` table, with automatic fallbacks when a dimension is
+not divisible by the mesh axis (e.g. 8 kv-heads on a 16-wide model axis).
+"""
+
+from .sharding import (
+    LOGICAL_DEFAULTS,
+    ShardingRules,
+    axis_size,
+    constrain,
+    logical_spec,
+    named_sharding_tree,
+    spec_tree,
+)
+from .collectives import (
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot spots (validated with
+``interpret=True`` on CPU against the pure-jnp oracles in ``ref.py``).
+
+    mogd_mlp        fused surrogate-MLP batch forward (the MOGD hot loop)
+    pareto_filter   blocked O(n^2) Pareto domination count
+    flash_attention causal GQA flash attention (train/prefill)
+    rwkv6_wkv       RWKV-6 WKV recurrence, state resident in VMEM
+    mamba_scan      S6 selective scan, state resident in VMEM
+
+Model code defaults to the einsum path (CPU-compilable); kernels are the
+TPU-target layer selected via the ``ops.py`` wrappers.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

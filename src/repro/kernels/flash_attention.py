@@ -1,0 +1,99 @@
+"""Causal flash attention as a Pallas TPU kernel.
+
+Grid (B*H, n_q, n_kv): the kv axis is innermost (sequential on TPU), with
+the running (max, denom, accumulator) in VMEM scratch — the classic
+flash-attention recurrence; O(S^2) HBM traffic becomes O(S^2 / Bq) reads
+of K/V tiles with no materialized score matrix.  Blocks are 128-aligned
+for the MXU; dtypes accumulate in fp32.
+
+Causal blocks above the diagonal are skipped with ``pl.when`` (their K/V
+tiles are still fetched by the pipeline — acceptable; the compute skip is
+what matters at 32k).  GQA is handled in the ops wrapper by repeating KV
+heads (the repeat is free inside the kernel's tile reads on real TPU via
+the index map; the plain repeat keeps interpret-mode simple).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, n_kv: int, causal: bool, bq: int, bk: int):
+    iq = pl.program_id(1)
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # last kv block with any causally-visible column for this q block
+    last_visible = (iq * bq + bq - 1) // bk if causal else n_kv - 1
+    visible = (ikv <= last_visible) if causal else True
+
+    @pl.when(visible)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)       # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)       # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = ikv * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ikv == last_visible)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_bhsd(q, k, v, causal: bool = True,
+                         bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                         interpret: bool = True):
+    """q/k/v: (BH, S, dh) with matching head counts. Returns (BH, S, dh)."""
+    BH, S, dh = q.shape
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_q, n_kv = S // bq, S // bk
+    scale = dh ** -0.5
+    kern = functools.partial(_kernel, scale=scale, n_kv=n_kv, causal=causal,
+                             bq=bq, bk=bk)
+    import jax.experimental.pallas.tpu as pltpu
+
+    return pl.pallas_call(
+        kern,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

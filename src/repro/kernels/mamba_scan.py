@@ -1,0 +1,74 @@
+"""Mamba/S6 selective scan with the hidden state resident in VMEM.
+
+Grid (B, n_d, n_chunks): the chunk axis is sequential, carrying the
+(BD, n) fp32 state in VMEM scratch across the sequence; the d_inner axis
+is tiled (BD = 512 lanes) so Jamba's d_inner = 8192 streams through as 16
+independent grid rows.  HBM traffic per token drops from
+O(d_inner * d_state) state round trips to just the dt/x tiles (+ the small
+shared B_t/C_t rows).
+
+In-chunk recurrence is a ``fori_loop`` over tokens of elementwise
+VPU work: h = exp(dt*A)*h + (dt*x) B_t;  y = h . C_t.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 128
+BLOCK_D = 512
+
+
+def _kernel(dt_ref, bt_ref, ct_ref, x_ref, a_ref, y_ref, h_ref, *,
+            chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...]  # (BD, n)
+
+    def step(t, h):
+        dt = dt_ref[0, t]          # (BD,)
+        xt = x_ref[0, t]           # (BD,)
+        bt = bt_ref[0, t]          # (n,)
+        ct = ct_ref[0, t]          # (n,)
+        dA = jnp.exp(dt[:, None] * A)
+        h = dA * h + (dt * xt)[:, None] * bt[None, :]
+        y_ref[0, t] = jnp.sum(h * ct[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def selective_scan(dt, Bt, Ct, xs, A, chunk: int = CHUNK,
+                   block_d: int = BLOCK_D, interpret: bool = True):
+    """dt/xs: (B, T, d); Bt/Ct: (B, T, n); A: (d, n). Returns y (B, T, d)."""
+    B, T, d = xs.shape
+    n = A.shape[1]
+    block_d = min(block_d, d)
+    assert T % chunk == 0 and d % block_d == 0, (T, chunk, d, block_d)
+    import jax.experimental.pallas.tpu as pltpu
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, d // block_d, T // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),
+            pl.BlockSpec((1, chunk, n), lambda b, i, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, i, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),
+            pl.BlockSpec((block_d, n), lambda b, i, c: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),
+        out_shape=jax.ShapeDtypeStruct((B, T, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, Bt, Ct, xs, A)

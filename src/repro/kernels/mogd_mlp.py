@@ -1,0 +1,70 @@
+"""Fused surrogate-MLP forward — the MOGD hot loop as one Pallas kernel.
+
+PF-AP batches (grid cells x multi-starts x GD steps) surrogate evaluations;
+each is a small MLP (paper: 4 hidden layers x 128).  The jnp path launches
+one matmul per layer per step, round-tripping the (B, 128) activations
+through HBM; this kernel keeps *all* weights and the running activation in
+VMEM and emits one fused pass over the whole network, tiled over the batch.
+
+Weights for the paper's model are tiny (4 x 128 x 128 fp32 ~ 262 KB), far
+under the ~16 MB VMEM budget; batch tiles of 256 rows keep the activation
+footprint at 256 x 128 x 4 = 131 KB.  Hidden width is padded to the 128
+lane width — MXU-aligned by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 256
+
+
+def _kernel(x_ref, *refs):
+    """refs = (w0, b0, w1, b1, ..., out). All VMEM-resident."""
+    out_ref = refs[-1]
+    wbs = refs[:-1]
+    h = x_ref[...]
+    n_layers = len(wbs) // 2
+    for i in range(n_layers):
+        w, b = wbs[2 * i][...], wbs[2 * i + 1][...]
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b[None, :]
+        if i < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    out_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlp_forward_fused(x, ws, bs, interpret: bool = True):
+    """x: (B, D_in); ws/bs: lists of weight/bias arrays (fp32).
+
+    Returns (B, D_out). Batch is tiled over a 1-D grid; each grid step
+    loads one (BLOCK_B, D_in) tile and runs the whole network in VMEM.
+    """
+    B, D_in = x.shape
+    D_out = ws[-1].shape[1]
+    pad = (-B) % BLOCK_B
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Bp = x.shape[0]
+    grid = (Bp // BLOCK_B,)
+
+    in_specs = [pl.BlockSpec((BLOCK_B, D_in), lambda i: (i, 0))]
+    args = [x]
+    for w, b in zip(ws, bs):
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+        args.extend([w, b])
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((BLOCK_B, D_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, D_out), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out[:B]

@@ -1,0 +1,66 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These adapt model-layout tensors to kernel layouts (GQA head repeat,
+(B, H) folding, per-head broadcast) and expose an ``interpret`` flag —
+True on this CPU container (Pallas interpret mode), False on real TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .mamba_scan import selective_scan
+from .mogd_mlp import mlp_forward_fused
+from .pareto_filter import pareto_counts_blocked
+from .rwkv6_wkv import wkv_chunked
+
+
+def mlp_forward(x, ws, bs, interpret: bool = True):
+    """Fused surrogate-MLP forward; drop-in for ref.mlp_forward."""
+    return mlp_forward_fused(x, tuple(ws), tuple(bs), interpret=interpret)
+
+
+def pareto_mask(F, interpret: bool = True):
+    """(N, k) -> (N,) bool Pareto mask via the blocked domination kernel."""
+    return pareto_counts_blocked(
+        jnp.asarray(F, jnp.float32), interpret=interpret) == 0
+
+
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q: (B, S, H, dh); k/v: (B, S, Hk, dh) — GQA repeat + fold + unfold."""
+    B, S, H, dh = q.shape
+    Hk = k.shape[2]
+    if Hk != H:
+        rep = H // Hk
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    o = flash_attention_bhsd(fold(q), fold(k), fold(v), causal=causal,
+                             bq=min(bq, S), bk=min(bk, S),
+                             interpret=interpret)
+    return o.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+
+
+def rwkv_wkv(r, k, v, w, u, chunk: int = 128, interpret: bool = True):
+    """r/k/v/w: (B, T, H, dh); u: (H, dh). Returns y (B, T, H, dh)."""
+    B, T, H, dh = r.shape
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+    uu = jnp.broadcast_to(u[None], (B, H, dh)).reshape(B * H, dh)
+    y = wkv_chunked(fold(r).astype(jnp.float32), fold(k).astype(jnp.float32),
+                    fold(v).astype(jnp.float32), fold(w).astype(jnp.float32),
+                    uu.astype(jnp.float32), chunk=min(chunk, T),
+                    interpret=interpret)
+    return y.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+
+
+def mamba_selective_scan(dt, Bt, Ct, xs, A, chunk: int = 128,
+                         block_d: int = 512, interpret: bool = True):
+    """Layouts as in ref.mamba_scan. Returns y (B, T, d)."""
+    return selective_scan(
+        dt.astype(jnp.float32), Bt.astype(jnp.float32),
+        Ct.astype(jnp.float32), xs.astype(jnp.float32),
+        A.astype(jnp.float32), chunk=min(chunk, dt.shape[1]),
+        block_d=block_d, interpret=interpret)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_forward(x, ws, bs):
+    """x: (B, D); ws: list of (Din, Dout); bs: list of (Dout,). ReLU MLP
+    with linear head (the paper's 4x128 latency model)."""
+    h = x
+    for w, b in zip(ws[:-1], bs[:-1]):
+        h = jax.nn.relu(h @ w + b)
+    return h @ ws[-1] + bs[-1]
+
+
+def pareto_counts(F):
+    """F: (N, k) minimization points -> (N,) number of dominators."""
+    le = jnp.all(F[:, None, :] <= F[None, :, :], axis=-1)
+    lt = jnp.any(F[:, None, :] < F[None, :, :], axis=-1)
+    dom = le & lt  # dom[i, j] = i dominates j
+    return dom.sum(axis=0).astype(jnp.int32)
+
+
+def flash_attention(q, k, v, causal=True):
+    """q/k/v: (B, S, H, dh) with H == Hk (repeat GQA upstream)."""
+    B, S, H, dh = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s * (dh ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def rwkv6_wkv(r, k, v, w, u, S0=None):
+    """r/k/v/w: (B, T, H, dh) fp32; u: (H, dh). Returns (y, S_final).
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} +
+    k_t v_t^T, with S (B, H, dh, dh)."""
+    B, T, H, dh = r.shape
+    S = jnp.zeros((B, H, dh, dh), jnp.float32) if S0 is None else S0
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1), (r, k, v, w))
+    S, ys = jax.lax.scan(step, S, xs)
+    return ys.swapaxes(0, 1), S
+
+
+def mamba_scan(dt, Bt, Ct, xs, A, h0=None):
+    """dt/xs: (B, T, d); Bt/Ct: (B, T, n); A: (d, n). Returns (y, h_fin)."""
+    B, T, d = xs.shape
+    n = A.shape[1]
+    h = jnp.zeros((B, d, n), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        dtt, btt, ctt, xtt = inp
+        dA = jnp.exp(dtt[..., None] * A[None])
+        h = dA * h + (dtt * xtt)[..., None] * btt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ctt)
+        return h, y
+
+    xs_t = jax.tree.map(lambda a: a.swapaxes(0, 1), (dt, Bt, Ct, xs))
+    h, ys = jax.lax.scan(step, h, xs_t)
+    return ys.swapaxes(0, 1), h

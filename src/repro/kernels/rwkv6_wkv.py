@@ -1,0 +1,73 @@
+"""RWKV-6 WKV recurrence with the state resident in VMEM.
+
+The jnp path scans over time with the (B, H, dh, dh) state carried through
+HBM — 2 state-sized HBM round trips per token (the memory-roofline
+pathology quantified by ``ssm_scan_correction``).  This kernel iterates a
+(B*H, n_chunks) grid (chunk axis sequential), keeping S as a (dh, dh)
+fp32 VMEM scratch across the whole sequence: HBM traffic drops to the
+r/k/v/w tiles themselves — O(T * dh) instead of O(T * dh^2).
+
+dh = 64 (RWKV-6 head size): S is 16 KB; chunk tiles of 128 x 64 keep the
+working set trivially inside VMEM.  The in-chunk recurrence is a
+``fori_loop`` of rank-1 updates (VPU work; no MXU use — the op is
+bandwidth-, not compute-bound, which is exactly why VMEM residency wins).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 128
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, S_ref, *, chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        S_ref[...] = jnp.zeros_like(S_ref)
+
+    u = u_ref[0]  # (dh,)
+
+    def step(t, S):
+        rt = r_ref[0, t]
+        kt = k_ref[0, t]
+        vt = v_ref[0, t]
+        wt = w_ref[0, t]
+        kv = kt[:, None] * vt[None, :]
+        y = jnp.sum(rt[:, None] * (S + u[:, None] * kv), axis=0)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return wt[:, None] * S + kv
+
+    S_ref[...] = jax.lax.fori_loop(0, chunk, step, S_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked(r, k, v, w, u, chunk: int = CHUNK, interpret: bool = True):
+    """r/k/v/w: (BH, T, dh) fp32; u: (BH, dh). Returns y (BH, T, dh).
+
+    (The ops wrapper folds (B, H) and broadcasts the per-head u.)"""
+    BH, T, dh = r.shape
+    assert T % chunk == 0, (T, chunk)
+    import jax.experimental.pallas.tpu as pltpu
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, T // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dh), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,2 @@
+"""Launch layer: production mesh construction, the 512-device multi-pod
+dry-run, roofline-term extraction, and the train/serve CLIs."""

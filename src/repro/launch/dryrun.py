@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production mesh with 512 placeholder host devices, and record
+memory analysis, cost analysis, and the collective schedule for the
+roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).  Do NOT replicate them in conftest.py — tests and
+benches see 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    python -m repro.launch.dryrun --all                # 32 cells, 1 pod
+    python -m repro.launch.dryrun --all --multi-pod    # 32 cells, 2 pods
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    SHAPES,
+    all_cells,
+    get_config,
+    input_specs,
+    runnable,
+)
+from repro.distributed import named_sharding_tree, spec_tree, logical_spec
+from repro.launch.mesh import make_production_mesh
+from repro.launch.plans import Plan, apply_plan, baseline_plan, rules_for
+from repro.launch.roofline import (
+    CollectiveStats,
+    model_flops_for,
+    parse_collectives,
+    roofline_terms,
+    ssm_scan_correction,
+)
+from repro.nn import abstract_params
+from repro.nn.blocks import blocks_cache_init
+from repro.nn.layers import split_tree
+from repro.serving.steps import make_decode_step, make_prefill_step
+from repro.training import (
+    AdamConfig,
+    TrainStepConfig,
+    abstract_opt_state,
+    make_train_step,
+)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               plan: Plan | None = None, mesh=None,
+               n_layers: int | None = None):
+    """Lower + compile one cell. Returns (lowered, compiled, meta).
+
+    ``n_layers`` overrides depth for the scan-extrapolation probes: XLA's
+    cost analysis counts a scanned layer body once, so per-layer costs are
+    measured by lowering 1- and 2-scan-unit variants and extrapolating
+    (see run_cell).
+    """
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not runnable(cfg0, shape):
+        raise ValueError(f"{arch} x {shape_name} is a skipped cell "
+                         "(full attention at 500k)")
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    plan = plan or baseline_plan(cfg0, shape)
+    cfg = apply_plan(cfg0, plan)
+    if n_layers is not None:
+        # probe variant: unrolled so XLA cost analysis sees every layer
+        # (scanned bodies are counted once regardless of trip count)
+        cfg = cfg.replace(n_layers=n_layers, scan_layers=False)
+    rules = rules_for(cfg, shape, mesh, plan)
+
+    params, p_axes = abstract_params(cfg)
+    p_sh = named_sharding_tree(rules, params, p_axes)
+    specs = input_specs(cfg, shape)
+    batch_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_spec(
+            rules, ("batch",) + (None,) * (len(s.shape) - 1), s.shape)),
+        specs["batch"])
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        adam = AdamConfig(state_dtype=plan.state_dtype)
+        step = make_train_step(
+            cfg, TrainStepConfig(adam=adam, microbatches=plan.microbatches,
+                                 grad_reduce_dtype=plan.grad_reduce_dtype),
+            rules, param_axes=p_axes)
+        opt = abstract_opt_state(params, adam)
+        opt_sh = {"mu": p_sh, "nu": p_sh, "count": repl}
+        jf = jax.jit(step, in_shardings=(p_sh, opt_sh, batch_sh),
+                     out_shardings=(p_sh, opt_sh, repl))
+        args = (params, opt, specs["batch"])
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, rules, max_seq=shape.seq_len)
+        cache_pv = blocks_cache_init(cfg, shape.global_batch, shape.seq_len,
+                                     abstract=True)
+        cache, c_axes = split_tree(cache_pv)
+        c_sh = named_sharding_tree(rules, cache, c_axes)
+        lg_sh = NamedSharding(mesh, logical_spec(
+            rules, ("batch", "vocab"), (shape.global_batch, cfg.vocab)))
+        jf = jax.jit(step, in_shardings=(p_sh, batch_sh),
+                     out_shardings=(lg_sh, c_sh))
+        args = (params, specs["batch"])
+    else:  # decode
+        step = make_decode_step(cfg, rules)
+        cache = specs["cache"]
+        cache_pv = blocks_cache_init(cfg, shape.global_batch, shape.seq_len,
+                                     abstract=True)
+        _, c_axes = split_tree(cache_pv)
+        c_sh = named_sharding_tree(rules, cache, c_axes)
+        lg_sh = NamedSharding(mesh, logical_spec(
+            rules, ("batch", "vocab"), (shape.global_batch, cfg.vocab)))
+        jf = jax.jit(step, in_shardings=(p_sh, c_sh, batch_sh, repl),
+                     out_shardings=(lg_sh, c_sh))
+        args = (params, cache, specs["batch"], specs["pos"])
+
+    t0 = time.perf_counter()
+    lowered = jf.lower(*args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(np.prod(list(mesh.shape.values()))),
+        "plan": vars(plan) if not hasattr(plan, "__dataclass_fields__")
+        else {f: getattr(plan, f) for f in plan.__dataclass_fields__},
+        "lower_s": t1 - t0, "compile_s": t2 - t1,
+    }
+    return cfg, shape, lowered, compiled, meta
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes":
+                int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        }
+        mem_d["total_bytes_per_device"] = (
+            mem_d["argument_bytes"] + mem_d["output_bytes"]
+            + mem_d["temp_bytes"] - mem_d["alias_bytes"])
+        return mem_d
+    except Exception as e:  # pragma: no cover - backend-dependent
+        return {"error": repr(e)}
+
+
+def _cost_and_collectives(compiled, chips):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, default_group=chips)
+    return cost, coll, len(hlo)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             plan: Plan | None = None, mesh=None, tag: str = "") -> dict:
+    """Compile the full cell (pass/fail + memory), then two shallow probe
+    variants (1 and 2 scan units) whose per-layer cost difference
+    extrapolates the scanned-body undercount:
+
+        cost(L) = cost(1 unit) + (n_scan - 1) * [cost(2 units) - cost(1)]
+
+    plus the analytic SSM inner-scan correction (roofline.py)."""
+    from repro.nn.blocks import layer_plan, scan_length
+
+    cfg, shape, lowered, compiled, meta = lower_cell(
+        arch, shape_name, multi_pod, plan, mesh)
+    mem_d = _memory_dict(compiled)
+    cost_full, coll_full, hlo_bytes = _cost_and_collectives(
+        compiled, meta["chips"])
+
+    period = len(layer_plan(cfg))
+    n_scan = scan_length(cfg)
+    probes = []
+    for units in (1, 2):
+        _, _, _, c_p, m_p = lower_cell(arch, shape_name, multi_pod, plan,
+                                       mesh, n_layers=units * period)
+        cost_p, coll_p, _ = _cost_and_collectives(c_p, m_p["chips"])
+        probes.append((cost_p, coll_p, m_p))
+    (c1, l1, m1), (c2, l2, m2) = probes
+
+    def extrap(a, b):
+        return a + (n_scan - 1) * (b - a)
+
+    chips = meta["chips"]
+    flops = extrap(float(c1.get("flops", 0)), float(c2.get("flops", 0)))
+    nbytes = extrap(float(c1.get("bytes accessed", 0)),
+                    float(c2.get("bytes accessed", 0)))
+    wire = extrap(l1.wire_bytes, l2.wire_bytes)
+    xf, xb = ssm_scan_correction(cfg, shape, dict(mesh.shape) if mesh
+                                 else {"data": 16, "model": 16,
+                                       "pod": 2 if multi_pod else 1})
+    cost = {"flops": flops + xf, "bytes accessed": nbytes + xb}
+    coll = CollectiveStats(
+        wire_bytes=wire,
+        payload_bytes=extrap(l1.payload_bytes, l2.payload_bytes),
+        counts=l2.counts,
+        by_kind_bytes={k: extrap(l1.by_kind_bytes.get(k, 0.0), v)
+                       for k, v in l2.by_kind_bytes.items()},
+    )
+    rf = roofline_terms(cost, coll, chips,
+                        model_flops=model_flops_for(cfg, shape))
+    rec = {
+        **meta,
+        "memory": mem_d,
+        "cost": {"flops": flops + xf, "bytes_accessed": nbytes + xb,
+                 "ssm_correction_flops": xf, "ssm_correction_bytes": xb,
+                 "raw_full_flops": float(cost_full.get("flops", 0)),
+                 "probe_compile_s": m1["compile_s"] + m2["compile_s"]},
+        "collectives": {
+            "wire_bytes_per_chip": coll.wire_bytes,
+            "payload_bytes": coll.payload_bytes,
+            "counts": coll.counts,
+            "by_kind_wire_bytes": coll.by_kind_bytes,
+            "raw_full_wire_bytes": coll_full.wire_bytes,
+        },
+        "roofline": rf.to_dict(),
+        "hlo_bytes": hlo_bytes,
+    }
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    suffix = f"__{tag}" if tag else ""
+    path = out / f"{arch}__{shape_name}__{mesh_tag}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    r = rec["roofline"]
+    print(f"[dryrun] {arch:18s} {shape_name:12s} {mesh_tag:8s} "
+          f"compile={rec['compile_s']:6.1f}s "
+          f"C={r['compute_s']:.3f}s M={r['memory_s']:.3f}s "
+          f"N={r['collective_s']:.3f}s -> {r['bottleneck']} "
+          f"useful={r['useful_ratio']:.2f}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch, shape_name in cells:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            path = pathlib.Path(
+                args.out) / f"{arch}__{shape_name}__{mesh_tag}.json"
+            if args.skip_existing and path.exists():
+                print(f"[dryrun] skip existing {path.name}")
+                continue
+            try:
+                run_cell(arch, shape_name, mp, args.out, mesh=mesh)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape_name, mp, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Decoupled modeling engine: DNN + GP surrogate regressors (paper §2.3).
+
+Training runs asynchronously from optimization; the MOO core only consumes
+frozen regression functions Ψ_i(x) (and optionally their predictive stds).
+"""
+
+from .mlp import MLPRegressor, MLPSpec, init_mlp, mc_dropout_stats, mlp_forward
+from .gp import GPRegressor, fit_gp, rbf_kernel
+from .train import PAPER_HPARAMS, TrainConfig, fit_mlp, regression_report
+
+__all__ = [
+    "MLPRegressor",
+    "MLPSpec",
+    "init_mlp",
+    "mlp_forward",
+    "mc_dropout_stats",
+    "GPRegressor",
+    "fit_gp",
+    "rbf_kernel",
+    "TrainConfig",
+    "fit_mlp",
+    "regression_report",
+    "PAPER_HPARAMS",
+]

@@ -1,0 +1,117 @@
+"""Exact Gaussian-Process surrogate (the OtterTune-style model, paper §2.2).
+
+RBF kernel with observation noise; exact inference via Cholesky.  The
+predictive mean/variance are differentiable JAX functions of the query
+point, which is all MOGD needs (paper: "our optimization solution works as
+long as the learned models can be represented as a regression function").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _sqdist(a: Array, b: Array) -> Array:
+    return (
+        jnp.sum(a * a, -1)[..., :, None]
+        + jnp.sum(b * b, -1)[..., None, :]
+        - 2.0 * a @ b.T
+    )
+
+
+def rbf_kernel(a: Array, b: Array, lengthscale: Array, variance: Array) -> Array:
+    return variance * jnp.exp(-0.5 * _sqdist(a / lengthscale, b / lengthscale))
+
+
+@dataclasses.dataclass
+class GPRegressor:
+    """Fitted exact GP.  Differentiable predict; predictive std for the
+    uncertainty-aware loss (F̃ = E[F] + α·std, §4.2.3)."""
+
+    x_train: Array  # (N, D) standardized
+    alpha: Array  # (N,) = K^{-1} (y - mean)
+    chol: Array  # (N, N) lower Cholesky of K + noise I
+    lengthscale: Array
+    variance: Array
+    x_mean: Array
+    x_std: Array
+    y_mean: Array
+    y_std: Array
+    log_target: bool = False
+
+    def __call__(self, x: Array) -> Array:
+        """x: (..., D) encoded -> (...,) predictive mean in original units."""
+        z = jnp.atleast_2d((x - self.x_mean) / self.x_std)
+        kx = rbf_kernel(z, self.x_train, self.lengthscale, self.variance)
+        mu = kx @ self.alpha
+        out = (mu * self.y_std + self.y_mean).reshape(x.shape[:-1])
+        return jnp.exp(out) if self.log_target else out
+
+    def predict_std(self, x: Array) -> Array:
+        z = jnp.atleast_2d((x - self.x_mean) / self.x_std)
+        kx = rbf_kernel(z, self.x_train, self.lengthscale, self.variance)
+        v = jax.scipy.linalg.solve_triangular(self.chol, kx.T, lower=True)
+        var = jnp.clip(self.variance - jnp.sum(v * v, axis=0), 1e-12, None)
+        std = (jnp.sqrt(var) * self.y_std).reshape(x.shape[:-1])
+        if self.log_target:
+            mu = (kx @ self.alpha * self.y_std + self.y_mean).reshape(
+                x.shape[:-1]
+            )
+            std = jnp.exp(mu) * std  # delta method
+        return std
+
+
+def fit_gp(
+    X: np.ndarray,
+    y: np.ndarray,
+    lengthscale: float | None = None,
+    variance: float = 1.0,
+    noise: float = 1e-2,
+    max_points: int = 2048,
+    seed: int = 0,
+    log_target: bool = False,
+) -> GPRegressor:
+    """Fit an exact GP (subsampled to ``max_points`` for O(N^3) sanity).
+
+    ``lengthscale=None`` uses the median heuristic.  Inputs are the encoded
+    configuration vectors; outputs one scalar objective.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64).reshape(-1)
+    if log_target:
+        y = np.log(np.maximum(y, 1e-12))
+    if len(X) > max_points:
+        idx = np.random.default_rng(seed).choice(len(X), max_points, replace=False)
+        X, y = X[idx], y[idx]
+    x_mean, x_std = X.mean(0), X.std(0) + 1e-9
+    y_mean, y_std = y.mean(), y.std() + 1e-9
+    Z = (X - x_mean) / x_std
+    t = (y - y_mean) / y_std
+    if lengthscale is None:
+        d2 = ((Z[:, None, :] - Z[None, :, :]) ** 2).sum(-1)
+        med = np.median(d2[d2 > 0]) if (d2 > 0).any() else 1.0
+        lengthscale = float(np.sqrt(med / 2.0) + 1e-9)
+    K = np.array(
+        rbf_kernel(jnp.asarray(Z), jnp.asarray(Z), lengthscale, variance)
+    )
+    K[np.diag_indices_from(K)] += noise
+    L = np.linalg.cholesky(K)
+    alpha = np.linalg.solve(L.T, np.linalg.solve(L, t))
+    return GPRegressor(
+        x_train=jnp.asarray(Z),
+        alpha=jnp.asarray(alpha),
+        chol=jnp.asarray(L),
+        lengthscale=jnp.asarray(lengthscale),
+        variance=jnp.asarray(variance),
+        x_mean=jnp.asarray(x_mean),
+        x_std=jnp.asarray(x_std),
+        y_mean=jnp.asarray(y_mean),
+        y_std=jnp.asarray(y_std),
+        log_target=log_target,
+    )

@@ -1,0 +1,112 @@
+"""DNN surrogate regressors (paper §6: "our custom DNN models").
+
+The paper's latency model after hyperparameter tuning: 4 hidden layers of
+128 units, ReLU activations, trained with Adam.  We reproduce that shape as
+the default.  Models are pure-JAX pytrees so MOGD can differentiate through
+them; the batched forward is the MOO hot loop and has a fused Pallas kernel
+(``repro.kernels.mogd_mlp``) for the TPU target.
+
+MC-dropout (Gal & Ghahramani, paper ref [15]) provides the predictive
+variance used by uncertainty-aware MOGD (§4.2.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    in_dim: int
+    hidden: tuple = (128, 128, 128, 128)  # paper's tuned shape
+    out_dim: int = 1
+    dropout: float = 0.0  # train-time dropout; also used for MC-dropout
+
+    @property
+    def layer_dims(self):
+        return (self.in_dim, *self.hidden, self.out_dim)
+
+
+def init_mlp(key: Array, spec: MLPSpec) -> list[dict]:
+    """He-init parameters as a list of {'w','b'} dicts."""
+    dims = spec.layer_dims
+    params = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (dims[i], dims[i + 1])) * jnp.sqrt(
+            2.0 / dims[i]
+        )
+        params.append({"w": w, "b": jnp.zeros(dims[i + 1])})
+    return params
+
+
+def mlp_forward(
+    params: Sequence[dict],
+    x: Array,
+    *,
+    dropout: float = 0.0,
+    key: Array | None = None,
+) -> Array:
+    """x: (..., in_dim) -> (..., out_dim).  ReLU hidden activations."""
+    h = x
+    n = len(params)
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+            if dropout > 0.0 and key is not None:
+                key, sub = jax.random.split(key)
+                keep = jax.random.bernoulli(sub, 1.0 - dropout, h.shape)
+                h = jnp.where(keep, h / (1.0 - dropout), 0.0)
+    return h
+
+
+def mc_dropout_stats(
+    params: Sequence[dict], x: Array, key: Array, *, dropout: float = 0.1,
+    n_samples: int = 16
+) -> tuple[Array, Array]:
+    """MC-dropout predictive mean and std at x (..., in_dim)."""
+    keys = jax.random.split(key, n_samples)
+    outs = jax.vmap(lambda k: mlp_forward(params, x, dropout=dropout, key=k))(keys)
+    return outs.mean(0), outs.std(0)
+
+
+@dataclasses.dataclass
+class MLPRegressor:
+    """Standardizing wrapper: stores feature/target moments with params so
+    the learned model is a plain function of the *encoded* config space."""
+
+    spec: MLPSpec
+    params: list
+    x_mean: Array
+    x_std: Array
+    y_mean: Array
+    y_std: Array
+    dropout: float = 0.1
+    log_target: bool = False  # model trained on log(y); invert on predict
+
+    def __call__(self, x: Array) -> Array:
+        """x: (..., in_dim) encoded -> (...,) prediction in original units."""
+        z = (x - self.x_mean) / self.x_std
+        y = (mlp_forward(self.params, z) * self.y_std + self.y_mean)[..., 0]
+        return jnp.exp(y) if self.log_target else y
+
+    def predict_std(self, x: Array, key: Array | None = None,
+                    n_samples: int = 16) -> Array:
+        key = jax.random.PRNGKey(0) if key is None else key
+        z = (x - self.x_mean) / self.x_std
+        mu, s = mc_dropout_stats(
+            self.params, z, key, dropout=self.dropout, n_samples=n_samples
+        )
+        std = (s * self.y_std)[..., 0]
+        if self.log_target:
+            # delta method: std of exp(y) ≈ exp(mu) * std(y)
+            mu = (mu * self.y_std + self.y_mean)[..., 0]
+            std = jnp.exp(mu) * std
+        return std

@@ -1,0 +1,150 @@
+"""Training loop for DNN surrogates — the decoupled "modeling engine"
+(paper §2.3: runs asynchronously in the background; MOO only consumes the
+frozen regressors).
+
+Implements Adam + weight decay + early stopping from scratch (only jax and
+numpy are available offline).  Paper hyperparameters (§6: lr=0.1, weight
+decay=0.1, max_iter=100, patience=20) are kept as named constants; defaults
+here are mildly saner for the synthetic traces but the paper's values are a
+constructor away.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .mlp import MLPRegressor, MLPSpec, init_mlp, mlp_forward
+
+Array = jax.Array
+
+PAPER_HPARAMS = dict(lr=0.1, weight_decay=0.1, max_epochs=100, patience=20)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-3
+    weight_decay: float = 1e-4
+    max_epochs: int = 200
+    patience: int = 20
+    batch_size: int = 256
+    val_frac: float = 0.15
+    dropout: float = 0.05
+    seed: int = 0
+
+
+def _adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def _adam_update(params, grads, opt, lr, wd, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1.0
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+
+    def upd(p, m_, v_):
+        mh = m_ / (1 - b1**t)
+        vh = v_ / (1 - b2**t)
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def fit_mlp(
+    X: np.ndarray,
+    y: np.ndarray,
+    hidden: tuple = (128, 128, 128, 128),
+    config: TrainConfig = TrainConfig(),
+    log_target: bool = False,
+) -> MLPRegressor:
+    """Fit a standardized MLP regressor on encoded configs -> one objective.
+
+    ``log_target=True`` trains on log(y) (latency/cost-style positive
+    targets spanning decades) and inverts at prediction time.
+    """
+    X = np.asarray(X, dtype=np.float32)
+    y = np.asarray(y, dtype=np.float32).reshape(-1, 1)
+    if log_target:
+        y = np.log(np.maximum(y, 1e-12))
+    n = len(X)
+    rng = np.random.default_rng(config.seed)
+    perm = rng.permutation(n)
+    n_val = max(1, int(n * config.val_frac))
+    val_idx, tr_idx = perm[:n_val], perm[n_val:]
+    x_mean, x_std = X[tr_idx].mean(0), X[tr_idx].std(0) + 1e-9
+    y_mean, y_std = y[tr_idx].mean(0), y[tr_idx].std(0) + 1e-9
+    Xt = (X - x_mean) / x_std
+    Yt = (y - y_mean) / y_std
+
+    spec = MLPSpec(in_dim=X.shape[1], hidden=hidden, out_dim=1,
+                   dropout=config.dropout)
+    key = jax.random.PRNGKey(config.seed)
+    key, init_key = jax.random.split(key)
+    params = init_mlp(init_key, spec)
+    opt = _adam_init(params)
+
+    @jax.jit
+    def train_step(params, opt, xb, yb, key):
+        def loss_fn(p):
+            pred = mlp_forward(p, xb, dropout=config.dropout, key=key)
+            return jnp.mean((pred - yb) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = _adam_update(
+            params, grads, opt, config.lr, config.weight_decay
+        )
+        return params, opt, loss
+
+    @jax.jit
+    def val_loss(params, xv, yv):
+        return jnp.mean((mlp_forward(params, xv) - yv) ** 2)
+
+    xv, yv = jnp.asarray(Xt[val_idx]), jnp.asarray(Yt[val_idx])
+    best_val, best_params, bad = np.inf, params, 0
+    bs = min(config.batch_size, len(tr_idx))
+    for epoch in range(config.max_epochs):
+        order = rng.permutation(len(tr_idx))
+        for s in range(0, len(order), bs):
+            idx = tr_idx[order[s : s + bs]]
+            if len(idx) < bs:  # keep shapes static for the jit
+                idx = np.concatenate([idx, tr_idx[order[: bs - len(idx)]]])
+            key, sub = jax.random.split(key)
+            params, opt, _ = train_step(
+                params, opt, jnp.asarray(Xt[idx]), jnp.asarray(Yt[idx]), sub
+            )
+        v = float(val_loss(params, xv, yv))
+        if v < best_val - 1e-6:
+            best_val, best_params, bad = v, params, 0
+        else:
+            bad += 1
+            if bad >= config.patience:
+                break
+    return MLPRegressor(
+        spec=spec,
+        params=best_params,
+        x_mean=jnp.asarray(x_mean),
+        x_std=jnp.asarray(x_std),
+        y_mean=jnp.asarray(y_mean),
+        y_std=jnp.asarray(y_std),
+        dropout=max(config.dropout, 0.05),
+        log_target=log_target,
+    )
+
+
+def regression_report(model, X: np.ndarray, y: np.ndarray) -> dict:
+    """Relative-error stats; the paper reports OtterTune model errors of
+    10-40% — used by expt4 to characterize the 'inaccurate models' regime."""
+    pred = np.asarray(model(jnp.asarray(X, dtype=jnp.float32)))
+    y = np.asarray(y).reshape(-1)
+    rel = np.abs(pred - y) / np.maximum(np.abs(y), 1e-9)
+    return {
+        "mape": float(rel.mean()),
+        "p50": float(np.median(rel)),
+        "p90": float(np.quantile(rel, 0.9)),
+        "rmse": float(np.sqrt(np.mean((pred - y) ** 2))),
+    }

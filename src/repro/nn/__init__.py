@@ -1,0 +1,32 @@
+"""Model substrate: attention (GQA/RoPE/qk-norm), MoE (GShard einsum),
+RWKV-6 (Finch), Mamba/S6, norms, blocks with scan-over-layers + remat, and
+the LM assembly used by all ten assigned architectures.
+
+Pure functional JAX: parameters are nested dicts whose leaves are
+:class:`repro.nn.layers.PV` (value + logical sharding axes).  Every init
+function accepts ``key=None`` to build abstract ``ShapeDtypeStruct`` params
+(the dry-run path — no host allocation for 314 B-parameter configs).
+"""
+
+from .config import (
+    SHAPES,
+    ArchConfig,
+    HybridConfig,
+    MambaConfig,
+    MoEConfig,
+    RWKVConfig,
+    ShapeSpec,
+)
+from .layers import PV, KeyGen, split_tree
+from .model import (
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

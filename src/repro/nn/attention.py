@@ -1,0 +1,209 @@
+"""GQA attention: RoPE, optional qk-norm, chunked (flash-style) causal
+training/prefill path, and KV-cache decode with sequence-sharded cache.
+
+Sharding strategy (see DESIGN.md §5):
+
+* train/prefill — q/k/v projection weights sharded on the fused head dim
+  (always divisible); activations constrained with query *heads* on the
+  ``model`` axis. KV heads (often 8 < mesh model width 16) fall back to
+  replicated KV activations (Megatron GQA convention); the repeat-to-H
+  broadcast is sharded so each device only materializes its own heads.
+* decode — the cache is sharded on the *sequence* dim over ``model``
+  (flash-decode): per-layer collectives are the tiny softmax/output
+  reductions, and cache reads/writes stay local.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+
+from .config import ArchConfig
+from .layers import KeyGen, param, rmsnorm, rmsnorm_init, rope
+
+Array = jax.Array
+
+
+def attn_init(kg: KeyGen, cfg: ArchConfig) -> dict:
+    D, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.pdtype()
+    p = {
+        "wq": param(kg, (D, H * dh), ("d_model", "heads"), dt),
+        "wk": param(kg, (D, Hk * dh), ("d_model", "kv_fused"), dt),
+        "wv": param(kg, (D, Hk * dh), ("d_model", "kv_fused"), dt),
+        "wo": param(kg, (H * dh, D), ("heads", "d_model_out"), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(kg, dh, dt)
+        p["k_norm"] = rmsnorm_init(kg, dh, dt)
+    return p
+
+
+def _project_qkv(p, cfg: ArchConfig, x: Array, positions: Array, rules):
+    """x: (B, S, D) -> q (B,S,H,dh), k/v (B,S,Hk,dh) with RoPE + qk-norm."""
+    B, S, _ = x.shape
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, Hk, dh)
+    v = (x @ p["wv"]).reshape(B, S, Hk, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    """(..., Hk, dh) -> (..., Hk*groups, dh)."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill attention
+# ---------------------------------------------------------------------------
+
+
+def _dense_causal(q, k, v, scale):
+    """Reference O(S^2)-memory path for short sequences."""
+    S = q.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _chunked_causal(q, k, v, scale, chunk):
+    """Flash-style blockwise causal attention in pure jnp.
+
+    Python double loop over (query chunk, visible KV chunk) pairs with a
+    running (max, denom, acc) in fp32 — the lower-triangular block pattern
+    is unrolled, so only the S(S+chunk)/2 causally-visible work is emitted
+    (exact-FLOPs HLO: no masked waste beyond the diagonal blocks, and no
+    ``lax.scan`` whose body XLA's cost analysis would count only once).
+    Peak memory is O(chunk^2) per head instead of O(S^2).  This is also the
+    oracle for the Pallas flash kernel.
+    """
+    B, S, H, dh = q.shape
+    n = S // chunk
+    qc = q.reshape(B, n, chunk, H, dh)
+    kc = k.reshape(B, n, chunk, H, dh)
+    vc = v.reshape(B, n, chunk, H, dh)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    outs = []
+    for i in range(n):
+        qi = qc[:, i]  # (B, c, H, dh)
+        m = jnp.full((B, H, chunk), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, H, chunk), jnp.float32)
+        acc = jnp.zeros((B, H, chunk, dh), jnp.float32)
+        for j in range(i + 1):
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kc[:, j]).astype(
+                jnp.float32) * scale
+            if j == i:
+                s = jnp.where(tri[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vc.dtype), vc[:, j]
+            ).astype(jnp.float32)
+            m = m_new
+        outs.append((acc / l[..., None]).swapaxes(1, 2))  # (B, c, H, dh)
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def attention(p, cfg: ArchConfig, x: Array, rules=None, *,
+              return_kv: bool = False, max_seq: int | None = None):
+    """Full-sequence causal attention (training / prefill).
+
+    With ``return_kv`` also returns the (k, v) cache tensors padded to
+    ``max_seq`` along the sequence dim (prefill path)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions, rules)
+    if return_kv:
+        pad = (max_seq or S) - S
+        kv_pad = lambda a: jnp.pad(
+            a.astype(cfg.cdtype()), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_cache = (kv_pad(k), kv_pad(v))
+    groups = cfg.n_heads // cfg.n_kv_heads
+    # Megatron-GQA fallback: kv activations replicated over model axis...
+    k = constrain(k, rules, "attn_batch", None, "kv_heads", None)
+    v = constrain(v, rules, "attn_batch", None, "kv_heads", None)
+    # ...then the repeat-to-H is computed sharded (only local heads land).
+    k = constrain(_repeat_kv(k, groups), rules, "attn_batch", None, "heads", None)
+    v = constrain(_repeat_kv(v, groups), rules, "attn_batch", None, "heads", None)
+    q = constrain(q, rules, "attn_batch", None, "heads", None)
+    scale = cfg.hd ** -0.5
+    if S <= cfg.attn_chunk:
+        o = _dense_causal(q, k, v, scale)
+    else:
+        o = _chunked_causal(q, k, v, scale, cfg.attn_chunk)
+    o = constrain(o, rules, "attn_batch", None, "heads", None)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    out = o @ p["wo"]
+    if return_kv:
+        return out, kv_cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (KV cache, seq-sharded)
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg: ArchConfig, batch: int, max_seq: int, abstract: bool):
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    dt = cfg.cdtype()
+    mk = (lambda: jax.ShapeDtypeStruct(shape, dt)) if abstract else (
+        lambda: jnp.zeros(shape, dt))
+    axes = ("batch", "seq_shard", None, None)
+    from .layers import PV
+
+    return {"k": PV(mk(), axes), "v": PV(mk(), axes)}
+
+
+def decode_attention(p, cfg: ArchConfig, x: Array, cache: dict, pos: Array,
+                     rules=None):
+    """One decode step. x: (B, 1, D); cache k/v: (B, Smax, Hk, dh) sharded on
+    seq over ``model``. Returns (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, rules)
+    # Per-token activations are tiny: replicate them over the model axis
+    # (which carries the cache *sequence* shards) so the attention einsums
+    # contract locally — GSPMD then only inserts the small softmax/output
+    # reductions (flash-decode), never a cache-sized reshard.
+    q = constrain(q, rules, "batch", None, None, None)
+    k_new = constrain(k_new, rules, "batch", None, None, None)
+    v_new = constrain(v_new, rules, "batch", None, None, None)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    ck = constrain(ck, rules, "batch", "seq_shard", None, None)
+    cv = constrain(cv, rules, "batch", "seq_shard", None, None)
+    Smax = ck.shape[1]
+    # GQA without repeat: fold q heads into (Hk, G) so the contraction runs
+    # directly against the Hk-headed cache (no cache-sized broadcast).
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, dh)  # (B, Hk, G, dh) from (B, 1, H, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, ck.astype(qg.dtype))
+    scores = constrain(scores.astype(jnp.float32) * (dh ** -0.5),
+                       rules, "batch", None, None, "seq_shard")
+    valid = jnp.arange(Smax)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", probs.astype(ck.dtype),
+                   cv.astype(ck.dtype))
+    o = constrain(o, rules, "batch", None, None, None)
+    o = o.reshape(B, 1, H * dh)
+    out = o @ p["wo"]
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,279 @@
+"""Decoder blocks + scan-over-layers assembly with remat policies.
+
+Three block kinds cover all ten architectures:
+
+* ``attn``  — pre-norm GQA attention + (MLP | MoE)        [dense/moe/vlm/audio]
+* ``rwkv``  — RWKV-6 time mix + channel mix               [ssm]
+* hybrid superblock — Jamba's 8-layer repeating pattern
+  (Mamba ×7 + attention ×1, MoE every other layer)        [hybrid]
+
+Layers are *stacked* (params carry a leading layer dim) and iterated with
+``jax.lax.scan`` so HLO size is O(1) in depth; the remat policy
+(none / dots / full) wraps the scanned body and is an execution-plan knob.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, decode_attention, init_layer_cache
+from .config import ArchConfig
+from .layers import PV, KeyGen, mlp, mlp_init, rmsnorm, rmsnorm_init
+from .mamba import mamba, mamba_init
+from .moe import moe, moe_init
+from .rwkv import (
+    rwkv_channel_mix,
+    rwkv_channel_mix_init,
+    rwkv_time_mix,
+    rwkv_time_mix_init,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Layer plans: which (mixer, ffn) each layer uses
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """Per-layer (mixer, ffn) within one scan unit.
+
+    Uniform families return a single-entry plan (scan over n_layers);
+    hybrid returns ``period`` entries (scan over n_layers // period).
+    """
+    if cfg.family == "ssm":
+        return [("rwkv", "rwkv_cm")]
+    if cfg.hybrid is not None:
+        h = cfg.hybrid
+        plan = []
+        for i in range(h.period):
+            mixer = "attn" if i % h.period == h.attn_index else "mamba"
+            ffn = "moe" if (cfg.moe and i % h.moe_period == h.moe_offset) else "mlp"
+            plan.append((mixer, ffn))
+        return plan
+    ffn = "moe" if cfg.moe is not None else "mlp"
+    return [("attn", ffn)]
+
+
+def scan_length(cfg: ArchConfig) -> int:
+    n_unit = len(layer_plan(cfg))
+    assert cfg.n_layers % n_unit == 0, (cfg.name, cfg.n_layers, n_unit)
+    return cfg.n_layers // n_unit
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(kg: KeyGen, cfg: ArchConfig, mixer: str, ffn: str) -> dict:
+    dt = cfg.pdtype()
+    p: dict[str, Any] = {"norm1": rmsnorm_init(kg, cfg.d_model, dt)}
+    if mixer == "attn":
+        from .attention import attn_init
+
+        p["attn"] = attn_init(kg, cfg)
+    elif mixer == "mamba":
+        p["mamba"] = mamba_init(kg, cfg, cfg.hybrid.mamba)
+    elif mixer == "rwkv":
+        p["time_mix"] = rwkv_time_mix_init(kg, cfg, cfg.rwkv)
+    else:
+        raise ValueError(mixer)
+    p["norm2"] = rmsnorm_init(kg, cfg.d_model, dt)
+    if ffn == "mlp":
+        p["mlp"] = mlp_init(kg, cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    elif ffn == "moe":
+        p["moe"] = moe_init(kg, cfg, cfg.moe)
+    elif ffn == "rwkv_cm":
+        p["channel_mix"] = rwkv_channel_mix_init(kg, cfg)
+    else:
+        raise ValueError(ffn)
+    return p
+
+
+def _layer_cache_init(cfg: ArchConfig, mixer: str, batch: int, max_seq: int,
+                      abstract: bool) -> dict:
+    """Per-layer decode cache (PV leaves with logical axes)."""
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
+        lambda s, d: jnp.zeros(s, d))
+    if mixer == "attn":
+        return init_layer_cache(cfg, batch, max_seq, abstract)
+    if mixer == "mamba":
+        m = cfg.hybrid.mamba
+        din = m.expand * cfg.d_model
+        return {
+            "h": PV(mk((batch, din, m.d_state), jnp.float32),
+                    ("batch", "d_inner", "d_state")),
+            "conv": PV(mk((batch, m.d_conv - 1, din), cfg.cdtype()),
+                       ("batch", None, "d_inner")),
+        }
+    if mixer == "rwkv":
+        r = cfg.rwkv
+        H, dh = cfg.d_model // r.head_size, r.head_size
+        return {
+            "S": PV(mk((batch, H, dh, dh), jnp.float32),
+                    ("batch", "rwkv_heads", None, None)),
+            "x_tm": PV(mk((batch, cfg.d_model), cfg.cdtype()),
+                       ("batch", None)),
+            "x_cm": PV(mk((batch, cfg.d_model), cfg.cdtype()),
+                       ("batch", None)),
+        }
+    raise ValueError(mixer)
+
+
+def _apply_mixer(p, cfg: ArchConfig, mixer: str, x, rules, mode, cache, pos,
+                 max_seq):
+    """Returns (y, new_cache)."""
+    if mixer == "attn":
+        if mode == "decode":
+            return decode_attention(p["attn"], cfg, x, cache, pos, rules)
+        if mode == "prefill":
+            y, (k, v) = attention(p["attn"], cfg, x, rules, return_kv=True,
+                                  max_seq=max_seq)
+            return y, {"k": k, "v": v}
+        return attention(p["attn"], cfg, x, rules), None
+    if mixer == "mamba":
+        st = (cache["h"], cache["conv"]) if cache is not None else None
+        y, (h, conv) = mamba(p["mamba"], cfg, cfg.hybrid.mamba, x, st, rules)
+        new = {"h": h, "conv": conv} if mode != "train" else None
+        return y, new
+    if mixer == "rwkv":
+        st = (cache["S"], cache["x_tm"]) if cache is not None else None
+        y, (S, x_tm) = rwkv_time_mix(p["time_mix"], cfg, cfg.rwkv, x, st, rules)
+        new = {"S": S, "x_tm": x_tm} if mode != "train" else None
+        return y, new
+    raise ValueError(mixer)
+
+
+def _apply_ffn(p, cfg: ArchConfig, ffn: str, x, rules, mode, cache):
+    """Returns (y, extra_cache_updates or {})."""
+    if ffn == "mlp":
+        return mlp(p["mlp"], x, cfg.activation, rules), {}
+    if ffn == "moe":
+        return moe(p["moe"], cfg, cfg.moe, x, rules), {}
+    if ffn == "rwkv_cm":
+        prev = cache.get("x_cm") if cache is not None else None
+        y, x_cm = rwkv_channel_mix(p["channel_mix"], cfg, x, prev, rules)
+        return y, ({"x_cm": x_cm} if mode != "train" else {})
+    raise ValueError(ffn)
+
+
+def layer_apply(p, cfg: ArchConfig, mixer: str, ffn: str, x, rules, mode,
+                cache, pos, max_seq):
+    """One pre-norm residual layer. Returns (x', new_cache)."""
+    h, new_cache = _apply_mixer(
+        p, cfg, mixer, rmsnorm(p["norm1"], x, cfg.norm_eps), rules, mode,
+        cache, pos, max_seq)
+    x = x + h
+    h, cm_cache = _apply_ffn(
+        p, cfg, ffn, rmsnorm(p["norm2"], x, cfg.norm_eps), rules, mode, cache)
+    x = x + h
+    if new_cache is not None and cm_cache:
+        new_cache = {**new_cache, **cm_cache}
+    elif cm_cache:
+        new_cache = cm_cache
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacked blocks + scan
+# ---------------------------------------------------------------------------
+
+
+def _stack_pv(trees: list) -> Any:
+    """Stack a list of identical-structure PV trees along a new leading
+    'layers' dim."""
+    is_pv = lambda x: isinstance(x, PV)
+
+    def stack(*leaves: PV) -> PV:
+        v0 = leaves[0].value
+        if isinstance(v0, jax.ShapeDtypeStruct):
+            val = jax.ShapeDtypeStruct((len(leaves), *v0.shape), v0.dtype)
+        else:
+            val = jnp.stack([l.value for l in leaves])
+        return PV(val, ("layers", *leaves[0].axes))
+
+    return jax.tree.map(stack, *trees, is_leaf=is_pv)
+
+
+def blocks_init(kg: KeyGen, cfg: ArchConfig) -> dict:
+    plan = layer_plan(cfg)
+    n_scan = scan_length(cfg)
+    units = []
+    for _ in range(n_scan):
+        unit = {
+            f"l{i}": _layer_init(kg, cfg, mixer, ffn)
+            for i, (mixer, ffn) in enumerate(plan)
+        }
+        units.append(unit)
+    return _stack_pv(units)
+
+
+def blocks_cache_init(cfg: ArchConfig, batch: int, max_seq: int,
+                      abstract: bool) -> dict:
+    plan = layer_plan(cfg)
+    n_scan = scan_length(cfg)
+    units = []
+    for _ in range(n_scan):
+        unit = {
+            f"l{i}": _layer_cache_init(cfg, mixer, batch, max_seq, abstract)
+            for i, (mixer, _) in enumerate(plan)
+        }
+        units.append(unit)
+    return _stack_pv(units)
+
+
+def _unit_apply(unit_p, cfg, plan, x, rules, mode, unit_cache, pos, max_seq):
+    new_cache = {}
+    for i, (mixer, ffn) in enumerate(plan):
+        c = unit_cache[f"l{i}"] if unit_cache is not None else None
+        x, nc = layer_apply(unit_p[f"l{i}"], cfg, mixer, ffn, x, rules, mode,
+                            c, pos, max_seq)
+        if nc is not None:
+            new_cache[f"l{i}"] = nc
+    return x, (new_cache or None)
+
+
+def _remat_wrap(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    raise ValueError(cfg.remat)
+
+
+def blocks_apply(block_params, cfg: ArchConfig, x, rules, mode="train",
+                 cache=None, pos=None, max_seq=None):
+    """Run all layers. block_params/cache are stacked value trees.
+
+    Returns (x, new_cache_stacked_or_None)."""
+    plan = layer_plan(cfg)
+
+    def scan_body(carry, xs):
+        unit_p, unit_c = xs
+        y, nc = _unit_apply(unit_p, cfg, plan, carry, rules, mode, unit_c,
+                            pos, max_seq)
+        return y, nc
+
+    wrapped = _remat_wrap(scan_body, cfg) if mode == "train" else scan_body
+    n_scan = scan_length(cfg)
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(wrapped, x, (block_params, cache))
+    else:
+        caches = []
+        for i in range(n_scan):
+            unit_p = jax.tree.map(lambda a: a[i], block_params)
+            unit_c = (jax.tree.map(lambda a: a[i], cache)
+                      if cache is not None else None)
+            x, nc = wrapped(x, (unit_p, unit_c))
+            caches.append(nc)
+        new_cache = (jax.tree.map(lambda *ls: jnp.stack(ls), *caches)
+                     if caches and caches[0] is not None else None)
+    return x, new_cache

@@ -1,0 +1,169 @@
+"""Primitive layers + parameter bookkeeping.
+
+Parameters are nested dicts with :class:`PV` leaves carrying ``(value,
+logical_axes)``.  ``value`` is a concrete array when initialized with a PRNG
+key, or a ``jax.ShapeDtypeStruct`` in abstract mode (``key=None``) — the
+dry-run builds 314 B-parameter trees without allocating a byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class PV:
+    """A parameter leaf: value (array or ShapeDtypeStruct) + logical axes.
+
+    Not registered as a pytree — ``jax.tree`` treats it as a leaf, so
+    ``split_tree`` can cleanly separate values from sharding annotations.
+    """
+
+    value: Any
+    axes: tuple
+
+
+def split_tree(tree):
+    """PV-tree -> (values tree, logical-axes tree)."""
+    is_pv = lambda x: isinstance(x, PV)
+    vals = jax.tree.map(lambda p: p.value, tree, is_leaf=is_pv)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_pv)
+    return vals, axes
+
+
+class KeyGen:
+    """Splittable PRNG stream; ``None`` key => abstract (shape-only) mode."""
+
+    def __init__(self, key):
+        self._key = key
+
+    @property
+    def abstract(self) -> bool:
+        return self._key is None
+
+    def __call__(self):
+        if self._key is None:
+            return None
+        self._key, k = jax.random.split(self._key)
+        return k
+
+
+def param(
+    kg: KeyGen,
+    shape: tuple,
+    axes: tuple,
+    dtype,
+    init: str = "normal",
+    scale: float | None = None,
+) -> PV:
+    """Create one parameter (or its ShapeDtypeStruct in abstract mode)."""
+    assert len(shape) == len(axes), (shape, axes)
+    if kg.abstract:
+        return PV(jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)), axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "normal":
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+        v = (jax.random.normal(kg(), shape, jnp.float32) * s).astype(dtype)
+    elif init == "uniform":
+        s = scale if scale is not None else 1.0
+        v = (jax.random.uniform(kg(), shape, jnp.float32, -s, s)).astype(dtype)
+    else:
+        raise ValueError(init)
+    return PV(v, axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(kg: KeyGen, dim: int, dtype) -> dict:
+    return {"scale": param(kg, (dim,), (None,), dtype, init="ones")}
+
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (NeoX half-rotation)
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(kg: KeyGen, d: int, f: int, activation: str, dtype) -> dict:
+    w_axes = ("d_model", "d_ff")
+    p = {"w1": param(kg, (d, f), w_axes, dtype)}
+    if activation == "swiglu":
+        p["w3"] = param(kg, (d, f), w_axes, dtype)
+    p["w2"] = param(kg, (f, d), ("d_ff", "d_model_out"), dtype)
+    return p
+
+
+def mlp(p: dict, x: Array, activation: str, rules=None) -> Array:
+    from repro.distributed import constrain
+
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ p["w1"])
+    else:
+        raise ValueError(activation)
+    h = constrain(h, rules, "batch", None, "act_ff")
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(kg: KeyGen, vocab: int, d: int, dtype) -> dict:
+    return {"tok": param(kg, (vocab, d), ("vocab", "d_model"), dtype, scale=0.02)}
+
+
+def embed(p: dict, tokens: Array) -> Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed_init(kg: KeyGen, d: int, vocab: int, dtype) -> dict:
+    return {"w": param(kg, (d, vocab), ("d_model", "vocab"), dtype)}
+
+
+def unembed(p: dict, x: Array) -> Array:
+    return x @ p["w"]

@@ -1,0 +1,118 @@
+"""Mamba / S6 selective state-space layer (Jamba's mixer).
+
+    x -> in_proj -> (x_ssm, z);  x_ssm -> causal depthwise conv (k=4) -> silu
+    Δ_t = softplus(dt_proj(x W_dt));  B_t, C_t = x W_B, x W_C
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t ⊙ x_t      h in R^{d_inner × d_state}
+    y_t = h_t C_t + D ⊙ x_t;   out = (y ⊙ silu(z)) W_out
+
+Training runs a chunked ``lax.scan`` over time (checkpoint per chunk —
+backward memory O(T/chunk)); decode is a single recurrence step carrying
+``(h, conv window)``.  ``d_inner`` shards on the model axis, so the hidden
+state and all projections are tensor-parallel; the recurrence is local
+(elementwise in d_inner) — zero per-step collectives, which is what makes
+SSM decode collective-free in the roofline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+
+from .config import ArchConfig, MambaConfig
+from .layers import KeyGen, param
+
+Array = jax.Array
+
+
+def mamba_init(kg: KeyGen, cfg: ArchConfig, m: MambaConfig) -> dict:
+    D = cfg.d_model
+    din = m.expand * D
+    dtr = m.dt_rank or -(-D // 16)
+    dt = cfg.pdtype()
+    p = {
+        "in_proj": param(kg, (D, 2 * din), ("d_model", "d_inner"), dt),
+        "conv_w": param(kg, (m.d_conv, din), (None, "d_inner"), dt,
+                        init="uniform", scale=0.5),
+        "conv_b": param(kg, (din,), ("d_inner",), dt, init="zeros"),
+        "x_proj": param(kg, (din, dtr + 2 * m.d_state), ("d_inner", None), dt),
+        "dt_proj": param(kg, (dtr, din), (None, "d_inner"), dt),
+        "dt_bias": param(kg, (din,), ("d_inner",), dt, init="uniform", scale=1.0),
+        "A_log": param(kg, (din, m.d_state), ("d_inner", "d_state"), dt,
+                       init="uniform", scale=1.0),
+        "D": param(kg, (din,), ("d_inner",), dt, init="ones"),
+        "out_proj": param(kg, (din, D), ("d_inner", "d_model_out"), dt),
+    }
+    return p
+
+
+def _causal_conv(x: Array, w: Array, b: Array, prev: Array | None):
+    """Depthwise causal conv. x: (B,T,din); w: (k,din); prev: (B,k-1,din)."""
+    B, T, din = x.shape
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, k - 1, din), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, T+k-1, din)
+    # windowed sum: y_t = sum_j w[j] * xp[t+j]
+    y = sum(xp[:, j : j + T] * w[j] for j in range(k))
+    return y + b, xp[:, -(k - 1):]  # new conv state
+
+
+def _ssm_step(h, inp, A):
+    """h: (B,din,state); inp: (dt (B,din), Bt (B,state), Ct (B,state),
+    xt (B,din)) -> (h', y (B,din))."""
+    dt, Bt, Ct, xt = inp
+    dA = jnp.exp(dt[..., None] * A[None])                 # (B,din,state)
+    dBx = (dt * xt)[..., None] * Bt[:, None, :]           # (B,din,state)
+    h = dA * h + dBx
+    y = jnp.einsum("bds,bs->bd", h, Ct)
+    return h, y
+
+
+def _ssm_scan(h0, dt, Bt, Ct, xs, A, chunk):
+    """Chunked scan over time. dt/xs: (B,T,din); Bt/Ct: (B,T,state)."""
+    B, T, din = xs.shape
+    seq = jax.tree.map(lambda a: a.swapaxes(0, 1), (dt, Bt, Ct, xs))
+
+    def chunk_body(h, c):
+        return jax.lax.scan(lambda hh, i: _ssm_step(hh, i, A), h, c)
+
+    c = max(1, min(chunk, T))
+    n = max(1, T // c)
+    if n > 1 and T % c == 0:
+        seq_c = jax.tree.map(lambda a: a.reshape(n, c, *a.shape[1:]), seq)
+        h, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, seq_c)
+        ys = ys.reshape(T, B, din)
+    else:
+        h, ys = chunk_body(h0, seq)
+    return h, ys.swapaxes(0, 1)  # (B,T,din)
+
+
+def mamba(p, cfg: ArchConfig, m: MambaConfig, x: Array,
+          state: tuple | None = None, rules=None):
+    """x: (B,T,D); state: (h (B,din,ds) fp32, conv (B,k-1,din)) or None.
+
+    Returns (y (B,T,D), new_state)."""
+    B, T, D = x.shape
+    din = m.expand * D
+    dtr = m.dt_rank or -(-D // 16)
+    h0, conv_prev = state if state is not None else (
+        jnp.zeros((B, din, m.d_state), jnp.float32), None)
+    xz = x @ p["in_proj"]
+    xz = constrain(xz, rules, "batch", None, "d_inner")
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_prev)
+    xs = jax.nn.silu(xs)
+    proj = xs @ p["x_proj"]  # (B,T,dtr+2*state)
+    dt_r, Bt, Ct = jnp.split(proj, [dtr, dtr + m.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h_fin, ys = _ssm_scan(h0, dt, Bt.astype(jnp.float32),
+                          Ct.astype(jnp.float32), xs.astype(jnp.float32),
+                          A, m.chunk)
+    y = ys.astype(x.dtype) + xs * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, rules, "batch", None, "d_inner")
+    out = y @ p["out_proj"]
+    return out, (h_fin, conv_state)

@@ -1,0 +1,172 @@
+"""LM assembly: embeddings -> blocks -> final norm -> unembed, plus the
+training loss and the prefill/decode serving entry points.
+
+All entry points take *value* trees (PV trees are split by callers via
+``split_tree``) and an optional :class:`~repro.distributed.ShardingRules`
+for activation constraints.  ``abstract_params`` / ``abstract_cache`` build
+``ShapeDtypeStruct`` trees for the zero-allocation dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+
+from .blocks import blocks_apply, blocks_cache_init, blocks_init
+from .config import ArchConfig
+from .layers import (
+    KeyGen,
+    embed,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    split_tree,
+    unembed,
+    unembed_init,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _params_pv(kg: KeyGen, cfg: ArchConfig) -> dict:
+    dt = cfg.pdtype()
+    p = {}
+    if not cfg.embed_input:
+        p["embed"] = embed_init(kg, cfg.vocab, cfg.d_model, dt)
+    p["blocks"] = blocks_init(kg, cfg)
+    p["final_norm"] = rmsnorm_init(kg, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["unembed"] = unembed_init(kg, cfg.d_model, cfg.vocab, dt)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    """Concrete init. Returns (params values, logical axes tree)."""
+    return split_tree(_params_pv(KeyGen(key), cfg))
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct params (dry-run; no allocation)."""
+    return split_tree(_params_pv(KeyGen(None), cfg))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return split_tree(blocks_cache_init(cfg, batch, max_seq, abstract=False))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return split_tree(blocks_cache_init(cfg, batch, max_seq, abstract=True))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def cast_params(params, dtype):
+    """Cast floating leaves to the compute dtype (single cast per step)."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch: dict, rules) -> Array:
+    if cfg.embed_input:
+        x = batch["embeds"].astype(cfg.cdtype())
+    else:
+        x = embed(params["embed"], batch["tokens"]).astype(cfg.cdtype())
+    return constrain(x, rules, "batch", None, "embed")
+
+
+def _logits(params, cfg: ArchConfig, x: Array, rules) -> Array:
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].astype(cfg.cdtype())
+        logits = x @ w.T
+    else:
+        logits = unembed(params["unembed"], x)
+    logits = constrain(logits, rules, "batch", None, "vocab")
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c)
+    return logits
+
+
+def forward(params, cfg: ArchConfig, batch: dict, rules=None,
+            mode: str = "train", max_seq: int | None = None):
+    """Full-sequence forward. Returns (logits, cache_or_None)."""
+    params = cast_params(params, cfg.cdtype())
+    x = _embed_inputs(params, cfg, batch, rules)
+    max_seq = max_seq or x.shape[1]
+    x, cache = blocks_apply(params["blocks"], cfg, x, rules, mode=mode,
+                            max_seq=max_seq)
+    return _logits(params, cfg, x, rules), cache
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, rules=None) -> tuple:
+    """Next-token cross entropy. Returns (loss, metrics)."""
+    logits, _ = forward(params, cfg, batch, rules, mode="train")
+    if cfg.embed_input:
+        labels = batch["labels"]
+        mask = jnp.ones(labels.shape, jnp.float32)
+    else:
+        tokens = batch["tokens"]
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], jnp.float32),
+             jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - lab) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / jnp.maximum(
+        mask.sum(), 1.0)
+    return loss, {"loss": loss, "accuracy": acc, "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, rules=None,
+            max_seq: int | None = None):
+    """Prompt processing: returns (last-position logits, populated cache)."""
+    logits, cache = forward(params, cfg, batch, rules, mode="prefill",
+                            max_seq=max_seq)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, batch: dict, pos: Array,
+                rules=None):
+    """One incremental decode step.
+
+    ``batch`` holds ``tokens (B, 1)`` (or ``embeds (B, 1, D)`` for stub-
+    frontend archs); ``pos`` is the write position (scalar int32).
+    Returns (logits (B, vocab), new_cache).
+    """
+    params = cast_params(params, cfg.cdtype())
+    x = _embed_inputs(params, cfg, batch, rules)
+    x, new_cache = blocks_apply(params["blocks"], cfg, x, rules,
+                                mode="decode", cache=cache, pos=pos,
+                                max_seq=cache_max_seq(cfg, cache))
+    logits = _logits(params, cfg, x, rules)
+    return logits[:, -1], new_cache
+
+
+def cache_max_seq(cfg: ArchConfig, cache) -> int:
+    """Infer max_seq from an attention cache (1 for pure-SSM caches)."""
+    leaves = jax.tree.leaves(cache)
+    for leaf in leaves:
+        if leaf.ndim == 5:  # (L, B, Smax, Hk, dh)
+            return leaf.shape[2]
+    return 1

@@ -1,0 +1,172 @@
+"""Mixture-of-Experts with GShard-style dense dispatch einsums.
+
+Differentiable, shardable top-k routing with capacity:
+
+    router logits (fp32) -> top-k gates -> capacity-limited position-in-
+    expert via cumulative sum -> dispatch one-hot (g, s, E, C) ->
+    expert_in = einsum(dispatch, x) -> per-expert FFN -> combine.
+
+Tokens are processed in groups (``group_size``) so the dispatch/combine
+tensors stay VMEM-friendly. Experts shard on the ``model`` axis when the
+expert count divides it (EP — Jamba's 16e); otherwise expert weights fall
+back to TP-inside-expert (``expert_ff`` on ``model`` — qwen2-moe's 60e,
+grok-1's 8e on a 16-wide axis). The einsum from batch-sharded tokens to
+expert-sharded buffers induces the all-to-all that the roofline collective
+term tracks.
+
+``impl="gather"`` replaces the two big dispatch/combine einsums with
+take-based gathers (beyond-paper optimization; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+
+from .config import ArchConfig, MoEConfig
+from .layers import KeyGen, param
+
+Array = jax.Array
+
+
+def moe_init(kg: KeyGen, cfg: ArchConfig, m: MoEConfig) -> dict:
+    D, Fe, E = cfg.d_model, m.expert_d_ff, m.num_experts
+    dt = cfg.pdtype()
+    glu = cfg.activation == "swiglu"
+    p = {
+        "router": param(kg, (D, E), ("d_model", None), dt),
+        "w1": param(kg, (E, D, Fe), ("expert", "d_model", "expert_ff"), dt),
+        "w2": param(kg, (E, Fe, D), ("expert", "expert_ff", "d_model_out"), dt),
+    }
+    if glu:
+        p["w3"] = param(kg, (E, D, Fe), ("expert", "d_model", "expert_ff"), dt)
+    if m.shared_d_ff:
+        p["shared_w1"] = param(kg, (D, m.shared_d_ff), ("d_model", "d_ff"), dt)
+        p["shared_w2"] = param(kg, (m.shared_d_ff, D), ("d_ff", "d_model_out"), dt)
+        if glu:
+            p["shared_w3"] = param(
+                kg, (D, m.shared_d_ff), ("d_model", "d_ff"), dt)
+        p["shared_gate"] = param(kg, (D, 1), ("d_model", None), dt)
+    return p
+
+
+def _top_k_gating(logits: Array, m: MoEConfig):
+    """logits: (g, s, E) fp32 -> gates (g, s, E) with exactly top_k nonzero,
+    normalized over the selected experts; plus aux load-balance loss terms."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, m.top_k)  # (g, s, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs)
+    oh = jax.nn.one_hot(topi, logits.shape[-1], dtype=probs.dtype)  # (g,s,k,E)
+    gates = jnp.einsum("gsk,gske->gse", topv, oh)
+    return gates, oh
+
+
+def _dispatch_tensors(gates: Array, oh: Array, m: MoEConfig, capacity: int):
+    """GShard position-in-expert. Returns combine (g,s,E,C) and dispatch
+    (bool same shape)."""
+    g, s, k, E = oh.shape
+    # priority: iterate the k choices in order; earlier choices get earlier
+    # slots (standard GShard serialization of top-k). Accumulate the (g,s,E,C)
+    # dispatch per choice to avoid ever materializing a 5-D (g,s,k,E,C).
+    disp = jnp.zeros((g, s, E, capacity), gates.dtype)
+    running = jnp.zeros((g, E), oh.dtype)
+    for j in range(k):
+        mj = oh[:, :, j]  # (g, s, E)
+        pos = jnp.cumsum(mj, axis=1) - mj + running[:, None]
+        running = running + mj.sum(axis=1)
+        keep = (pos < capacity) & (mj > 0)
+        disp = disp + jnp.where(
+            keep[..., None],
+            jax.nn.one_hot(pos, capacity, dtype=gates.dtype),
+            0.0,
+        )
+    comb = jnp.einsum("gse,gsec->gsec", gates, disp)
+    return comb, disp
+
+
+def _gather_dispatch(xt, gates, oh, m: MoEConfig, capacity: int):
+    """Scatter/gather token routing (beyond-paper; §Perf iteration Q1).
+
+    Replaces the two O(s*E*C*D) one-hot dispatch/combine einsums with
+    O(s*k*D) scatter-adds and gathers — same capacity semantics, same
+    gradients (scatter/gather have exact transpose rules).  Returns
+    (expert_in (g,E,C,D), combine_fn(eout) -> (g,s,D)).
+    """
+    g, s, k, E = oh.shape
+    topi = jnp.argmax(oh, axis=-1)                  # (g, s, k) expert ids
+    # position-in-expert per choice (same GShard serialization as einsum)
+    pos_list, keep_list = [], []
+    running = jnp.zeros((g, E), oh.dtype)
+    for j in range(k):
+        mj = oh[:, :, j]
+        pos = jnp.cumsum(mj, axis=1) - mj + running[:, None]
+        running = running + mj.sum(axis=1)
+        posj = jnp.take_along_axis(pos, topi[:, :, j][..., None],
+                                   axis=-1)[..., 0]  # (g, s)
+        pos_list.append(posj)
+        keep_list.append(posj < capacity)
+    pos = jnp.stack(pos_list, 2).astype(jnp.int32)   # (g, s, k)
+    keep = jnp.stack(keep_list, 2)                   # (g, s, k)
+    gi = jnp.arange(g)[:, None, None]
+    D = xt.shape[-1]
+    contrib = jnp.where(keep[..., None], 1.0, 0.0).astype(xt.dtype)
+    expert_in = jnp.zeros((g, E, capacity, D), xt.dtype).at[
+        gi, topi, pos].add(xt[:, :, None, :] * contrib, mode="drop")
+
+    gate_k = jnp.take_along_axis(gates, topi, axis=-1)  # (g, s, k)
+
+    def combine(eout):
+        y_k = eout[gi, topi, pos]                     # (g, s, k, D)
+        wk = (gate_k * keep).astype(eout.dtype)[..., None]
+        return (y_k * wk).sum(axis=2)
+
+    return expert_in, combine
+
+
+def moe(p: dict, cfg: ArchConfig, m: MoEConfig, x: Array, rules=None) -> Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    impl = cfg.moe_impl
+    B, S, D = x.shape
+    N = B * S
+    gs = min(m.group_size, N)
+    g = N // gs
+    xt = x.reshape(g, gs, D)
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    gates, oh = _top_k_gating(logits, m)
+    capacity = int(gs * m.top_k / m.num_experts * m.capacity_factor)
+    capacity = max(8, -(-capacity // 8) * 8)  # round up to multiple of 8
+    if impl == "gather":
+        ein, combine_fn = _gather_dispatch(xt, gates, oh, m, capacity)
+    else:
+        comb, disp = _dispatch_tensors(gates, oh, m, capacity)
+        comb = comb.astype(x.dtype)
+        # dispatch: (g,s,E,C) x (g,s,D) -> (g,E,C,D) [induces all-to-all]
+        ein = jnp.einsum("gsec,gsd->gecd", disp.astype(x.dtype), xt)
+        combine_fn = lambda eout: jnp.einsum("gsec,gecd->gsd", comb, eout)
+    ein = constrain(ein, rules, "batch", "expert", None, None)
+    w1 = p["w1"].astype(x.dtype)
+    w2 = p["w2"].astype(x.dtype)
+    if cfg.activation == "swiglu":
+        w3 = p["w3"].astype(x.dtype)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ein, w1)) * jnp.einsum(
+            "gecd,edf->gecf", ein, w3)
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", ein, w1))
+    h = constrain(h, rules, "batch", "expert", None, "expert_ff")
+    eout = jnp.einsum("gecf,efd->gecd", h, w2)
+    eout = constrain(eout, rules, "batch", "expert", None, None)
+    y = combine_fn(eout)  # combine [all-to-all back]
+    y = y.reshape(B, S, D)
+    if m.shared_d_ff:
+        if cfg.activation == "swiglu":
+            hs = jax.nn.silu(x @ p["shared_w1"]) * (x @ p["shared_w3"])
+        else:
+            hs = jax.nn.gelu(x @ p["shared_w1"])
+        hs = constrain(hs, rules, "batch", None, "act_ff")
+        shared = hs @ p["shared_w2"]
+        sg = jax.nn.sigmoid((x @ p["shared_gate"]).astype(jnp.float32))
+        y = y + shared * sg.astype(x.dtype)
+    return y

@@ -1,0 +1,160 @@
+"""RWKV-6 "Finch" — attention-free time mix with data-dependent decay.
+
+Per head (size ``dh``), with r/k/v/g projections and decay ``w_t`` produced
+by a low-rank data-dependent map (the Finch contribution):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T        S in R^{dh x dh} per head
+
+Training uses a chunked scan (outer ``lax.scan`` over chunks carrying S,
+inner scan over steps, ``jax.checkpoint`` at chunk granularity) so backward
+memory is O(T/chunk · state) instead of O(T · state).  Decode is the single
+recurrence step.  The O(T) sequential jnp path is the oracle for the
+chunked-parallel Pallas kernel (``repro.kernels.rwkv6_wkv``).
+
+Sharding: head count (e.g. 40) rarely divides the model axis; time-mix
+matmuls shard on their output dim, the (cheap, <1% of FLOPs) recurrence
+falls back to replicated heads, and channel-mix + unembed carry the model
+axis. Parameters shard via FSDP (``d_model -> data``) for memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+
+from .config import ArchConfig, RWKVConfig
+from .layers import KeyGen, param, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+def rwkv_time_mix_init(kg: KeyGen, cfg: ArchConfig, r: RWKVConfig) -> dict:
+    D = cfg.d_model
+    H = D // r.head_size
+    dt = cfg.pdtype()
+    p = {
+        # token-shift lerp coefficients for r, k, v, g, w
+        "mu": param(kg, (5, D), (None, "d_model"), dt, init="uniform", scale=0.5),
+        "wr": param(kg, (D, D), ("d_model", "d_inner"), dt),
+        "wk": param(kg, (D, D), ("d_model", "d_inner"), dt),
+        "wv": param(kg, (D, D), ("d_model", "d_inner"), dt),
+        "wg": param(kg, (D, D), ("d_model", "d_inner"), dt),
+        "wo": param(kg, (D, D), ("d_inner", "d_model_out"), dt),
+        # Finch data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": param(kg, (D,), ("d_model",), dt, init="uniform", scale=1.0),
+        "wA": param(kg, (D, r.decay_lora), ("d_model", None), dt),
+        "wB": param(kg, (r.decay_lora, D), (None, "d_model"), dt),
+        "u": param(kg, (H, r.head_size), ("rwkv_heads", None), dt,
+                   init="uniform", scale=0.5),
+        "ln_x": rmsnorm_init(kg, D, dt),
+    }
+    return p
+
+
+def rwkv_channel_mix_init(kg: KeyGen, cfg: ArchConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype()
+    return {
+        "mu": param(kg, (2, D), (None, "d_model"), dt, init="uniform", scale=0.5),
+        "wk": param(kg, (D, F), ("d_model", "d_ff"), dt),
+        "wv": param(kg, (F, D), ("d_ff", "d_model_out"), dt),
+        "wr": param(kg, (D, D), ("d_model", "d_model_out"), dt),
+    }
+
+
+def _token_shift(x: Array, x_prev: Array) -> Array:
+    """x: (B,T,D); x_prev: (B,D) carry from the previous chunk/step."""
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    return shifted
+
+
+def _wkv_step(S, rkvw, u):
+    """One recurrence step. S: (B,H,dh,dh); r/k/v/w: (B,H,dh)."""
+    r, k, v, w = rkvw
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,dh,dh)
+    y = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * kv)
+    S = w[..., :, None] * S + kv
+    return S, y
+
+
+def rwkv_time_mix(p, cfg: ArchConfig, r: RWKVConfig, x: Array,
+                  state: tuple | None, rules=None):
+    """x: (B,T,D). state: (S (B,H,dh,dh) fp32, x_prev (B,D)) or None (zeros).
+
+    Returns (y (B,T,D), new_state)."""
+    B, T, D = x.shape
+    H, dh = D // r.head_size, r.head_size
+    if state is None:
+        S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        x_prev = jnp.zeros((B, D), x.dtype)
+    else:
+        S0, x_prev = state
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    lerp = lambda i: x + mu[i] * (xs - x)
+    xr, xk, xv, xg, xw = (lerp(i) for i in range(5))
+    rr = (xr @ p["wr"]).reshape(B, T, H, dh)
+    kk = (xk @ p["wk"]).reshape(B, T, H, dh)
+    vv = (xv @ p["wv"]).reshape(B, T, H, dh)
+    gg = jax.nn.silu(xg @ p["wg"])
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["wA"].astype(jnp.float32))
+    dd = dd @ p["wB"].astype(jnp.float32) + p["w0"].astype(jnp.float32)
+    ww = jnp.exp(-jnp.exp(dd)).reshape(B, T, H, dh)  # decay in (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    # recurrence: replicated over model axis (cheap); fp32 state.
+    rkvw = (rr.astype(jnp.float32), kk.astype(jnp.float32),
+            vv.astype(jnp.float32), ww)
+    rkvw = jax.tree.map(lambda a: a.swapaxes(0, 1), rkvw)  # (T,B,H,dh)
+    chunk = max(1, min(r.chunk, T))
+    n_chunks = max(1, T // chunk)
+
+    def chunk_body(S, xs_chunk):
+        def step(S, inp):
+            return _wkv_step(S, inp, u)
+        return jax.lax.scan(step, S, xs_chunk)
+
+    if n_chunks > 1 and T % chunk == 0:
+        xs_c = jax.tree.map(
+            lambda a: a.reshape(n_chunks, chunk, *a.shape[1:]), rkvw)
+        S_fin, ys = jax.lax.scan(
+            jax.checkpoint(chunk_body), S0, xs_c)
+        ys = ys.reshape(T, B, H, dh)
+    else:
+        S_fin, ys = chunk_body(S0, rkvw)
+    y = ys.swapaxes(0, 1).reshape(B, T, D).astype(x.dtype)
+    y = rmsnorm(p["ln_x"], y, cfg.norm_eps) * gg
+    y = y @ p["wo"]
+    new_state = (S_fin, x[:, -1])
+    return y, new_state
+
+
+def rwkv_channel_mix(p, cfg: ArchConfig, x: Array, x_prev: Array | None,
+                     rules=None):
+    """RWKV FFN with token shift. Returns (y, last x)."""
+    B, T, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    k = constrain(k, rules, "batch", None, "act_ff")
+    v = k @ p["wv"]
+    rgate = jax.nn.sigmoid(xr @ p["wr"])
+    return rgate * v, x[:, -1]
+
+
+def rwkv_decode_step(p_tm, p_cm, cfg: ArchConfig, r: RWKVConfig, x: Array,
+                     state: dict, rules=None):
+    """Single-token decode through one RWKV layer pair (time+channel mix).
+
+    x: (B, 1, D); state: {"S", "x_tm", "x_cm"}. Norms applied by caller.
+    """
+    y_tm, (S, x_tm) = rwkv_time_mix(
+        p_tm, cfg, r, x, (state["S"], state["x_tm"]), rules)
+    return y_tm, {"S": S, "x_tm": x_tm}

@@ -1,0 +1,18 @@
+"""Cluster execution planner: the paper's Progressive Frontier MOO applied
+to TPU mesh plans.
+
+The paper chooses Spark job configurations (cores, executors, memory, ...)
+under multiple objectives; here the "job configuration" is the cluster
+execution plan of a training/serving job (chips, TP width, FSDP, remat,
+microbatch, dtypes, ...), the objectives are step latency / $-cost /
+energy (with an HBM-fit constraint), and the predictive models Ψ are
+(a) a differentiable analytic roofline model calibrated per (arch, shape)
+and (b) DNN/GP surrogates trained on dry-run traces — the paper's
+decoupled modeling engine.
+"""
+
+from .space import PLAN_KNOBS, decode_plan, plan_space
+from .cost_model import CHIP_COST_PER_S, HBM_BYTES, PlanModel
+from .planner import PlanRecommendation, plan_job, replan_elastic
+
+__all__ = [k for k in dir() if not k.startswith("_")]

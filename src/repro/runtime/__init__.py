@@ -1,0 +1,13 @@
+"""Runtime fault tolerance: sharded checkpointing (atomic manifest commit,
+async writer, restore-with-resharding), failure simulation, the elastic
+controller (planner-driven re-meshing), and straggler mitigation."""
+
+from .checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+from .elastic import ElasticController, FailureEvent, simulate_failures
+from .straggler import StragglerMonitor
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,7 @@
+"""Serving substrate: prefill / decode step builders over the KV cache,
+plus a batched request-scheduling loop for the examples."""
+
+from .steps import make_decode_step, make_prefill_step
+from .engine import ServeEngine, Request
+
+__all__ = [k for k in dir() if not k.startswith("_")]

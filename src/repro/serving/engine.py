@@ -1,0 +1,95 @@
+"""A small batched serving engine (continuous-batching lite).
+
+Holds a fixed-size slot table; incoming requests are prefil led into free
+slots, every ``step()`` decodes one token for all active slots, finished
+requests free their slot.  This is the end-to-end serving driver used by
+``examples/serve_batched.py`` — deliberately simple but real: slot reuse,
+per-request positions, greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import ArchConfig, decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Batched greedy decoding over a slot table of size ``batch``."""
+
+    def __init__(self, params, cfg: ArchConfig, batch: int, max_seq: int,
+                 rules=None, temperature: float = 0.0, seed: int = 0):
+        self.params, self.cfg, self.rules = params, cfg, rules
+        self.batch, self.max_seq = batch, max_seq
+        self.cache, _ = init_cache(cfg, 1, max_seq)
+        # one per-slot cache (B=1 each) so prefill/evict are per-slot
+        self.slots: list = [None] * batch
+        self.slot_cache = [jax.tree.map(lambda a: a.copy(), self.cache)
+                           for _ in range(batch)]
+        self.slot_pos = np.zeros(batch, np.int32)
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, b, pos: decode_step(p, cfg, c, b, pos, rules))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, rules, max_seq=max_seq))
+
+    def _sample(self, logits) -> int:
+        if self.temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, k = jax.random.split(self.key)
+        return int(jax.random.categorical(k, logits / self.temperature))
+
+    def submit(self, req: Request) -> bool:
+        for i in range(self.batch):
+            if self.slots[i] is None:
+                logits, cache = self._prefill(
+                    self.params, {"tokens": req.prompt[None, :]})
+                self.slot_cache[i] = cache
+                self.slot_pos[i] = len(req.prompt)
+                tok = self._sample(logits[0])
+                req.out.append(tok)
+                self.slots[i] = req
+                return True
+        return False  # no free slot
+
+    def step(self) -> int:
+        """Decode one token for every active slot. Returns #active."""
+        active = 0
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            active += 1
+            tok = jnp.array([[req.out[-1]]], jnp.int32)
+            logits, self.slot_cache[i] = self._decode(
+                self.params, self.slot_cache[i], {"tokens": tok},
+                jnp.int32(self.slot_pos[i]))
+            self.slot_pos[i] += 1
+            req.out.append(self._sample(logits[0]))
+            if (len(req.out) >= req.max_new
+                    or self.slot_pos[i] >= self.max_seq - 1):
+                req.done = True
+                self.slots[i] = None
+        return active
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        pending = list(requests)
+        while pending or any(s is not None for s in self.slots):
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            if not self.step() and pending:
+                raise RuntimeError("engine stalled")
+        return requests

@@ -1,0 +1,33 @@
+"""jit-able serving steps.
+
+``prefill_step(params, batch)`` -> (last logits, cache)
+``decode_step(params, cache, batch, pos)`` -> (logits, new cache)
+
+These are what the ``prefill_*`` and ``decode_*`` / ``long_*`` dry-run
+cells lower (the assignment: decode shapes lower serve_step, not
+train_step).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.nn import ArchConfig
+from repro.nn import decode_step as _decode
+from repro.nn import prefill as _prefill
+
+
+def make_prefill_step(cfg: ArchConfig, rules=None, max_seq=None) -> Callable:
+    def prefill_step(params, batch):
+        return _prefill(params, cfg, batch, rules, max_seq=max_seq)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, rules=None) -> Callable:
+    def decode_step(params, cache, batch, pos):
+        return _decode(params, cfg, cache, batch, pos, rules)
+
+    return decode_step

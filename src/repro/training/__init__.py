@@ -1,0 +1,7 @@
+"""Training substrate: Adam/AdamW (from scratch), microbatch gradient
+accumulation, mixed precision, and the jit-able train_step builder."""
+
+from .adam import AdamConfig, adam_init, adam_update, abstract_opt_state
+from .train_step import TrainStepConfig, make_train_step
+
+__all__ = [k for k in dir() if not k.startswith("_")]

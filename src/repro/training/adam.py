@@ -1,0 +1,81 @@
+"""Adam/AdamW from scratch, with a moment-dtype knob.
+
+Moment dtype (``state_dtype``) is an execution-plan knob: fp32 moments cost
+8 bytes/param; bf16 moments cost 4 — the difference decides whether e.g.
+grok-1-314b fits a 256-chip pod (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: str = "float32"
+    grad_clip: float = 1.0
+
+
+def adam_init(params, cfg: AdamConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(params, cfg: AdamConfig):
+    """ShapeDtypeStruct opt state mirroring ``adam_init`` (dry-run)."""
+    dt = jnp.dtype(cfg.state_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "mu": jax.tree.map(sds, params),
+        "nu": jax.tree.map(sds, params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adam_update(grads, opt_state, params, cfg: AdamConfig):
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    count = opt_state["count"] + 1
+    gnorm = _global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    dt = jnp.dtype(cfg.state_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    t = count.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g32
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mhat = mu32 / (1 - b1 ** t)
+        nhat = nu32 / (1 - b2 ** t)
+        step = cfg.lr * mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if cfg.weight_decay > 0:
+            step = step + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - step).astype(p.dtype),
+                mu32.astype(dt), nu32.astype(dt))
+
+    out = jax.tree.map(upd, grads, opt_state["mu"], opt_state["nu"], params)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, gnorm

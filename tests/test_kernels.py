@@ -1,0 +1,161 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestMogdMLP:
+    @pytest.mark.parametrize("batch", [1, 7, 256, 300])
+    @pytest.mark.parametrize("depth", [1, 2, 4])
+    def test_matches_ref(self, batch, depth):
+        ks = _keys(depth + 2, seed=batch * 10 + depth)
+        dims = [24] + [128] * depth + [1]
+        ws = [jax.random.normal(ks[i], (dims[i], dims[i + 1])) * 0.1
+              for i in range(len(dims) - 1)]
+        bs = [jnp.zeros(d) for d in dims[1:]]
+        x = jax.random.normal(ks[-1], (batch, 24))
+        got = ops.mlp_forward(x, ws, bs)
+        want = ref.mlp_forward(x, ws, bs)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_paper_model_shape(self):
+        """The paper's latency model: 4 hidden layers x 128, ReLU."""
+        ks = _keys(6)
+        dims = [12, 128, 128, 128, 128, 1]
+        ws = [jax.random.normal(ks[i], (dims[i], dims[i + 1])) * 0.2
+              for i in range(5)]
+        bs = [jax.random.normal(ks[i], (dims[i + 1],)) * 0.1
+              for i in range(5)]
+        x = jax.random.uniform(ks[5], (1024, 12))
+        np.testing.assert_allclose(ops.mlp_forward(x, ws, bs),
+                                   ref.mlp_forward(x, ws, bs),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestParetoFilter:
+    @pytest.mark.parametrize("n,k", [(10, 2), (128, 2), (333, 3), (513, 4)])
+    def test_matches_ref(self, n, k):
+        F = jax.random.normal(jax.random.PRNGKey(n + k), (n, k))
+        got = np.asarray(ops.pareto_mask(F))
+        want = np.asarray(ref.pareto_counts(F) == 0)
+        np.testing.assert_array_equal(got, want)
+
+    @given(st.integers(2, 60), st.integers(2, 3), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_property_mask_is_mutually_nondominated(self, n, k, seed):
+        F = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n, k)))
+        mask = np.asarray(ops.pareto_mask(F))
+        kept = F[mask]
+        assert mask.any()
+        # no kept point dominates another kept point
+        le = (kept[:, None] <= kept[None, :]).all(-1)
+        lt = (kept[:, None] < kept[None, :]).any(-1)
+        assert not (le & lt).any()
+
+    def test_duplicates_kept_together(self):
+        F = np.array([[0.0, 0.0], [0.0, 0.0], [1.0, 1.0]])
+        mask = np.asarray(ops.pareto_mask(F))
+        assert mask.tolist() == [True, True, False]
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,H,Hk,dh", [
+        (128, 4, 4, 32), (256, 8, 2, 64), (512, 4, 1, 128), (256, 6, 3, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, S, H, Hk, dh, dtype):
+        ks = _keys(3, seed=S + H)
+        q = jax.random.normal(ks[0], (2, S, H, dh), dtype)
+        k = jax.random.normal(ks[1], (2, S, Hk, dh), dtype)
+        v = jax.random.normal(ks[2], (2, S, Hk, dh), dtype)
+        got = ops.flash_attention(q, k, v)
+        rep = H // Hk
+        want = ref.flash_attention(q, jnp.repeat(k, rep, 2),
+                                   jnp.repeat(v, rep, 2))
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_non_causal(self):
+        ks = _keys(3)
+        q, k, v = (jax.random.normal(kk, (1, 256, 2, 32)) for kk in ks)
+        got = ops.flash_attention(q, k, v, causal=False)
+        want = ref.flash_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_block_shape_independence(self):
+        """Block size must not change the math."""
+        ks = _keys(3, seed=9)
+        q, k, v = (jax.random.normal(kk, (1, 512, 2, 64)) for kk in ks)
+        a = ops.flash_attention(q, k, v, bq=128, bk=128)
+        b = ops.flash_attention(q, k, v, bq=256, bk=64)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+class TestRwkvWKV:
+    @pytest.mark.parametrize("T,H,dh,chunk", [
+        (64, 2, 16, 16), (256, 3, 32, 64), (128, 40, 64, 128),
+    ])
+    def test_matches_ref(self, T, H, dh, chunk):
+        ks = _keys(5, seed=T + H)
+        B = 2
+        r, k, v = (jax.random.normal(kk, (B, T, H, dh)) for kk in ks[:3])
+        w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, dh)) * 0.5))
+        u = jax.random.normal(ks[4], (H, dh)) * 0.5
+        got = ops.rwkv_wkv(r, k, v, w, u, chunk=chunk)
+        want, _ = ref.rwkv6_wkv(r, k, v, w, u)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_chunk_independence(self):
+        ks = _keys(5, seed=3)
+        r, k, v = (jax.random.normal(kk, (1, 128, 2, 16)) for kk in ks[:3])
+        w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (1, 128, 2, 16))))
+        u = jax.random.normal(ks[4], (2, 16))
+        a = ops.rwkv_wkv(r, k, v, w, u, chunk=32)
+        b = ops.rwkv_wkv(r, k, v, w, u, chunk=128)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+class TestMambaScan:
+    @pytest.mark.parametrize("T,d,n,chunk,bd", [
+        (64, 32, 4, 16, 32), (256, 64, 8, 64, 32), (128, 512, 16, 128, 512),
+    ])
+    def test_matches_ref(self, T, d, n, chunk, bd):
+        ks = _keys(5, seed=T + d)
+        B = 2
+        dt = jax.nn.softplus(jax.random.normal(ks[0], (B, T, d)))
+        Bt = jax.random.normal(ks[1], (B, T, n))
+        Ct = jax.random.normal(ks[2], (B, T, n))
+        xs = jax.random.normal(ks[3], (B, T, d))
+        A = -jnp.exp(jax.random.normal(ks[4], (d, n)) * 0.3)
+        got = ops.mamba_selective_scan(dt, Bt, Ct, xs, A, chunk=chunk,
+                                       block_d=bd)
+        want, _ = ref.mamba_scan(dt, Bt, Ct, xs, A)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    @given(st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_property_decay_bounds(self, seed):
+        """With C == B == 1-hot and x >= 0, outputs stay bounded by the
+        running sum of inputs (A < 0 => decay contracts)."""
+        ks = _keys(4, seed=seed)
+        B, T, d, n = 1, 32, 8, 2
+        dt = jax.nn.softplus(jax.random.normal(ks[0], (B, T, d)))
+        xs = jnp.abs(jax.random.normal(ks[1], (B, T, d)))
+        Bt = jnp.ones((B, T, n))
+        Ct = jnp.ones((B, T, n))
+        A = -jnp.exp(jax.random.normal(ks[2], (d, n)) * 0.2)
+        y = ops.mamba_selective_scan(dt, Bt, Ct, xs, A, chunk=16, block_d=8)
+        bound = n * jnp.cumsum(dt * xs, axis=1) + 1e-4
+        assert bool(jnp.all(y <= bound + 1e-3))

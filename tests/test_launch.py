@@ -1,0 +1,124 @@
+"""Launch-layer unit tests: execution plans, sharding-rule resolution for
+the production mesh (shape-faked — no 512 devices needed), and roofline
+helpers (HLO collective parsing, SSM corrections, model flops)."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import ShardingRules, logical_spec
+from repro.launch.plans import Plan, apply_plan, baseline_plan, rules_for
+from repro.launch.roofline import (
+    CollectiveStats,
+    model_flops_for,
+    parse_collectives,
+    roofline_terms,
+    ssm_scan_correction,
+)
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class FakeMeshMP:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+class TestPlans:
+    def test_baseline_kinds(self):
+        cfg = get_config("qwen3-4b")
+        tr = baseline_plan(cfg, SHAPES["train_4k"])
+        assert tr.fsdp and tr.remat == "dots" and tr.param_dtype == "float32"
+        de = baseline_plan(cfg, SHAPES["decode_32k"])
+        assert not de.fsdp and de.param_dtype == "bfloat16"
+        lo = baseline_plan(cfg, SHAPES["long_500k"])
+        assert lo.seq_shard_all
+
+    def test_apply_plan_threads_knobs(self):
+        cfg = get_config("qwen2-moe-a2.7b")
+        out = apply_plan(cfg, Plan(remat="full", moe_impl="gather",
+                                   moe_group=256))
+        assert out.remat == "full" and out.moe_impl == "gather"
+        assert out.moe.group_size == 256
+
+    def test_moe_fallback_rules(self):
+        cfg = get_config("qwen2-moe-a2.7b")  # 60 experts % 16 != 0
+        rules = rules_for(cfg, SHAPES["train_4k"], FakeMesh(), Plan())
+        assert rules.physical("expert") == ()
+        assert rules.physical("expert_ff") == ("model",)
+        jam = get_config("jamba-v0.1-52b")  # 16 experts divide => EP kept
+        rules2 = rules_for(jam, SHAPES["train_4k"], FakeMesh(), Plan())
+        assert rules2.physical("expert") == ("model",)
+
+    def test_head_fallback_rules(self):
+        mg = get_config("musicgen-medium")  # 24 heads % 16 != 0
+        rules = rules_for(mg, SHAPES["train_4k"], FakeMesh(), Plan())
+        assert rules.physical("attn_batch") == ("data", "model")
+        ok = get_config("qwen3-4b")  # 32 heads divide
+        rules2 = rules_for(ok, SHAPES["train_4k"], FakeMesh(), Plan())
+        assert rules2.physical("attn_batch") == ("data",)
+
+    def test_pure_dp_rules(self):
+        cfg = get_config("internvl2-76b")
+        rules = rules_for(cfg, SHAPES["train_4k"], FakeMeshMP(),
+                          Plan(pure_dp=True, fsdp_span="all"))
+        assert rules.physical("batch") == ("pod", "data", "model")
+        assert rules.physical("d_ff") == ()
+        assert rules.physical("d_model") == ("data", "model")
+        # weight spec: FSDP over data+model on the d_model dim
+        spec = logical_spec(rules, ("d_model", "d_ff"), (8192, 28672))
+        assert spec == P(("data", "model"), None)
+
+
+class TestRooflineHelpers:
+    HLO = """
+  %ag = f32[16,4096,1024]{2,1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={2}
+  %ar = bf16[16,4096,8192]{2,1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[16,256]{1,0} reduce-scatter(%z), replica_groups=[2,8]<=[16]
+  %cp = bf16[8,128]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+
+    def test_parse_collectives(self):
+        st = parse_collectives(self.HLO, default_group=256)
+        assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                             "reduce-scatter": 1, "collective-permute": 1}
+        ag = 16 * 4096 * 1024 * 4 * (15 / 16)
+        ar = 16 * 4096 * 8192 * 2 * 2 * (3 / 4)
+        rs = 16 * 256 * 4 * 7
+        cp = 8 * 128 * 2
+        assert np.isclose(st.wire_bytes, ag + ar + rs + cp, rtol=1e-6)
+
+    def test_roofline_terms_bottleneck(self):
+        st = CollectiveStats(wire_bytes=50e9)  # exactly 1 s of ICI
+        rf = roofline_terms({"flops": 197e12 * 2, "bytes accessed": 819e9},
+                            st, chips=256, model_flops=197e12 * 2 * 256)
+        assert rf.compute_s == pytest.approx(2.0)
+        assert rf.memory_s == pytest.approx(1.0)
+        assert rf.collective_s == pytest.approx(1.0)
+        assert rf.bottleneck == "compute"
+        assert rf.useful_ratio == pytest.approx(1.0)
+
+    def test_ssm_correction_only_for_ssm(self):
+        mesh = {"data": 16, "model": 16}
+        dense = get_config("qwen3-4b")
+        assert ssm_scan_correction(dense, SHAPES["train_4k"], mesh) == (0, 0)
+        rwkv = get_config("rwkv6-3b")
+        f, b = ssm_scan_correction(rwkv, SHAPES["train_4k"], mesh)
+        assert f > 0 and b > 0
+        # decode touches the state once per layer, not per token
+        f1, b1 = ssm_scan_correction(rwkv, SHAPES["decode_32k"], mesh)
+        assert b1 < b / 1000
+
+    def test_model_flops(self):
+        cfg = get_config("qwen3-4b")
+        tr = model_flops_for(cfg, SHAPES["train_4k"])
+        pf = model_flops_for(cfg, SHAPES["prefill_32k"])
+        de = model_flops_for(cfg, SHAPES["decode_32k"])
+        n = cfg.param_count(active_only=True)
+        assert tr == pytest.approx(6 * n * SHAPES["train_4k"].tokens)
+        assert pf == pytest.approx(2 * n * SHAPES["prefill_32k"].tokens)
+        assert de == pytest.approx(2 * n * 128)

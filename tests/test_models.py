@@ -1,0 +1,137 @@
+"""Tests for the modeling engine (DNN/GP surrogates) + workload substrate."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MOGDConfig, solve_pf
+from repro.data import (
+    batch_problem,
+    batch_suite,
+    default_config,
+    generate_traces,
+    streaming_problem,
+    streaming_suite,
+)
+from repro.models import (
+    TrainConfig,
+    fit_gp,
+    fit_mlp,
+    mlp_forward,
+    init_mlp,
+    MLPSpec,
+    regression_report,
+)
+
+
+@pytest.fixture(scope="module")
+def traces():
+    prob = batch_problem(batch_suite(2)[0])
+    X, Y = generate_traces(prob, 500, noise=0.05, seed=1)
+    return prob, X, Y
+
+
+class TestMLP:
+    def test_forward_shapes(self):
+        spec = MLPSpec(in_dim=5, hidden=(16, 16), out_dim=1)
+        params = init_mlp(jax.random.PRNGKey(0), spec)
+        y = mlp_forward(params, jnp.ones((7, 5)))
+        assert y.shape == (7, 1)
+
+    def test_fit_quality(self, traces):
+        prob, X, Y = traces
+        m = fit_mlp(X, Y[:, 0], hidden=(64, 64, 64),
+                    config=TrainConfig(max_epochs=60), log_target=True)
+        rep = regression_report(m, X, Y[:, 0])
+        assert rep["mape"] < 0.35  # paper band: 10-40%
+
+    def test_differentiable(self, traces):
+        prob, X, Y = traces
+        m = fit_mlp(X, Y[:, 0], hidden=(32, 32),
+                    config=TrainConfig(max_epochs=20), log_target=True)
+        g = jax.grad(lambda x: m(x))(jnp.asarray(X[0]))
+        assert g.shape == X[0].shape and np.isfinite(np.asarray(g)).all()
+
+    def test_mc_dropout_std_positive(self, traces):
+        prob, X, Y = traces
+        m = fit_mlp(X, Y[:, 0], hidden=(32, 32),
+                    config=TrainConfig(max_epochs=10, dropout=0.1))
+        s = m.predict_std(jnp.asarray(X[:4]))
+        assert s.shape == (4,) and np.all(np.asarray(s) >= 0)
+
+
+class TestGP:
+    def test_interpolates_training_data(self):
+        rng = np.random.default_rng(0)
+        X = rng.random((50, 3))
+        y = np.sin(3 * X[:, 0]) + X[:, 1]
+        g = fit_gp(X, y, noise=1e-6)
+        pred = np.asarray(g(jnp.asarray(X)))
+        assert np.abs(pred - y).max() < 1e-2
+
+    def test_std_shrinks_at_train_points(self):
+        rng = np.random.default_rng(0)
+        X = rng.random((40, 2))
+        y = X.sum(1)
+        g = fit_gp(X, y, noise=1e-6)
+        s_train = float(np.mean(np.asarray(g.predict_std(jnp.asarray(X)))))
+        far = jnp.asarray(rng.random((40, 2)) * 5 + 5)
+        s_far = float(np.mean(np.asarray(g.predict_std(far))))
+        assert s_train < s_far
+
+    def test_differentiable(self):
+        rng = np.random.default_rng(0)
+        X = rng.random((30, 3))
+        g = fit_gp(X, X[:, 0] ** 2)
+        grad = jax.grad(lambda x: g(x))(jnp.asarray(X[0]))
+        assert np.isfinite(np.asarray(grad)).all()
+
+
+class TestWorkloads:
+    def test_suite_sizes(self):
+        assert len(batch_suite(258)) == 258
+        assert len(streaming_suite(63)) == 63
+
+    def test_latency_cost_conflict(self):
+        """More cores -> lower latency, higher cost rate (tradeoff exists)."""
+        w = batch_suite(1)[0]
+        prob = batch_problem(w)
+        small = dict(default_config(), num_executors=2, cores_per_executor=1)
+        big = dict(default_config(), num_executors=32, cores_per_executor=8)
+        xs = jnp.asarray(prob.encoder.encode(small))
+        xb = jnp.asarray(prob.encoder.encode(big))
+        fs, fb = prob.objectives(xs), prob.objectives(xb)
+        assert fb[0] < fs[0]  # big cluster is faster
+
+    def test_streaming_capacity_saturation(self):
+        w = streaming_suite(1)[0]
+        prob = streaming_problem(w, k=2)
+        big = dict(default_config(), num_executors=32, cores_per_executor=8)
+        x = jnp.asarray(prob.encoder.encode(big))
+        f = prob.objectives(x)
+        assert -f[1] <= w.rate_rec_s * (1 + 1e-6)  # throughput <= offered
+
+    def test_traces_have_noise(self):
+        prob = batch_problem(batch_suite(1)[0])
+        X, Y = generate_traces(prob, 64, noise=0.1, seed=0)
+        Ytrue = np.asarray(prob.evaluate_batch(jnp.asarray(X)))
+        assert not np.allclose(Y, Ytrue)
+        assert np.median(np.abs(Y - Ytrue) / Ytrue) < 0.5
+
+
+class TestEndToEndSurrogateMOO:
+    def test_pf_on_learned_models(self, traces):
+        """Integration: train surrogates on traces, run PF on them (the
+        paper's actual pipeline: modeling engine -> MOO)."""
+        prob, X, Y = traces
+        lat = fit_mlp(X, Y[:, 0], hidden=(32, 32),
+                      config=TrainConfig(max_epochs=30), log_target=True)
+        cost = fit_mlp(X, Y[:, 1], hidden=(32, 32),
+                       config=TrainConfig(max_epochs=30), log_target=True)
+        w = batch_suite(2)[0]
+        surro = batch_problem(w, models={"latency": lat, "cost": cost})
+        res = solve_pf(surro, mode="AP", n_probes=20,
+                       mogd=MOGDConfig(steps=60, multistart=4))
+        assert len(res.F) >= 3
+        assert np.isfinite(res.F).all()

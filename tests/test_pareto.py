@@ -1,0 +1,123 @@
+"""Property + unit tests for Pareto primitives (paper Defs. 3.1-3.3)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    crowding_distance,
+    dominates,
+    hypervolume,
+    hypervolume_2d,
+    pareto_filter,
+    pareto_filter_masked,
+    pareto_mask,
+)
+
+
+def _points(draw_k=2, nmax=40):
+    return st.lists(
+        st.tuples(*([st.floats(-100, 100, allow_nan=False, width=32)] * draw_k)),
+        min_size=1,
+        max_size=nmax,
+    )
+
+
+class TestDomination:
+    def test_simple(self):
+        assert bool(dominates(jnp.array([1.0, 1.0]), jnp.array([2.0, 2.0])))
+        assert bool(dominates(jnp.array([1.0, 2.0]), jnp.array([1.0, 3.0])))
+        assert not bool(dominates(jnp.array([1.0, 3.0]), jnp.array([2.0, 2.0])))
+
+    def test_equal_points_do_not_dominate(self):
+        p = jnp.array([1.0, 2.0])
+        assert not bool(dominates(p, p))
+
+    @given(_points())
+    @settings(max_examples=50, deadline=None)
+    def test_antisymmetric(self, pts):
+        arr = jnp.asarray(np.array(pts, dtype=np.float64))
+        a, b = arr[0], arr[-1]
+        assert not (bool(dominates(a, b)) and bool(dominates(b, a)))
+
+
+class TestParetoMask:
+    @given(_points())
+    @settings(max_examples=50, deadline=None)
+    def test_survivors_mutually_nondominated(self, pts):
+        arr = np.array(pts, dtype=np.float64)
+        mask = np.asarray(pareto_mask(jnp.asarray(arr)))
+        surv = arr[mask]
+        for i in range(len(surv)):
+            for j in range(len(surv)):
+                if i != j:
+                    assert not bool(
+                        dominates(jnp.asarray(surv[i]), jnp.asarray(surv[j]))
+                    )
+
+    @given(_points())
+    @settings(max_examples=50, deadline=None)
+    def test_eliminated_are_dominated_by_a_survivor(self, pts):
+        arr = np.array(pts, dtype=np.float64)
+        mask = np.asarray(pareto_mask(jnp.asarray(arr)))
+        surv = arr[mask]
+        for i in np.where(~mask)[0]:
+            assert any(
+                bool(dominates(jnp.asarray(s), jnp.asarray(arr[i]))) for s in surv
+            )
+
+    @given(_points(draw_k=3, nmax=25))
+    @settings(max_examples=30, deadline=None)
+    def test_3d(self, pts):
+        arr = np.array(pts, dtype=np.float64)
+        mask = np.asarray(pareto_mask(jnp.asarray(arr)))
+        assert mask.any()  # at least one non-dominated point always exists
+
+    def test_masked_variant(self):
+        pts = jnp.asarray([[0.0, 0.0], [1.0, 1.0], [2.0, 2.0]])
+        valid = jnp.asarray([False, True, True])
+        m = np.asarray(pareto_filter_masked(pts, valid))
+        assert m.tolist() == [False, True, False]
+
+    def test_filter_returns_payload(self):
+        pts = np.array([[1.0, 2.0], [2.0, 1.0], [3.0, 3.0]])
+        pay = np.array([10, 20, 30])
+        f, p = pareto_filter(pts, pay)
+        assert len(f) == 2 and set(p.tolist()) == {10, 20}
+
+
+class TestHypervolume:
+    def test_single_point(self):
+        assert hypervolume_2d(np.array([[0.0, 0.0]]), np.array([1.0, 1.0])) == 1.0
+
+    def test_dominated_point_adds_nothing(self):
+        a = hypervolume_2d(np.array([[0.0, 0.0]]), np.array([1.0, 1.0]))
+        b = hypervolume_2d(
+            np.array([[0.0, 0.0], [0.5, 0.5]]), np.array([1.0, 1.0])
+        )
+        assert a == b
+
+    def test_monotone_in_points(self):
+        ref = np.array([1.0, 1.0])
+        base = np.array([[0.5, 0.1]])
+        more = np.array([[0.5, 0.1], [0.1, 0.5]])
+        assert hypervolume_2d(more, ref) >= hypervolume_2d(base, ref)
+
+    def test_3d_cube(self):
+        pts = np.array([[0.0, 0.0, 0.0]])
+        assert abs(hypervolume(pts, np.array([1.0, 1.0, 1.0])) - 1.0) < 1e-12
+
+    @given(_points())
+    @settings(max_examples=30, deadline=None)
+    def test_nonnegative(self, pts):
+        arr = np.array(pts, dtype=np.float64)
+        assert hypervolume_2d(arr, np.array([200.0, 200.0])) >= 0.0
+
+
+class TestCrowding:
+    def test_extremes_infinite(self):
+        pts = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+        cd = crowding_distance(pts)
+        assert np.isinf(cd[0]) and np.isinf(cd[-1])
+        assert np.isfinite(cd[1]) and np.isfinite(cd[2])

@@ -1,0 +1,230 @@
+"""Tests for PF algorithms, MOGD, hyperrectangles, and baselines."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MOGDConfig,
+    MOGDSolver,
+    ProgressiveFrontier,
+    RectangleQueue,
+    estimate_objective_bounds,
+    grid_cells,
+    hypervolume_2d,
+    make_rectangle,
+    nsga2,
+    normalized_constraints,
+    pareto_mask,
+    solve_pf,
+    split_rectangle,
+    utopia_nearest,
+    weight_lattice,
+    weighted_sum,
+    weighted_utopia_nearest,
+)
+
+FAST = MOGDConfig(steps=80, multistart=6)
+
+
+class TestHyperrectangle:
+    def test_split_2d_keeps_two(self):
+        subs = split_rectangle(np.zeros(2), np.array([0.4, 0.6]), np.ones(2))
+        assert len(subs) == 2
+        vols = sorted(r.volume for r in subs)
+        assert np.isclose(sum(vols), 0.4 * 0.4 + 0.6 * 0.6)
+
+    def test_split_3d_keeps_six(self):
+        subs = split_rectangle(np.zeros(3), np.full(3, 0.5), np.ones(3))
+        assert len(subs) == 2**3 - 2
+
+    @given(st.lists(st.floats(0.05, 0.95), min_size=2, max_size=4))
+    @settings(max_examples=30, deadline=None)
+    def test_split_volume_conservation(self, mids):
+        """kept + dominated-corner + dominating-corner == total volume."""
+        k = len(mids)
+        u, n, m = np.zeros(k), np.ones(k), np.array(mids)
+        subs = split_rectangle(u, m, n)
+        kept = sum(r.volume for r in subs)
+        corners = np.prod(m - u) + np.prod(n - m)
+        assert np.isclose(kept + corners, 1.0, atol=1e-9)
+
+    def test_grid_cells_partition(self):
+        cells = grid_cells(np.zeros(2), np.ones(2), 3)
+        assert len(cells) == 9
+        assert np.isclose(sum(c.volume for c in cells), 1.0)
+
+    def test_queue_accounting(self):
+        q = RectangleQueue(make_rectangle(np.zeros(2), np.ones(2)))
+        assert q.uncertain_fraction == 1.0
+        r = q.pop()
+        assert q.uncertain_fraction == 0.0
+        for sub in split_rectangle(r.utopia, np.full(2, 0.5), r.nadir):
+            q.push(sub)
+        assert 0.0 < q.uncertain_fraction < 1.0
+        # pop returns the largest-volume rectangle first
+        vols = []
+        while len(q):
+            vols.append(q.pop().volume)
+        assert vols == sorted(vols, reverse=True)
+
+
+class TestMOGD:
+    def test_single_objective_reaches_optimum(self, sphere2):
+        solver = MOGDSolver(sphere2, MOGDConfig(steps=150, multistart=8))
+        bounds = estimate_objective_bounds(sphere2)
+        res = solver.solve_single_objective(0, bounds)
+        assert bool(res.feasible[0])
+        assert res.f[0, 0] < 0.01  # min |x-a|^2 = 0
+
+    def test_constraint_satisfaction(self, zdt1):
+        solver = MOGDSolver(zdt1, MOGDConfig(steps=200, multistart=8))
+        box = np.array([[0.2, 0.2], [0.9, 0.6]])
+        res = solver.solve(box[None], target=0)
+        assert bool(res.feasible[0])
+        f = res.f[0]
+        assert np.all(f >= box[0] - 1e-2) and np.all(f <= box[1] + 1e-2)
+
+    def test_infeasible_box_detected(self, zdt1):
+        # Region strictly below the true front f2 = 1 - sqrt(f1) is empty.
+        solver = MOGDSolver(zdt1, MOGDConfig(steps=150, multistart=8))
+        box = np.array([[0.0, 0.0], [0.04, 0.5]])  # front needs f2 >= 0.8
+        res = solver.solve(box[None], target=0)
+        assert not bool(res.feasible[0])
+
+    def test_batch_shapes(self, sphere2):
+        solver = MOGDSolver(sphere2, FAST)
+        boxes = np.stack(
+            [np.array([[0.0, 0.0], [2.0, 2.0]]) for _ in range(5)]
+        )
+        res = solver.solve(boxes, target=0)
+        assert res.x.shape == (5, sphere2.dim)
+        assert res.f.shape == (5, 2)
+        assert res.feasible.shape == (5,)
+
+    def test_mixed_space_snap(self, mixed_problem):
+        solver = MOGDSolver(mixed_problem, FAST)
+        bounds = estimate_objective_bounds(mixed_problem)
+        res = solver.solve_single_objective(0, bounds)
+        cfg = mixed_problem.encoder.decode(res.x[0])
+        assert cfg["mode"] in ("slow", "fast", "turbo")
+        assert isinstance(cfg["n"], int) and 1 <= cfg["n"] <= 8
+        # latency-minimal: wants big n / turbo
+        assert cfg["n"] >= 6 and cfg["mode"] == "turbo"
+
+    def test_uncertainty_conservative(self, sphere2):
+        """alpha>0 optimizes mean + alpha*std: higher (more conservative)
+        reported objective than alpha=0 on the same problem."""
+        import dataclasses
+
+        prob = dataclasses.replace(sphere2) if False else sphere2
+        std_fn = lambda x: jnp.ones(2) * 0.3
+        from repro.core import MOOProblem
+
+        p2 = MOOProblem(
+            specs=sphere2.specs,
+            objectives=sphere2.objectives,
+            k=2,
+            objective_stds=std_fn,
+        )
+        s0 = MOGDSolver(p2, MOGDConfig(steps=100, multistart=4, alpha=0.0))
+        s1 = MOGDSolver(p2, MOGDConfig(steps=100, multistart=4, alpha=1.0))
+        b = estimate_objective_bounds(p2)
+        f0 = s0.solve_single_objective(0, b).f[0, 0]
+        f1 = s1.solve_single_objective(0, b).f[0, 0]
+        # alpha enters the loss, not the reported mean; both should solve,
+        # and the alpha-solution cannot be better than the direct optimum.
+        assert f1 >= f0 - 1e-3
+
+
+class TestProgressiveFrontier:
+    @pytest.mark.parametrize("mode", ["AS", "AP"])
+    def test_zdt1_front_recovery(self, zdt1, mode):
+        res = solve_pf(zdt1, mode=mode, n_probes=40,
+                       mogd=MOGDConfig(steps=120, multistart=8))
+        assert len(res.F) >= 5
+        resid = np.abs(res.F[:, 1] - (1 - np.sqrt(np.clip(res.F[:, 0], 0, 1))))
+        assert resid.mean() < 0.12
+        # returned set is mutually non-dominated
+        assert np.asarray(pareto_mask(jnp.asarray(res.F))).all()
+
+    def test_uncertain_space_monotone_decreasing(self, zdt1):
+        res = solve_pf(zdt1, mode="AP", n_probes=30, mogd=FAST)
+        fracs = [row[1] for row in res.trace]
+        assert fracs[0] == 1.0 or fracs[0] <= 1.0
+        assert all(b <= a + 1e-12 for a, b in zip(fracs, fracs[1:]))
+        assert fracs[-1] < 0.6
+
+    def test_incremental_resume_extends(self, zdt1):
+        pf = ProgressiveFrontier(zdt1, mode="AP", mogd=FAST)
+        r1 = pf.run(n_probes=8)
+        n1, u1 = len(r1.F), r1.state.queue.uncertain_fraction
+        r2 = pf.run(n_probes=16, state=r1.state)
+        assert r2.probes > r1.probes
+        assert r2.state.queue.uncertain_fraction <= u1 + 1e-12
+        assert len(r2.F) >= n1  # frontier only grows (after filtering, >=)
+
+    def test_3d_objectives(self, dtlz2_3d):
+        res = solve_pf(dtlz2_3d, mode="AP", n_probes=40, mogd=FAST)
+        assert len(res.F) >= 4
+        # DTLZ2 front: |f| = 1. allow slack for approximate solver
+        norms = np.linalg.norm(res.F, axis=1)
+        assert np.median(np.abs(norms - 1.0)) < 0.25
+
+    def test_pf_s_reference_mode(self, sphere2):
+        res = solve_pf(sphere2, mode="S", n_probes=4, mogd=FAST)
+        assert len(res.F) >= 2
+
+
+class TestBaselines:
+    def test_weight_lattice(self):
+        w = weight_lattice(2, 5)
+        assert w.shape == (5, 2)
+        assert np.allclose(w.sum(1), 1.0)
+        w3 = weight_lattice(3, 10)
+        assert np.allclose(w3.sum(1), 1.0) and len(w3) >= 10
+
+    def test_ws_on_convex_front(self, sphere2):
+        r = weighted_sum(sphere2, n_probes=8, mogd=FAST)
+        assert len(r.F) >= 3
+        assert np.asarray(pareto_mask(jnp.asarray(r.F))).all()
+
+    def test_nc_coverage(self, zdt1):
+        r = normalized_constraints(zdt1, n_probes=8, mogd=FAST)
+        assert len(r.F) >= 3
+
+    def test_nsga2_improves_with_budget(self, zdt1):
+        ref = np.array([1.5, 12.0])
+        r_small = nsga2(zdt1, n_probes=100, pop_size=24, n_gens=5, seed=0)
+        r_big = nsga2(zdt1, n_probes=100, pop_size=24, n_gens=40, seed=0)
+        hv_s = hypervolume_2d(r_small.F, ref)
+        hv_b = hypervolume_2d(r_big.F, ref)
+        assert hv_b >= hv_s - 1e-6
+
+    def test_pf_beats_ws_coverage_on_zdt1(self, zdt1):
+        """The paper's core coverage claim (Fig 4b-c), as an assertion."""
+        from repro.core import coverage_spread
+
+        pf = solve_pf(zdt1, mode="AP", n_probes=60,
+                      mogd=MOGDConfig(steps=120, multistart=8))
+        ws = weighted_sum(zdt1, n_probes=10,
+                          mogd=MOGDConfig(steps=120, multistart=8))
+        assert len(pf.F) >= len(ws.F)
+        ref = np.array([1.5, 1.5])
+        assert hypervolume_2d(pf.F, ref) >= hypervolume_2d(ws.F, ref) - 0.05
+
+
+class TestRecommendation:
+    def test_un_is_on_frontier(self):
+        F = np.array([[0.0, 1.0], [0.4, 0.4], [1.0, 0.0]])
+        i = utopia_nearest(F, np.zeros(2), np.ones(2))
+        assert i == 1  # balanced point nearest utopia
+
+    def test_wun_follows_weights(self):
+        F = np.array([[0.05, 1.0], [0.5, 0.5], [1.0, 0.05]])
+        u, n = np.zeros(2), np.ones(2)
+        i_lat = weighted_utopia_nearest(F, u, n, (0.9, 0.1))
+        i_cost = weighted_utopia_nearest(F, u, n, (0.1, 0.9))
+        assert F[i_lat][0] <= F[i_cost][0]
+        assert F[i_cost][1] <= F[i_lat][1]

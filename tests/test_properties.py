@@ -1,0 +1,125 @@
+"""Hypothesis property tests on system invariants (encoder round trips,
+recommendation invariances, PF geometry, checkpoint idempotence)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    boolean,
+    categorical,
+    continuous,
+    integer,
+    utopia_nearest,
+    weighted_utopia_nearest,
+)
+from repro.core.problem import SpaceEncoder
+
+
+def _spec_strategy():
+    return st.lists(
+        st.sampled_from([
+            continuous("c1", 0.0, 1.0),
+            continuous("c2", -5.0, 5.0),
+            integer("i1", 1, 9),
+            integer("i2", 0, 100),
+            boolean("b1"),
+            categorical("k1", ("a", "b", "c")),
+            categorical("k2", (1, 2, 4, 8)),
+        ]),
+        min_size=1, max_size=5, unique_by=lambda s: s.name)
+
+
+class TestEncoderProperties:
+    @given(_spec_strategy(), st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_decode_encode_roundtrip(self, specs, seed):
+        """decode(encode(cfg)) == cfg for any snapped point."""
+        import jax
+
+        enc = SpaceEncoder(specs)
+        x = np.asarray(enc.snap(
+            jax.random.uniform(jax.random.PRNGKey(seed), (enc.dim,))))
+        cfg = enc.decode(x)
+        x2 = enc.encode(cfg)
+        assert enc.decode(x2) == cfg
+
+    @given(_spec_strategy(), st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_snap_idempotent(self, specs, seed):
+        import jax
+        import jax.numpy as jnp
+
+        enc = SpaceEncoder(specs)
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (enc.dim,))
+        s1 = enc.snap(x)
+        s2 = enc.snap(s1)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   atol=1e-7)
+
+    @given(_spec_strategy())
+    @settings(max_examples=30, deadline=None)
+    def test_decode_soft_categorical_convex(self, specs):
+        import jax
+        import jax.numpy as jnp
+
+        enc = SpaceEncoder(specs)
+        x = jax.random.uniform(jax.random.PRNGKey(0), (enc.dim,)) + 0.01
+        soft = enc.decode_soft(x)
+        for s in specs:
+            if s.kind == "categorical":
+                w = np.asarray(soft[s.name])
+                assert w.min() >= 0
+                assert abs(w.sum() - 1.0) < 1e-5
+
+
+class TestRecommendProperties:
+    @given(st.integers(2, 40), st.integers(2, 4), st.integers(0, 999))
+    @settings(max_examples=40, deadline=None)
+    def test_un_invariant_to_affine_rescale(self, n, k, seed):
+        """UN pick is invariant to per-objective affine rescaling when
+        utopia/nadir are rescaled consistently."""
+        rng = np.random.default_rng(seed)
+        F = rng.uniform(0, 1, (n, k))
+        u, nd = F.min(0) - 0.1, F.max(0) + 0.1
+        i1 = utopia_nearest(F, u, nd)
+        scale = rng.uniform(0.5, 20.0, k)
+        shift = rng.uniform(-5, 5, k)
+        i2 = utopia_nearest(F * scale + shift, u * scale + shift,
+                            nd * scale + shift)
+        assert i1 == i2
+
+    @given(st.integers(3, 30), st.integers(0, 999))
+    @settings(max_examples=40, deadline=None)
+    def test_wun_extreme_weight_picks_extreme_point(self, n, seed):
+        """As w -> (1, 0), the WUN pick converges to the min-F1 point."""
+        rng = np.random.default_rng(seed)
+        F = rng.uniform(0, 1, (n, 2))
+        u, nd = F.min(0), F.max(0)
+        i = weighted_utopia_nearest(F, u, nd, (0.999, 0.001))
+        assert F[i, 0] <= np.quantile(F[:, 0], 0.34) + 1e-9
+
+
+class TestRooflinePropertes:
+    @given(st.floats(1e9, 1e16), st.floats(1e6, 1e13), st.floats(0, 1e13))
+    @settings(max_examples=50, deadline=None)
+    def test_bottleneck_is_argmax(self, flops, nbytes, wire):
+        from repro.launch.roofline import CollectiveStats, roofline_terms
+
+        rf = roofline_terms({"flops": flops, "bytes accessed": nbytes},
+                            CollectiveStats(wire_bytes=wire), chips=256)
+        terms = {"compute": rf.compute_s, "memory": rf.memory_s,
+                 "collective": rf.collective_s}
+        assert rf.bottleneck == max(terms, key=terms.get)
+
+    @given(st.integers(1, 64), st.integers(0, 99))
+    @settings(max_examples=20, deadline=None)
+    def test_collective_parse_scales_with_count(self, n_ops, seed):
+        from repro.launch.roofline import parse_collectives
+
+        line = ("  %ar = f32[64,128]{1,0} all-reduce(%x), "
+                "replica_groups=[16,16]<=[256], to_apply=%add\n")
+        st_ = parse_collectives(line * n_ops, default_group=256)
+        assert st_.counts.get("all-reduce", 0) == n_ops
+        one = parse_collectives(line, default_group=256).wire_bytes
+        assert np.isclose(st_.wire_bytes, n_ops * one)

@@ -1,0 +1,160 @@
+"""Fault-tolerance layer: checkpoint atomicity/integrity/resharding, async
+manager, straggler detection, elastic controller."""
+
+import json
+import os
+import pathlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    CheckpointManager,
+    StragglerMonitor,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.runtime.checkpoint import latest_step
+from repro.runtime.elastic import ElasticController, FailureEvent, simulate_failures
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)),
+                   "b": jnp.zeros(16)},
+        "opt": {"mu": {"w": jnp.ones((8, 16)), "b": jnp.zeros(16)},
+                "count": jnp.int32(7)},
+    }
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        t = _tree()
+        save_checkpoint(tmp_path, 10, t, extra={"loss": 1.5})
+        out, manifest = load_checkpoint(tmp_path, t)
+        assert manifest["step"] == 10
+        assert manifest["extra"]["loss"] == 1.5
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_step_picks_max(self, tmp_path):
+        t = _tree()
+        for s in (5, 20, 15):
+            save_checkpoint(tmp_path, s, t)
+        assert latest_step(tmp_path) == 20
+
+    def test_corruption_detected(self, tmp_path):
+        t = _tree()
+        d = save_checkpoint(tmp_path, 1, t)
+        shard = d / "shard_00000.npz"
+        data = bytearray(shard.read_bytes())
+        data[len(data) // 2] ^= 0xFF
+        shard.write_bytes(bytes(data))
+        with pytest.raises(IOError, match="checksum"):
+            load_checkpoint(tmp_path, t)
+
+    def test_incomplete_write_invisible(self, tmp_path):
+        """A tmp dir without manifest must not be picked up."""
+        t = _tree()
+        save_checkpoint(tmp_path, 1, t)
+        fake = tmp_path / "step_00000099.tmp-abc"
+        fake.mkdir()
+        (fake / "shard_00000.npz").write_bytes(b"garbage")
+        assert latest_step(tmp_path) == 1
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        t = _tree()
+        save_checkpoint(tmp_path, 1, t)
+        bad = jax.tree.map(lambda a: np.zeros((3, 3), a.dtype), t)
+        with pytest.raises(ValueError, match="shape"):
+            load_checkpoint(tmp_path, bad)
+
+    def test_restore_with_target_sharding(self, tmp_path):
+        """Reshard-on-restore: leaves land with the requested sharding."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        t = {"w": jnp.arange(16.0).reshape(4, 4)}
+        save_checkpoint(tmp_path, 1, t)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = {"w": NamedSharding(mesh, P("data", None))}
+        out, _ = load_checkpoint(tmp_path, t, shardings=sh)
+        assert out["w"].sharding == sh["w"]
+
+    def test_async_manager_and_retention(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save_async(s, _tree(s))
+        mgr.wait()
+        steps = sorted(int(d.name.split("_")[1]) for d in tmp_path.iterdir()
+                       if d.name.startswith("step_"))
+        assert steps == [3, 4]
+        out, manifest = mgr.restore_latest(_tree())
+        assert manifest["step"] == 4
+
+
+class TestStraggler:
+    def test_detects_slow_host(self):
+        mon = StragglerMonitor(n_hosts=8, patience=2)
+        base = np.full(8, 1.0)
+        verdicts = []
+        for _ in range(4):
+            times = base.copy()
+            times[3] = 2.5  # persistent straggler
+            verdicts = mon.observe(times)
+        assert any(v.host == 3 for v in verdicts)
+        assert mon.slowdown() > 1.5
+
+    def test_no_false_positive_on_noise(self):
+        rng = np.random.default_rng(0)
+        mon = StragglerMonitor(n_hosts=8, patience=3)
+        flagged = []
+        for _ in range(20):
+            flagged += mon.observe(rng.normal(1.0, 0.02, size=8))
+        assert not flagged
+
+    def test_evict_threshold(self):
+        mon = StragglerMonitor(n_hosts=4, patience=1, z_evict=5.0)
+        times = np.array([1.0, 1.0, 1.0, 50.0])
+        v = mon.observe(times)
+        assert v and v[0].action == "evict"
+
+
+class TestElastic:
+    def test_failure_sim_reproducible(self):
+        a = simulate_failures(1000, seed=42)
+        b = simulate_failures(1000, seed=42)
+        assert [e.step for e in a] == [e.step for e in b]
+        assert all(0 < e.step < 1000 for e in a)
+
+    def test_controller_replans_and_restores(self):
+        calls = {}
+
+        class Rec:
+            num_chips = None
+
+        def replan(chips):
+            calls["chips"] = chips
+            r = Rec()
+            r.num_chips = chips
+            return r
+
+        def rebuild(rec):
+            calls["rebuilt"] = rec.num_chips
+            return ("step_fn", "shardings")
+
+        def restore(sh):
+            calls["restored_with"] = sh
+            return {"params": 1}
+
+        ctl = ElasticController(total_chips=256, replan=replan,
+                                rebuild=rebuild, restore=restore)
+        step_fn, state = ctl.handle(FailureEvent(10, "node_loss", -8))
+        assert calls["chips"] == 248
+        assert ctl.log[-1]["downtime_s"] >= 0
+        assert state == {"params": 1}
+        ctl.handle(FailureEvent(20, "node_join", +8))
+        assert ctl.total_chips == 256
