@@ -23,6 +23,7 @@ SUITES = [
     "solver_compare",    # §4.2: MOGD vs reference solver
     "roofline",          # §Roofline: dry-run artifact table
     "planner_frontier",  # beyond-paper: plan-space Pareto frontier
+    "service_throughput",  # cross-rectangle batching + MOO service rates
     "kernelbench",       # kernel vs oracle + VMEM accounting
 ]
 

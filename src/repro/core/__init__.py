@@ -46,7 +46,9 @@ from .mogd import (
     estimate_objective_bounds,
     grid_reference_solve,
 )
+from .frontier_store import FrontierStore
 from .progressive_frontier import PFResult, PFState, ProgressiveFrontier, solve_pf
+from .synthetic import make_dtlz2, make_mixed_problem, make_sphere2, make_zdt1
 from .baselines import (
     BaselineResult,
     normalized_constraints,
@@ -57,6 +59,7 @@ from .baselines import (
 from .recommend import (
     WorkloadClassWeights,
     classify_workload,
+    select,
     utopia_nearest,
     weighted_single_objective_pick,
     weighted_utopia_nearest,

@@ -100,9 +100,9 @@ def hypervolume(points: Array, ref: Array) -> float:
         zs = np.unique(pts[:, 2])
         hv, prev_z = 0.0, ref[2]
         for z in zs[::-1]:
-            # points with z-coordinate <= z contribute above height z.
-            sl = pts[pts[:, 2] <= prev_z - 1e-18]
-            sl = pts[pts[:, 2] <= z + 1e-18] if len(sl) == 0 else sl
+            # The slab of heights (z, prev_z] contains no point z-coords, so
+            # its dominated cross-section is the union of the 2-D boxes of
+            # exactly the points with z-coordinate <= z.
             area = hypervolume_2d(pts[pts[:, 2] <= z + 1e-18][:, :2], ref[:2])
             hv += area * (prev_z - z)
             prev_z = z
@@ -117,18 +117,18 @@ def crowding_distance(points: Array) -> Array:
     n, k = pts.shape
     if n <= 2:
         return np.full(n, np.inf)
-    dist = np.zeros(n)
-    for j in range(k):
-        order = np.argsort(pts[:, j])
-        fmin, fmax = pts[order[0], j], pts[order[-1], j]
-        dist[order[0]] = dist[order[-1]] = np.inf
-        if fmax - fmin < 1e-30:
-            continue
-        for idx in range(1, n - 1):
-            dist[order[idx]] += (pts[order[idx + 1], j] - pts[order[idx - 1], j]) / (
-                fmax - fmin
-            )
-    return dist
+    order = np.argsort(pts, axis=0)  # (n, k): order[r, j] = r-th smallest
+    srt = np.take_along_axis(pts, order, axis=0)
+    span = srt[-1] - srt[0]  # (k,)
+    # Interior contribution per column: neighbour gap normalized by span;
+    # degenerate columns (zero span) contribute nothing to interior points.
+    inner = np.where(span > 1e-30, (srt[2:] - srt[:-2]) / np.where(
+        span > 1e-30, span, 1.0), 0.0)  # (n-2, k)
+    per_col = np.zeros((n, k))
+    cols = np.arange(k)[None, :]
+    per_col[order[1:-1], cols] = inner
+    per_col[order[[0, -1]], cols] = np.inf  # extremes (also when degenerate)
+    return per_col.sum(axis=1)
 
 
 def coverage_spread(points: Array) -> float:

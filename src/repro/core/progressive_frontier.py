@@ -5,26 +5,33 @@ Three variants share one incremental engine:
 * **PF-S**  — deterministic sequential: middle-point probes solved by the
   dense reference solver (Knitro stand-in).  Slow, used as ground truth.
 * **PF-AS** — approximate sequential: probes solved by MOGD (§4.2).
-* **PF-AP** — approximate parallel: the popped hyperrectangle is split into
-  an ``l^k`` grid and *all* cells' CO problems are solved simultaneously
-  in one vmap-batched MOGD call (the paper's thread pool becomes a SIMD
-  batch — DESIGN.md §2).
+* **PF-AP** — approximate parallel: the top-``batch_rects`` hyperrectangles
+  are popped together, each split into an ``l^k`` grid, and *all* cells' CO
+  problems across all rectangles are solved simultaneously in one
+  vmap-batched MOGD call — one device dispatch per PF iteration instead of
+  one per rectangle (the paper's thread pool becomes a SIMD batch —
+  DESIGN.md §2, §4).
 
-All variants are *incremental* (state carries the rectangle queue, so more
-probes extend the same frontier) and *uncertainty-aware* (the queue is
-prioritized by uncertain-space volume; the live uncertain fraction per
-Def. 3.7 is traced after every probe, which is the y-axis of Fig. 4(a)).
+All variants are *incremental* (state carries the rectangle queue and an
+array-native frontier store, so more probes extend the same frontier) and
+*uncertainty-aware* (the queue is prioritized by uncertain-space volume;
+the live uncertain fraction per Def. 3.7 is traced after every probe,
+which is the y-axis of Fig. 4(a)).
+
+Frontier candidates live in a :class:`~repro.core.frontier_store.FrontierStore`
+whose Pareto mask is maintained incrementally per probe batch (DESIGN.md
+§3); ``finalize`` is a plain read of the live frontier — the seed's
+full-history O(N²) re-filter is gone.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
 
 import numpy as np
 
-from . import pareto
+from .frontier_store import FrontierStore
 from .hyperrectangle import (
     Rectangle,
     RectangleQueue,
@@ -42,8 +49,7 @@ class PFState:
     """Resumable solver state (the paper's incrementality requirement)."""
 
     queue: RectangleQueue
-    points_f: list  # objective-space Pareto candidates, each (k,)
-    points_x: list  # encoded configurations, each (D,)
+    store: FrontierStore  # live Pareto set (incremental mask per probe)
     utopia: np.ndarray
     nadir: np.ndarray
     bounds: np.ndarray  # (2, k) global objective bounds used for probes
@@ -53,13 +59,13 @@ class PFState:
 
     def record(self) -> None:
         self.trace.append(
-            (self.elapsed, self.queue.uncertain_fraction, len(self.points_f))
+            (self.elapsed, self.queue.uncertain_fraction, self.store.n_points)
         )
 
 
 @dataclasses.dataclass
 class PFResult:
-    F: np.ndarray  # (N, k) Pareto-filtered objective values
+    F: np.ndarray  # (N, k) Pareto objective values (live frontier)
     X: np.ndarray  # (N, D) encoded configurations
     utopia: np.ndarray
     nadir: np.ndarray
@@ -76,15 +82,28 @@ class ProgressiveFrontier:
         mode: str = "AP",
         mogd: MOGDConfig = MOGDConfig(),
         grid_l: int = 2,
+        batch_rects: int = 1,
         target: int = 0,
+        solver: MOGDSolver | None = None,
+        use_kernel: bool = False,
+        kernel_interpret: bool = True,
     ):
         if mode not in ("S", "AS", "AP"):
             raise ValueError(f"unknown PF mode {mode!r}")
+        if batch_rects < 1:
+            raise ValueError("batch_rects must be >= 1")
         self.problem = problem
         self.mode = mode
         self.grid_l = grid_l
+        self.batch_rects = batch_rects
         self.target = target
-        self.solver = problem.solver_for(mogd)
+        # route the store's dominance pass through the Pallas kernel
+        # (interpret=False on real TPU); default is the dense jnp pass
+        self.use_kernel = use_kernel
+        self.kernel_interpret = kernel_interpret
+        # An injected solver lets the service layer share one compiled MOGD
+        # across sessions with the same problem signature (DESIGN.md §5).
+        self.solver = solver if solver is not None else problem.solver_for(mogd)
         self._k = problem.k
 
     # ------------------------------------------------------------------
@@ -135,10 +154,13 @@ class ProgressiveFrontier:
         nadir = np.where(degenerate, np.maximum(bounds[1], utopia + 1e-9), nadir)
         span = np.maximum(nadir - utopia, 1e-9)
         nadir = utopia + span
+        store = FrontierStore(k=self._k, dim=self.problem.dim,
+                              use_kernel=self.use_kernel,
+                              kernel_interpret=self.kernel_interpret)
+        store.add(refs, np.stack(xs))
         state = PFState(
             queue=RectangleQueue(make_rectangle(utopia, nadir)),
-            points_f=[refs[i] for i in range(self._k)],
-            points_x=[xs[i] for i in range(self._k)],
+            store=store,
             utopia=utopia,
             nadir=nadir,
             bounds=bounds,
@@ -159,8 +181,7 @@ class ProgressiveFrontier:
         state.probes += 1
         if bool(res.feasible[0]):
             fm = np.clip(res.f[0], u, n)
-            state.points_f.append(fm)
-            state.points_x.append(res.x[0])
+            state.store.add(fm[None], res.x[0][None])
             for sub in split_rectangle(u, fm, n):
                 state.queue.push(sub)
         else:
@@ -172,22 +193,67 @@ class ProgressiveFrontier:
             upper = make_rectangle(mid, n)
             state.queue.push(upper)
 
-    def _step_parallel(self, state: PFState) -> None:
-        """One PF-AP iteration (§4.3): grid the popped rectangle, solve all
-        cell CO problems in a single batched MOGD call."""
-        rect = state.queue.pop()
-        cells = grid_cells(rect.utopia, rect.nadir, self.grid_l)
+    # ------------------------------------------------------------------
+    # PF-AP is split into prepare/absorb so the service layer can coalesce
+    # probe work from many sessions into one shared MOGD batch (§4.3,
+    # DESIGN.md §5).  ``_step_parallel`` is simply prepare -> solve -> absorb.
+    def prepare_parallel(
+        self, state: PFState, max_rects: int | None = None
+    ) -> tuple[list[Rectangle], np.ndarray | None]:
+        """Pop the top-B rectangles and grid them into probe cells.
+
+        Returns ``(cells, boxes)`` with ``boxes: (B·l^k, 2, k)`` aligned to
+        ``cells``, or ``([], None)`` when the queue is exhausted."""
+        budget = self.batch_rects if max_rects is None else max_rects
+        rects: list[Rectangle] = []
+        while len(rects) < budget and len(state.queue):
+            rects.append(state.queue.pop())
+        cells = [
+            c
+            for r in rects
+            for c in grid_cells(r.utopia, r.nadir, self.grid_l)
+        ]
+        if not cells:
+            return [], None
         boxes = np.stack([np.stack([c.utopia, c.nadir]) for c in cells])
-        res = self._probe(boxes)
+        return cells, boxes
+
+    def absorb(self, state: PFState, cells: list[Rectangle], res: COResult) -> None:
+        """Fold one batched probe result back into the state: push the
+        uncertain sub-rectangles and offer all feasible points to the
+        frontier store in a single incremental dominance pass."""
         state.probes += len(cells)
+        fs, xs = [], []
         for c, ok, f, x in zip(cells, res.feasible, res.f, res.x):
             if not bool(ok):
                 continue  # cell has no Pareto candidate -> omitted (§4.3)
             fm = np.clip(f, c.utopia, c.nadir)
-            state.points_f.append(fm)
-            state.points_x.append(x)
+            fs.append(fm)
+            xs.append(x)
             for sub in split_rectangle(c.utopia, fm, c.nadir):
                 state.queue.push(sub)
+        if fs:
+            state.store.add(np.stack(fs), np.stack(xs))
+
+    def restore(self, state: PFState, cells: list[Rectangle]) -> None:
+        """Return prepared-but-unsolved cells to the queue (a failed probe
+        dispatch must not leak uncertain space: the cells exactly partition
+        the popped rectangles, so pushing them back preserves volume)."""
+        for c in cells:
+            state.queue.push(c)
+
+    def _step_parallel(self, state: PFState) -> None:
+        """One PF-AP iteration (§4.3): grid the popped rectangles, solve all
+        cell CO problems in a single batched MOGD call."""
+        cells, boxes = self.prepare_parallel(state)
+        if boxes is None:
+            return
+        try:
+            res = self._probe(boxes)
+        except Exception:
+            self.restore(state, cells)
+            raise
+        self.absorb(state, cells, res)
 
     # ------------------------------------------------------------------
     def run(
@@ -197,10 +263,13 @@ class ProgressiveFrontier:
         deadline_s: float | None = None,
     ) -> PFResult:
         """Run (or resume) until ``n_probes`` additional probes, an empty
-        queue, or the wall-clock deadline."""
+        queue, or the wall-clock deadline.  ``deadline_s`` bounds *this
+        call* — a resumed session gets a fresh deadline budget, while
+        ``state.elapsed`` keeps accumulating lifetime solve time."""
         if state is None:
             state = self.initialize()
-        t0 = time.perf_counter() - state.elapsed
+        base_elapsed = state.elapsed
+        t0 = time.perf_counter()
         budget = state.probes + n_probes
         while state.probes < budget and len(state.queue):
             if deadline_s is not None and time.perf_counter() - t0 > deadline_s:
@@ -209,21 +278,17 @@ class ProgressiveFrontier:
                 self._step_parallel(state)
             else:
                 self._step_sequential(state)
-            state.elapsed = time.perf_counter() - t0
+            state.elapsed = base_elapsed + time.perf_counter() - t0
             state.record()
         return self.finalize(state)
 
     def finalize(self, state: PFState) -> PFResult:
-        """Alg. 1 line 25: filter dominated candidates (needed in k>2)."""
-        F = np.stack(state.points_f)
-        X = np.stack(state.points_x)
-        # Dedupe near-identical points before the O(N^2) filter.
-        _, uniq = np.unique(np.round(F, 9), axis=0, return_index=True)
-        F, X = F[np.sort(uniq)], X[np.sort(uniq)]
-        mask = np.asarray(pareto.pareto_mask(F))
+        """Alg. 1 line 25 is already maintained incrementally per probe —
+        reading the live frontier replaces the seed's O(N²) re-filter."""
+        F, X = state.store.frontier()
         return PFResult(
-            F=F[mask],
-            X=X[mask],
+            F=F,
+            X=X,
             utopia=state.utopia,
             nadir=state.nadir,
             trace=list(state.trace),
@@ -239,8 +304,10 @@ def solve_pf(
     n_probes: int = 32,
     mogd: MOGDConfig = MOGDConfig(),
     grid_l: int = 2,
+    batch_rects: int = 1,
     deadline_s: float | None = None,
 ) -> PFResult:
     """One-call convenience wrapper."""
-    pf = ProgressiveFrontier(problem, mode=mode, mogd=mogd, grid_l=grid_l)
+    pf = ProgressiveFrontier(problem, mode=mode, mogd=mogd, grid_l=grid_l,
+                             batch_rects=batch_rects)
     return pf.run(n_probes=n_probes, deadline_s=deadline_s)

@@ -85,6 +85,34 @@ def workload_aware_wun(
     return weighted_utopia_nearest(F, utopia, nadir, wi * we)
 
 
+def select(
+    F: np.ndarray,
+    utopia: np.ndarray,
+    nadir: np.ndarray,
+    strategy: str = "un",
+    weights=None,
+    default_latency_s: float | None = None,
+) -> int:
+    """Unified entry point over the §5 selectors (used by the MOO service).
+
+    ``strategy`` is one of ``"un"``, ``"wun"`` (requires ``weights``), or
+    ``"workload"`` (requires ``weights`` and ``default_latency_s``).
+    """
+    s = strategy.lower()
+    if s == "un":
+        return utopia_nearest(F, utopia, nadir)
+    if s == "wun":
+        if weights is None:
+            raise ValueError("strategy 'wun' requires weights")
+        return weighted_utopia_nearest(F, utopia, nadir, weights)
+    if s == "workload":
+        if weights is None or default_latency_s is None:
+            raise ValueError(
+                "strategy 'workload' requires weights and default_latency_s")
+        return workload_aware_wun(F, utopia, nadir, weights, default_latency_s)
+    raise ValueError(f"unknown recommendation strategy {strategy!r}")
+
+
 def weighted_single_objective_pick(F: np.ndarray, weights,
                                     utopia: np.ndarray, nadir: np.ndarray) -> int:
     """The Ottertune-style competitor (§6.2): collapse objectives into one

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention_bhsd
 from .mamba_scan import selective_scan
 from .mogd_mlp import mlp_forward_fused
-from .pareto_filter import pareto_counts_blocked
+from .pareto_filter import cross_dominator_counts, pareto_counts_blocked
 from .rwkv6_wkv import wkv_chunked
 
 
@@ -26,6 +26,14 @@ def pareto_mask(F, interpret: bool = True):
     """(N, k) -> (N,) bool Pareto mask via the blocked domination kernel."""
     return pareto_counts_blocked(
         jnp.asarray(F, jnp.float32), interpret=interpret) == 0
+
+
+def cross_dominated(FA, FB, interpret: bool = True):
+    """(N, k) x (M, k) -> (N,) bool: row of FA dominated by any row of FB
+    (the frontier store's incremental-update primitive)."""
+    return cross_dominator_counts(
+        jnp.asarray(FA, jnp.float32), jnp.asarray(FB, jnp.float32),
+        interpret=interpret) > 0
 
 
 def flash_attention(q, k, v, causal: bool = True, bq: int = 128,

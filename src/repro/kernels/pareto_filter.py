@@ -41,15 +41,31 @@ def _kernel(fi_ref, fj_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def pareto_counts_blocked(F, interpret: bool = True):
-    """F: (N, k) fp32 -> (N,) int32 dominator counts (0 => Pareto)."""
-    N, k = F.shape
-    pad = (-N) % BI
-    if pad:
-        # pad with +inf so padded rows dominate nothing and are dominated
-        F = jnp.pad(F, ((0, pad), (0, 0)), constant_values=jnp.inf)
-    Np = F.shape[0]
-    grid = (Np // BI, Np // BJ)
+def cross_dominator_counts(FA, FB, interpret: bool = True):
+    """Cross-set domination: for each row of ``FA: (N, k)``, count rows of
+    ``FB: (M, k)`` that Pareto-dominate it -> ``(N,)`` int32.
+
+    This is the batched primitive behind the incremental frontier store
+    (``repro.core.frontier_store``): one call scores a probe batch against
+    the live frontier (and vice versa) without materializing the full
+    (N, M, k) comparison in one buffer.  ``pareto_counts_blocked`` is the
+    ``FA is FB`` special case.  Rows equal to ``+inf`` (padding / dead
+    slots) dominate nothing and are reported as dominated — callers mask.
+    """
+    N, k = FA.shape
+    M = FB.shape[0]
+    # empty boundary states (no candidates / empty dominator set): nothing
+    # dominates, and Pallas cannot slice blocks out of zero-row operands
+    if N == 0 or M == 0:
+        return jnp.zeros((N,), jnp.int32)
+    # pad with +inf so padded rows dominate nothing and are dominated
+    pad_i = (-N) % BI
+    if pad_i:
+        FA = jnp.pad(FA, ((0, pad_i), (0, 0)), constant_values=jnp.inf)
+    pad_j = (-M) % BJ
+    if pad_j:
+        FB = jnp.pad(FB, ((0, pad_j), (0, 0)), constant_values=jnp.inf)
+    grid = (FA.shape[0] // BI, FB.shape[0] // BJ)
     out = pl.pallas_call(
         _kernel,
         grid=grid,
@@ -58,7 +74,13 @@ def pareto_counts_blocked(F, interpret: bool = True):
             pl.BlockSpec((BJ, k), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((BI,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((FA.shape[0],), jnp.float32),
         interpret=interpret,
-    )(F, F)
+    )(FA, FB)
     return out[:N].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pareto_counts_blocked(F, interpret: bool = True):
+    """F: (N, k) fp32 -> (N,) int32 dominator counts (0 => Pareto)."""
+    return cross_dominator_counts(F, F, interpret=interpret)

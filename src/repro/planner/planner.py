@@ -95,6 +95,8 @@ def plan_job(arch_cfg: ArchConfig, shape_name: str = "train_4k",
              model: PlanModel | None = None,
              chip_choices=None,
              mogd: MOGDConfig = MOGDConfig(steps=80, multistart=8),
+             grid_l: int = 2,
+             batch_rects: int = 4,
              state=None) -> PlanRecommendation:
     shape = SHAPES[shape_name]
     t0 = time.perf_counter()
@@ -103,13 +105,16 @@ def plan_job(arch_cfg: ArchConfig, shape_name: str = "train_4k",
            None if model is None else (round(model.cal_compute, 6),
                                        round(model.cal_memory, 6),
                                        round(model.cal_collective, 6)),
-           mogd)
+           mogd, grid_l, batch_rects)
     if key in _PF_CACHE:
         problem, pf = _PF_CACHE[key]
     else:
         problem, model = _problem_for(arch_cfg, shape, model, objectives,
                                       chip_choices)
-        pf = ProgressiveFrontier(problem, mode="AP", mogd=mogd)
+        # Cross-rectangle batched PF-AP: every planning iteration solves the
+        # cells of the top-`batch_rects` rectangles in one MOGD dispatch.
+        pf = ProgressiveFrontier(problem, mode="AP", mogd=mogd,
+                                 grid_l=grid_l, batch_rects=batch_rects)
         _PF_CACHE[key] = (problem, pf)
     res = pf.run(n_probes=n_probes, deadline_s=deadline_s, state=state)
     i = weighted_utopia_nearest(res.F, res.utopia, res.nadir, weights)

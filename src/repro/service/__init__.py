@@ -1,0 +1,22 @@
+"""Multi-session MOO service layer (DESIGN.md §5).
+
+Turns the per-call Progressive Frontier solver into a long-lived,
+multi-tenant optimizer service: many concurrent tuning sessions, each a
+resumable ``PFState``, with compiled MOGD solvers cached by problem
+signature (the paper's recurring-job amortization made explicit) and probe
+work coalesced across sessions into shared MOGD batches.
+"""
+
+from .moo_service import (
+    MOOService,
+    Recommendation,
+    SessionInfo,
+    problem_signature,
+)
+
+__all__ = [
+    "MOOService",
+    "Recommendation",
+    "SessionInfo",
+    "problem_signature",
+]

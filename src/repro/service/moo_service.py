@@ -1,0 +1,370 @@
+"""MOOService: many concurrent, resumable tuning sessions (DESIGN.md §5).
+
+The paper's deployment setting is a cloud optimizer answering MOO queries
+for a stream of recurring analytics jobs.  Three properties matter there
+and are implemented here:
+
+* **Sessions** — each tuning job holds one resumable ``PFState`` (rectangle
+  queue + incremental frontier store).  More probes extend the same
+  frontier; the session survives across requests.
+* **Solver amortization** — compiled MOGD solvers are cached by *problem
+  signature*, so a recurring job (same config space, same objective model)
+  skips XLA recompilation entirely: its sessions attach to the already-
+  compiled solver.
+* **Probe coalescing** — ``step_all`` gathers the pending probe cells of
+  every active session sharing a compiled solver and solves them in one
+  MOGD batch: one device dispatch serves many tenants (the multi-tenant
+  generalization of PF-AP's cross-rectangle batch).
+
+The service is thread-safe at the granularity of its public methods (one
+re-entrant lock); heavy math runs inside jit'd JAX calls which release the
+GIL poorly anyway, so callers scale by batching, not threads — exactly the
+paper's SIMD-over-threads argument (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+
+import numpy as np
+
+from repro.core import MOGDConfig, MOOProblem, ProgressiveFrontier
+from repro.core.mogd import MOGDSolver
+from repro.core.progressive_frontier import PFResult, PFState
+from repro.core.recommend import select
+
+
+def problem_signature(problem: MOOProblem) -> tuple:
+    """Default signature: identifies the configuration space and objective
+    model of a problem *instance*.  Two sessions share compiled solvers and
+    probe batches only when their signatures match — recurring jobs should
+    pass an explicit stable signature (e.g. ``("tpch", "q7", "v3")``) so
+    re-submitted problems with fresh closures still hit the cache."""
+    return (
+        tuple(problem.specs),
+        problem.k,
+        tuple(problem.names),
+        id(problem.objectives),
+    )
+
+
+@dataclasses.dataclass
+class Recommendation:
+    """One configuration picked from a session's live frontier (§5)."""
+
+    session_id: str
+    index: int
+    objectives: np.ndarray  # (k,)
+    x: np.ndarray  # (D,) encoded
+    config: dict  # decoded knob values
+    frontier_size: int
+
+
+@dataclasses.dataclass
+class SessionInfo:
+    """Read-only session snapshot for dashboards / tests."""
+
+    session_id: str
+    signature: tuple
+    mode: str
+    probes: int
+    frontier_size: int
+    uncertain_fraction: float
+    exhausted: bool  # queue empty — frontier is final
+    elapsed_s: float
+
+
+@dataclasses.dataclass
+class _Session:
+    session_id: str
+    problem: MOOProblem
+    signature: tuple
+    engine: ProgressiveFrontier
+    solver_key: tuple  # (signature, mogd) entry in the service solver cache
+    auto_signature: bool  # derived from the instance (not a recurring job)
+    state: PFState | None = None
+    created_s: float = dataclasses.field(default_factory=time.perf_counter)
+
+
+class MOOService:
+    """A long-lived, multi-tenant Progressive Frontier optimizer."""
+
+    def __init__(
+        self,
+        mogd: MOGDConfig = MOGDConfig(steps=80, multistart=8),
+        mode: str = "AP",
+        grid_l: int = 2,
+        batch_rects: int = 4,
+        max_sessions: int = 256,
+        use_kernel: bool = False,
+        kernel_interpret: bool = True,
+    ):
+        self.default_mogd = mogd
+        self.default_mode = mode
+        self.default_grid_l = grid_l
+        self.default_batch_rects = batch_rects
+        self.max_sessions = max_sessions
+        self.use_kernel = use_kernel
+        self.kernel_interpret = kernel_interpret
+        self._sessions: dict[str, _Session] = {}
+        # (signature, mogd) -> compiled solver; keeps the problem that built
+        # it alive so id()-based signatures stay unambiguous.
+        self._solvers: dict[tuple, tuple[MOGDSolver, MOOProblem]] = {}
+        self._ids = itertools.count()
+        self._lock = threading.RLock()
+        self.solver_cache_hits = 0
+        self.coalesced_batches = 0
+        self.coalesced_probes = 0
+
+    # ------------------------------------------------------------------
+    def _solver_for(self, problem: MOOProblem, signature: tuple,
+                    mogd: MOGDConfig) -> MOGDSolver:
+        key = (signature, mogd)
+        if key in self._solvers:
+            self.solver_cache_hits += 1
+            return self._solvers[key][0]
+        solver = problem.solver_for(mogd)
+        self._solvers[key] = (solver, problem)
+        return solver
+
+    def open_session(
+        self,
+        problem: MOOProblem,
+        signature: tuple | str | None = None,
+        mode: str | None = None,
+        mogd: MOGDConfig | None = None,
+        grid_l: int | None = None,
+        batch_rects: int | None = None,
+        target: int = 0,
+    ) -> str:
+        """Register a tuning session; returns its id.  Lazy: no solve work
+        happens until the first ``probe``/``step_all``."""
+        with self._lock:
+            if len(self._sessions) >= self.max_sessions:
+                raise RuntimeError(
+                    f"session limit reached ({self.max_sessions})")
+            auto_sig = signature is None
+            sig = problem_signature(problem) if auto_sig else signature
+            if isinstance(sig, str):
+                sig = (sig,)
+            mogd = mogd if mogd is not None else self.default_mogd
+            engine = ProgressiveFrontier(
+                problem,
+                mode=mode if mode is not None else self.default_mode,
+                mogd=mogd,
+                grid_l=grid_l if grid_l is not None else self.default_grid_l,
+                batch_rects=(batch_rects if batch_rects is not None
+                             else self.default_batch_rects),
+                target=target,
+                solver=self._solver_for(problem, sig, mogd),
+                use_kernel=self.use_kernel,
+                kernel_interpret=self.kernel_interpret,
+            )
+            sid = f"sess-{next(self._ids)}"
+            self._sessions[sid] = _Session(sid, problem, sig, engine,
+                                           solver_key=(sig, mogd),
+                                           auto_signature=auto_sig)
+            return sid
+
+    def close_session(self, session_id: str) -> None:
+        with self._lock:
+            sess = self._sessions.pop(session_id, None)
+            if sess is None or not sess.auto_signature:
+                # explicit signatures are recurring jobs: their compiled
+                # solvers stay warm for the next submission
+                return
+            # instance-bound signatures can never be hit again once their
+            # last session closes — evict so the cache cannot leak solvers
+            still_used = any(s.solver_key == sess.solver_key
+                             for s in self._sessions.values())
+            if not still_used:
+                self._solvers.pop(sess.solver_key, None)
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def _get(self, session_id: str) -> _Session:
+        try:
+            return self._sessions[session_id]
+        except KeyError:
+            raise KeyError(f"unknown session {session_id!r}") from None
+
+    # ------------------------------------------------------------------
+    def probe(self, session_id: str, n_probes: int = 16,
+              deadline_s: float | None = None) -> PFResult:
+        """Advance one session by ``n_probes`` additional probes (resuming
+        its PFState) and return the refreshed frontier."""
+        with self._lock:
+            sess = self._get(session_id)
+            res = sess.engine.run(n_probes=n_probes, state=sess.state,
+                                  deadline_s=deadline_s)
+            sess.state = res.state
+            return res
+
+    def step_all(self, rounds: int = 1) -> dict:
+        """Coalesced scheduling: for each group of active sessions sharing a
+        compiled solver (same signature/config/target), pop every session's
+        top rectangles and solve *all* their probe cells in one MOGD batch.
+
+        Returns aggregate stats for the performed rounds."""
+        stats = {"rounds": 0, "batches": 0, "probes": 0, "sessions": 0}
+        with self._lock:
+            for _ in range(rounds):
+                groups: dict[tuple, list[_Session]] = {}
+                singles: list[_Session] = []
+                for sess in self._sessions.values():
+                    if sess.state is None:
+                        sess.state = sess.engine.initialize()
+                    if not len(sess.state.queue):
+                        continue  # exhausted — frontier is final
+                    if sess.engine.mode == "AP":
+                        key = (id(sess.engine.solver), sess.engine.target)
+                        groups.setdefault(key, []).append(sess)
+                    else:
+                        singles.append(sess)
+                if not groups and not singles:
+                    break
+                stats["rounds"] += 1
+                for sessions in groups.values():
+                    n = self._coalesced_step(sessions)
+                    stats["batches"] += 1
+                    stats["probes"] += n
+                    stats["sessions"] += len(sessions)
+                for sess in singles:
+                    t0 = time.perf_counter()
+                    before = sess.state.probes
+                    sess.engine._step_sequential(sess.state)
+                    sess.state.elapsed += time.perf_counter() - t0
+                    sess.state.record()
+                    stats["probes"] += sess.state.probes - before
+                    stats["sessions"] += 1
+        return stats
+
+    def _coalesced_step(self, sessions: list[_Session]) -> int:
+        """One shared MOGD dispatch over every session's pending cells."""
+        prepared = []
+        for sess in sessions:
+            cells, boxes = sess.engine.prepare_parallel(sess.state)
+            if boxes is not None:
+                prepared.append((sess, cells, boxes))
+        if not prepared:
+            return 0
+        all_boxes = np.concatenate([b for _, _, b in prepared], axis=0)
+        engine = prepared[0][0].engine
+        t0 = time.perf_counter()
+        try:
+            res = engine.solver.solve(all_boxes, target=engine.target)
+        except Exception:
+            # a failed shared dispatch must not leak any tenant's popped
+            # uncertain space — return every prepared cell to its queue
+            for sess, cells, _ in prepared:
+                sess.engine.restore(sess.state, cells)
+            raise
+        wall = time.perf_counter() - t0
+        off = 0
+        total = all_boxes.shape[0]
+        for sess, cells, boxes in prepared:
+            n = boxes.shape[0]
+            sub = dataclasses.replace(
+                res,
+                x=res.x[off: off + n],
+                f=res.f[off: off + n],
+                feasible=res.feasible[off: off + n],
+            )
+            sess.engine.absorb(sess.state, cells, sub)
+            # charge each session its share of the shared dispatch
+            sess.state.elapsed += wall * (n / total)
+            sess.state.record()
+            off += n
+        self.coalesced_batches += 1
+        self.coalesced_probes += total
+        return total
+
+    def run_until(self, min_probes: int, max_rounds: int = 10_000) -> dict:
+        """Drive ``step_all`` until every active session has spent at least
+        ``min_probes`` probes (or its queue is exhausted)."""
+        out = {"rounds": 0, "batches": 0, "probes": 0}
+        for _ in range(max_rounds):
+            pending = [
+                s for s in self._sessions.values()
+                if s.state is None
+                or (s.state.probes < min_probes and len(s.state.queue))
+            ]
+            if not pending:
+                break
+            st = self.step_all(rounds=1)
+            if st["rounds"] == 0:
+                break
+            for k in out:
+                out[k] += st.get(k, 0)
+        return out
+
+    # ------------------------------------------------------------------
+    def frontier(self, session_id: str) -> tuple[np.ndarray, np.ndarray]:
+        """Live Pareto frontier ``(F, X)`` of a session (no re-filtering)."""
+        with self._lock:
+            sess = self._get(session_id)
+            if sess.state is None:
+                k, d = sess.problem.k, sess.problem.dim
+                return np.empty((0, k)), np.empty((0, d))
+            return sess.state.store.frontier()
+
+    def recommend(
+        self,
+        session_id: str,
+        strategy: str = "un",
+        weights=None,
+        default_latency_s: float | None = None,
+    ) -> Recommendation:
+        """Pick one configuration from the session's live frontier via the
+        §5 selectors (UN / WUN / workload-aware WUN)."""
+        with self._lock:
+            sess = self._get(session_id)
+            if sess.state is None or sess.state.store.n_points == 0:
+                raise RuntimeError(
+                    f"session {session_id!r} has no frontier yet — probe first")
+            F, X = sess.state.store.frontier()
+            i = select(F, sess.state.utopia, sess.state.nadir,
+                       strategy=strategy, weights=weights,
+                       default_latency_s=default_latency_s)
+            return Recommendation(
+                session_id=session_id,
+                index=i,
+                objectives=F[i],
+                x=X[i],
+                config=sess.problem.encoder.decode(X[i]),
+                frontier_size=len(F),
+            )
+
+    # ------------------------------------------------------------------
+    def session_info(self, session_id: str) -> SessionInfo:
+        with self._lock:
+            sess = self._get(session_id)
+            st = sess.state
+            return SessionInfo(
+                session_id=session_id,
+                signature=sess.signature,
+                mode=sess.engine.mode,
+                probes=0 if st is None else st.probes,
+                frontier_size=0 if st is None else st.store.n_points,
+                uncertain_fraction=(
+                    1.0 if st is None else st.queue.uncertain_fraction),
+                exhausted=st is not None and not len(st.queue),
+                elapsed_s=0.0 if st is None else st.elapsed,
+            )
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "sessions": len(self._sessions),
+                "compiled_solvers": len(self._solvers),
+                "solver_cache_hits": self.solver_cache_hits,
+                "coalesced_batches": self.coalesced_batches,
+                "coalesced_probes": self.coalesced_probes,
+                "total_probes": sum(
+                    s.state.probes for s in self._sessions.values()
+                    if s.state is not None),
+            }

@@ -1,86 +1,21 @@
-"""Shared fixtures + analytic MOO test problems.
+"""Shared fixtures over the analytic MOO test problems.
+
+The problem definitions live in ``repro.core.synthetic`` so benchmarks and
+examples exercise the exact same workloads.
 
 NOTE: do NOT set XLA_FLAGS host-device-count here — smoke tests and benches
 must see 1 device.  Multi-device distribution tests spawn subprocesses with
 their own XLA_FLAGS (see tests/test_distributed.py).
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.core import MOOProblem, continuous, integer, categorical, boolean
-
-
-def make_zdt1(d: int = 6) -> MOOProblem:
-    """ZDT1: convex front f2 = 1 - sqrt(f1), attained at x[1:] = 0."""
-    specs = [continuous(f"x{i}", 0.0, 1.0) for i in range(d)]
-
-    def obj(x):
-        f1 = x[0]
-        g = 1.0 + 9.0 * jnp.mean(x[1:])
-        f2 = g * (1.0 - jnp.sqrt(jnp.clip(f1 / g, 1e-12, None)))
-        return jnp.stack([f1, f2])
-
-    return MOOProblem(specs=specs, objectives=obj, k=2, names=("f1", "f2"))
-
-
-def make_sphere2(d: int = 4) -> MOOProblem:
-    """Bi-objective sphere: f1=|x-a|^2, f2=|x-b|^2 — front is the segment
-    between a and b (classic, smooth, convex)."""
-    specs = [continuous(f"x{i}", 0.0, 1.0) for i in range(d)]
-    a = jnp.full(d, 0.25)
-    b = jnp.full(d, 0.75)
-
-    def obj(x):
-        return jnp.stack([jnp.sum((x - a) ** 2), jnp.sum((x - b) ** 2)])
-
-    return MOOProblem(specs=specs, objectives=obj, k=2)
-
-
-def make_dtlz2(k: int = 3, d: int = 6) -> MOOProblem:
-    """DTLZ2 with k objectives: front is the unit sphere octant."""
-    specs = [continuous(f"x{i}", 0.0, 1.0) for i in range(d)]
-
-    def obj(x):
-        g = jnp.sum((x[k - 1:] - 0.5) ** 2)
-        fs = []
-        for i in range(k):
-            f = 1.0 + g
-            for j in range(k - 1 - i):
-                f = f * jnp.cos(x[j] * jnp.pi / 2)
-            if i > 0:
-                f = f * jnp.sin(x[k - 1 - i] * jnp.pi / 2)
-            fs.append(f)
-        return jnp.stack(fs)
-
-    return MOOProblem(specs=specs, objectives=obj, k=k)
-
-
-def make_mixed_problem() -> MOOProblem:
-    """Mixed continuous/integer/categorical/boolean space with an analytic
-    bi-objective; exercises the §4.2 one-hot/rounding machinery."""
-    specs = [
-        continuous("c", 0.0, 1.0),
-        integer("n", 1, 8),
-        categorical("mode", ("slow", "fast", "turbo")),
-        boolean("flag"),
-    ]
-    from repro.core.problem import SpaceEncoder
-
-    enc = SpaceEncoder(specs)
-    speed = jnp.asarray([1.0, 1.6, 2.1])
-
-    def obj(x):
-        cfg = enc.decode_soft(x)
-        n = cfg["n"]
-        s = jnp.sum(cfg["mode"] * speed)
-        lat = 10.0 / (n**0.8 * s) + 0.5 * cfg["c"] + 0.2 * cfg["flag"]
-        cost = n * s * (1.0 + 0.3 * cfg["flag"]) + (1.0 - cfg["c"])
-        return jnp.stack([lat, cost])
-
-    return MOOProblem(specs=specs, objectives=obj, k=2)
+from repro.core.synthetic import (
+    make_dtlz2,
+    make_mixed_problem,
+    make_sphere2,
+    make_zdt1,
+)
 
 
 @pytest.fixture(scope="session")

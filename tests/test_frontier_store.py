@@ -1,0 +1,114 @@
+"""FrontierStore: the incremental mask must equal the batch Pareto filter
+on arbitrary point streams (the tentpole's correctness invariant)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FrontierStore, pareto_mask
+
+
+def _batch_reference(stream):
+    """Seed-finalize semantics: dedupe at 1e-9, then full Pareto filter."""
+    allF = np.concatenate([f for f, _ in stream])
+    allX = np.concatenate([x for _, x in stream])
+    _, uniq = np.unique(np.round(allF, 9), axis=0, return_index=True)
+    F, X = allF[np.sort(uniq)], allX[np.sort(uniq)]
+    mask = np.asarray(pareto_mask(jnp.asarray(F)))
+    return F[mask], X[mask]
+
+
+def _as_set(F):
+    return {tuple(np.round(row, 9)) for row in F}
+
+
+class TestIncrementalEqualsBatch:
+    @pytest.mark.parametrize("k,seed", [(2, 0), (2, 1), (3, 2), (4, 3)])
+    def test_random_streams(self, k, seed):
+        rng = np.random.default_rng(seed)
+        store = FrontierStore(k=k, dim=3, capacity=64)
+        stream = []
+        for _ in range(40):
+            b = int(rng.integers(1, 10))
+            F = rng.uniform(0, 1, (b, k))
+            X = rng.uniform(0, 1, (b, 3))
+            stream.append((F, X))
+            store.add(F, X)
+        F_ref, X_ref = _batch_reference(stream)
+        F_got, X_got = store.frontier()
+        assert _as_set(F_got) == _as_set(F_ref)
+        # X rows stay aligned with their F rows
+        lookup = {tuple(np.round(f, 9)): tuple(x) for f, x in zip(F_ref, X_ref)}
+        for f, x in zip(F_got, X_got):
+            assert lookup[tuple(np.round(f, 9))] == pytest.approx(tuple(x))
+
+    def test_duplicates_collapse(self):
+        store = FrontierStore(k=2, dim=1)
+        p = np.array([[0.3, 0.7]])
+        for _ in range(5):
+            store.add(p, np.array([[0.0]]))
+        assert store.n_points == 1
+        assert store.total_accepted == 1
+
+    def test_dominating_point_retires_many(self):
+        store = FrontierStore(k=2, dim=1)
+        F = np.array([[0.1, 0.9], [0.5, 0.5], [0.9, 0.1]])
+        store.add(F, np.zeros((3, 1)))
+        assert store.n_points == 3
+        store.add(np.array([[0.05, 0.05]]), np.zeros((1, 1)))
+        F_live, _ = store.frontier()
+        assert store.n_points == 1
+        np.testing.assert_allclose(F_live, [[0.05, 0.05]])
+
+    def test_grow_on_demand_preserves_frontier(self):
+        rng = np.random.default_rng(9)
+        store = FrontierStore(k=2, dim=2, capacity=64)
+        stream = []
+        # anti-correlated objectives -> most points survive -> forces growth
+        for _ in range(30):
+            a = rng.uniform(0, 1, (8, 1))
+            F = np.concatenate([a, 1.0 - a + rng.uniform(0, 1e-3, (8, 1))], 1)
+            X = rng.uniform(0, 1, (8, 2))
+            stream.append((F, X))
+            store.add(F, X)
+        assert store.capacity > 64  # grew
+        F_ref, _ = _batch_reference(stream)
+        F_got, _ = store.frontier()
+        assert _as_set(F_got) == _as_set(F_ref)
+
+    def test_kernel_path_matches_jnp_path(self):
+        rng = np.random.default_rng(4)
+        s1 = FrontierStore(k=3, dim=2)
+        s2 = FrontierStore(k=3, dim=2, use_kernel=True)
+        for _ in range(10):
+            # fp32-exact values (multiples of 2^-10) so both paths see
+            # identical inputs despite the kernel path's fp32 cast
+            F = rng.integers(0, 1024, (6, 3)) / 1024.0
+            X = rng.uniform(0, 1, (6, 2))
+            s1.add(F, X)
+            s2.add(F, X)
+        f1, _ = s1.frontier()
+        f2, _ = s2.frontier()
+        assert _as_set(f1) == _as_set(f2)
+
+    def test_nonfinite_rows_rejected(self):
+        store = FrontierStore(k=2, dim=1)
+        store.add(np.array([[np.inf, 0.1], [0.2, 0.2]]), np.zeros((2, 1)))
+        assert store.n_points == 1
+
+    def test_key_set_stays_bounded(self):
+        """Dedup keys track live rows only — rejected and retired offers
+        must not accumulate (long-lived service sessions)."""
+        rng = np.random.default_rng(11)
+        store = FrontierStore(k=2, dim=1)
+        for i in range(50):
+            F = rng.uniform(0.2, 1.0, (8, 2))
+            store.add(F, np.zeros((8, 1)))
+        assert len(store._keys) == store.n_points
+        # a dominating point retires everything; keys shrink with it
+        store.add(np.array([[0.0, 0.0]]), np.zeros((1, 1)))
+        assert store.n_points == 1 and len(store._keys) == 1
+        # re-offering a retired point is still rejected (transitivity)
+        F_old = rng.uniform(0.2, 1.0, (4, 2))
+        store.add(F_old, np.zeros((4, 1)))
+        assert store.n_points == 1

@@ -3,7 +3,11 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; unit tests still run
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (
     crowding_distance,
@@ -108,11 +112,50 @@ class TestHypervolume:
         pts = np.array([[0.0, 0.0, 0.0]])
         assert abs(hypervolume(pts, np.array([1.0, 1.0, 1.0])) - 1.0) < 1e-12
 
+    def test_3d_staircase_exact(self):
+        """Two overlapping boxes: |A ∪ B| = |A| + |B| - |A ∩ B|."""
+        ref = np.array([1.0, 1.0, 1.0])
+        pts = np.array([[0.0, 0.5, 0.2], [0.5, 0.0, 0.6]])
+        vol_a = 1.0 * 0.5 * 0.8
+        vol_b = 0.5 * 1.0 * 0.4
+        vol_ab = 0.5 * 0.5 * 0.4
+        assert abs(hypervolume(pts, ref) - (vol_a + vol_b - vol_ab)) < 1e-12
+
+    def test_3d_monotone_in_points(self):
+        rng = np.random.default_rng(7)
+        ref = np.array([1.0, 1.0, 1.0])
+        pts = rng.uniform(0, 1, (12, 3))
+        hv_all = hypervolume(pts, ref)
+        hv_part = hypervolume(pts[:6], ref)
+        assert hv_all >= hv_part - 1e-12
+        # adding a dominated point changes nothing
+        worst = pts.max(0)[None] * 0.999 + 0.001
+        assert abs(hypervolume(np.vstack([pts, worst]), ref) - hv_all) < 1e-12
+
     @given(_points())
     @settings(max_examples=30, deadline=None)
     def test_nonnegative(self, pts):
         arr = np.array(pts, dtype=np.float64)
         assert hypervolume_2d(arr, np.array([200.0, 200.0])) >= 0.0
+
+
+def _crowding_reference(pts: np.ndarray) -> np.ndarray:
+    """The pre-vectorization O(n·k) loop, kept as the oracle."""
+    n, k = pts.shape
+    if n <= 2:
+        return np.full(n, np.inf)
+    dist = np.zeros(n)
+    for j in range(k):
+        order = np.argsort(pts[:, j])
+        fmin, fmax = pts[order[0], j], pts[order[-1], j]
+        dist[order[0]] = dist[order[-1]] = np.inf
+        if fmax - fmin < 1e-30:
+            continue
+        for idx in range(1, n - 1):
+            dist[order[idx]] += (
+                pts[order[idx + 1], j] - pts[order[idx - 1], j]
+            ) / (fmax - fmin)
+    return dist
 
 
 class TestCrowding:
@@ -121,3 +164,16 @@ class TestCrowding:
         cd = crowding_distance(pts)
         assert np.isinf(cd[0]) and np.isinf(cd[-1])
         assert np.isfinite(cd[1]) and np.isfinite(cd[2])
+
+    @pytest.mark.parametrize("n,k,seed", [(3, 2, 0), (25, 2, 1), (40, 3, 2),
+                                          (17, 4, 3)])
+    def test_vectorized_matches_loop(self, n, k, seed):
+        pts = np.random.default_rng(seed).uniform(0, 1, (n, k))
+        np.testing.assert_allclose(crowding_distance(pts),
+                                   _crowding_reference(pts))
+
+    def test_degenerate_column(self):
+        """A constant objective contributes nothing except inf extremes."""
+        pts = np.array([[0.0, 5.0], [1.0, 5.0], [2.0, 5.0], [3.0, 5.0]])
+        got = crowding_distance(pts)
+        np.testing.assert_allclose(got, _crowding_reference(pts))

@@ -3,7 +3,11 @@ recommendation invariances, PF geometry, checkpoint idempotence)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# This module is property tests only — without hypothesis it has nothing
+# to run, so skip it wholesale at collection.
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     boolean,

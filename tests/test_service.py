@@ -1,0 +1,152 @@
+"""MOOService: concurrent resumable sessions, coalesced probe batches,
+signature-keyed solver reuse, and §5 recommendation strategies."""
+
+import numpy as np
+import pytest
+
+from repro.core import MOGDConfig
+from repro.core.synthetic import make_sphere2, make_zdt1
+from repro.service import MOOService, problem_signature
+
+FAST = MOGDConfig(steps=60, multistart=6)
+
+
+@pytest.fixture()
+def svc():
+    return MOOService(mogd=FAST, batch_rects=2, grid_l=2)
+
+
+class TestSessions:
+    def test_eight_concurrent_sessions(self, svc):
+        zdt, sph = make_zdt1(), make_sphere2()
+        sids = [svc.open_session(zdt, signature=("zdt1",)) for _ in range(4)]
+        sids += [svc.open_session(sph, signature=("sphere2",)) for _ in range(4)]
+        assert len(svc) == 8
+        out = svc.run_until(min_probes=12)
+        assert out["probes"] > 0
+        for sid in sids:
+            F, X = svc.frontier(sid)
+            assert len(F) >= 2
+            assert F.shape[1] == 2 and X.shape[0] == F.shape[0]
+            info = svc.session_info(sid)
+            assert info.probes >= 12 or info.exhausted
+
+    def test_solver_cache_shared_by_signature(self, svc):
+        zdt = make_zdt1()
+        s1 = svc.open_session(zdt, signature=("job-A",))
+        s2 = svc.open_session(zdt, signature=("job-A",))
+        s3 = svc.open_session(make_sphere2(), signature=("job-B",))
+        st = svc.stats()
+        assert st["compiled_solvers"] == 2
+        assert st["solver_cache_hits"] == 1
+        e1 = svc._sessions[s1].engine
+        e2 = svc._sessions[s2].engine
+        e3 = svc._sessions[s3].engine
+        assert e1.solver is e2.solver
+        assert e1.solver is not e3.solver
+
+    def test_default_signature_derives_from_problem(self):
+        p = make_zdt1()
+        assert problem_signature(p) == problem_signature(p)
+        assert problem_signature(p) != problem_signature(make_zdt1())
+
+    def test_session_limit(self):
+        svc = MOOService(mogd=FAST, max_sessions=2)
+        p = make_zdt1()
+        svc.open_session(p)
+        svc.open_session(p)
+        with pytest.raises(RuntimeError):
+            svc.open_session(p)
+
+    def test_close_session(self, svc):
+        sid = svc.open_session(make_zdt1())
+        assert len(svc) == 1
+        svc.close_session(sid)
+        assert len(svc) == 0
+        with pytest.raises(KeyError):
+            svc.frontier(sid)
+
+    def test_auto_signature_solver_evicted_on_close(self, svc):
+        sid = svc.open_session(make_zdt1())  # instance-bound signature
+        assert svc.stats()["compiled_solvers"] == 1
+        svc.close_session(sid)
+        assert svc.stats()["compiled_solvers"] == 0  # cannot leak
+
+    def test_explicit_signature_solver_survives_close(self, svc):
+        sid = svc.open_session(make_zdt1(), signature=("recurring-job",))
+        svc.close_session(sid)
+        assert svc.stats()["compiled_solvers"] == 1  # stays warm
+        svc.open_session(make_zdt1(), signature=("recurring-job",))
+        assert svc.stats()["solver_cache_hits"] == 1
+
+    def test_zero_batch_rects_rejected(self, svc):
+        with pytest.raises(ValueError):
+            svc.open_session(make_zdt1(), batch_rects=0)
+
+    def test_failed_dispatch_restores_queue(self, svc, monkeypatch):
+        sid = svc.open_session(make_zdt1(), signature=("boom",))
+        svc.run_until(min_probes=6)
+        sess = svc._sessions[sid]
+        vol = sess.state.queue.total_volume
+        probes = sess.state.probes
+
+        def boom(*a, **k):
+            raise RuntimeError("device lost")
+
+        monkeypatch.setattr(sess.engine.solver, "solve", boom)
+        with pytest.raises(RuntimeError):
+            svc.step_all()
+        # no uncertain space leaked, no probes charged
+        assert sess.state.queue.total_volume == pytest.approx(vol, rel=1e-9)
+        assert sess.state.probes == probes
+
+
+class TestResume:
+    def test_resume_returns_superset_frontier(self, svc):
+        sid = svc.open_session(make_zdt1(), signature=("resume",))
+        r1 = svc.probe(sid, n_probes=8)
+        F1 = np.asarray(r1.F)
+        r2 = svc.probe(sid, n_probes=16)
+        F2 = np.asarray(r2.F)
+        assert r2.probes > r1.probes
+        # every still-optimal old point survives; any dropped old point must
+        # have been dominated by the refined frontier
+        live = {tuple(np.round(f, 9)) for f in F2}
+        for f in F1:
+            if tuple(np.round(f, 9)) in live:
+                continue
+            dom = np.all(F2 <= f, axis=1) & np.any(F2 < f, axis=1)
+            assert dom.any()
+
+    def test_coalesced_and_per_session_probes_mix(self, svc):
+        sid = svc.open_session(make_zdt1(), signature=("mix",))
+        svc.run_until(min_probes=8)  # coalesced path
+        p1 = svc.session_info(sid).probes
+        svc.probe(sid, n_probes=8)  # per-session path resumes same state
+        assert svc.session_info(sid).probes > p1
+
+
+class TestRecommend:
+    def test_strategies(self, svc):
+        sid = svc.open_session(make_zdt1(), signature=("rec",))
+        svc.probe(sid, n_probes=24)
+        un = svc.recommend(sid, strategy="un")
+        lat = svc.recommend(sid, strategy="wun", weights=(0.9, 0.1))
+        cost = svc.recommend(sid, strategy="wun", weights=(0.1, 0.9))
+        assert lat.objectives[0] <= cost.objectives[0] + 1e-9
+        assert cost.objectives[1] <= lat.objectives[1] + 1e-9
+        wl = svc.recommend(sid, strategy="workload", weights=(0.5, 0.5),
+                           default_latency_s=500.0)
+        assert wl.frontier_size == un.frontier_size
+        assert set(un.config) == {f"x{i}" for i in range(6)}
+
+    def test_recommend_before_probe_raises(self, svc):
+        sid = svc.open_session(make_zdt1())
+        with pytest.raises(RuntimeError):
+            svc.recommend(sid)
+
+    def test_unknown_strategy_raises(self, svc):
+        sid = svc.open_session(make_zdt1(), signature=("bad",))
+        svc.probe(sid, n_probes=6)
+        with pytest.raises(ValueError):
+            svc.recommend(sid, strategy="nope")
