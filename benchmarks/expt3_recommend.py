@@ -14,15 +14,14 @@ import numpy as np
 
 from repro.core import (
     MOGDConfig,
-    MOGDSolver,
+    WeightedUtopiaNearest,
+    as_problem,
     estimate_objective_bounds,
     solve_pf,
-    weighted_single_objective_pick,
-    weighted_utopia_nearest,
 )
-from repro.data import batch_problem, batch_suite
+from repro.data import batch_suite, batch_task
 
-from .common import Timer, emit
+from .common import emit
 
 MOGD = MOGDConfig(steps=100, multistart=8)
 
@@ -99,7 +98,10 @@ def run(quick: bool = True) -> dict:
     profiles = {"balanced": (0.5, 0.5), "latency-first": (0.9, 0.1)}
     rows, dominate = [], {p: 0 for p in profiles}
     for w in suite:
-        problem = batch_problem(w)
+        # the declarative front door: PF, the SO baselines, and the scoring
+        # all consume the same TaskSpec-compiled problem
+        task = batch_task(w)
+        problem = as_problem(task)
         bounds = estimate_objective_bounds(problem)
         span = np.maximum(bounds[1] - bounds[0], 1e-12)
 
@@ -108,9 +110,10 @@ def run(quick: bool = True) -> dict:
             wn = np.asarray(weights) / max(sum(weights), 1e-12)
             return float((wn * (np.asarray(f) - bounds[0]) / span).sum())
 
-        res = solve_pf(problem, mode="AP", n_probes=probes, mogd=MOGD)
+        res = solve_pf(task, mode="AP", n_probes=probes, mogd=MOGD)
         for pname, weights in profiles.items():
-            i = weighted_utopia_nearest(res.F, res.utopia, res.nadir, weights)
+            i = WeightedUtopiaNearest(weights).pick(res.F, res.utopia,
+                                                    res.nadir)
             pf_f = res.F[i]
             so_f = so_baseline(problem, weights)
             som_f = so_mogd_baseline(problem, weights)

@@ -11,12 +11,11 @@ learned models.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MOGDConfig, solve_pf, weighted_utopia_nearest
-from repro.data import batch_problem, batch_suite, generate_traces
+from repro.core import MOGDConfig, WeightedUtopiaNearest, as_problem, solve_pf
+from repro.data import batch_problem, batch_suite, batch_task, generate_traces
 from repro.models import TrainConfig, fit_mlp, regression_report
 
 from .common import emit
@@ -46,23 +45,29 @@ def run(quick: bool = True) -> dict:
     for w in suite:
         truth = batch_problem(w)
         models, stds, errs = _fit_surrogates(truth)
-        surrogate = batch_problem(w, models=models)
-        surrogate_u = batch_problem(w, models=models, model_stds=stds)
+        # surrogate tasks go through the declarative spec; the trained
+        # models are tagged so each surrogate generation signatures apart.
+        # The uncertainty-aware variant declares per-objective alpha in the
+        # spec itself (F̃ = E[F] + α·std) instead of a solver config knob.
+        surrogate = batch_task(w, models=models,
+                               model_tag=("surrogate", w.name))
+        surrogate_u = batch_task(w, models=models, model_stds=stds,
+                                 alpha=1.0,
+                                 model_tag=("surrogate-unc", w.name))
 
         def eval_truth(x):
             return np.asarray(truth.objectives(jnp.asarray(x)))
 
         res = solve_pf(surrogate, mode="AP", n_probes=probes, mogd=MOGD)
-        res_u = solve_pf(surrogate_u, mode="AP", n_probes=probes,
-                         mogd=MOGDConfig(steps=100, multistart=8, alpha=1.0))
+        res_u = solve_pf(surrogate_u, mode="AP", n_probes=probes, mogd=MOGD)
         for pname, weights in (("balanced", (0.5, 0.5)),
                                ("latency-first", (0.9, 0.1))):
-            i = weighted_utopia_nearest(res.F, res.utopia, res.nadir, weights)
-            iu = weighted_utopia_nearest(res_u.F, res_u.utopia, res_u.nadir,
-                                         weights)
+            wun = WeightedUtopiaNearest(weights)
+            i = wun.pick(res.F, res.utopia, res.nadir)
+            iu = wun.pick(res_u.F, res_u.utopia, res_u.nadir)
             pf_true = eval_truth(res.X[i])
             pfu_true = eval_truth(res_u.X[iu])
-            so_true = so_baseline(surrogate, weights)
+            so_true = so_baseline(as_problem(surrogate), weights)
             # evaluate SO recommendation on ground truth too
             rows.append({
                 "job": w.name, "profile": pname,

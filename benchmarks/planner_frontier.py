@@ -14,7 +14,6 @@ import pathlib
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import MOGDConfig
 from repro.core.problem import SpaceEncoder
 from repro.nn import SHAPES
 from repro.planner import PlanModel, plan_job, plan_space, replan_elastic

@@ -22,8 +22,9 @@ from repro.core import (
     MOGDConfig,
     ProgressiveFrontier,
     hypervolume_2d,
-    make_sphere2,
     make_zdt1,
+    sphere2_task,
+    zdt1_task,
 )
 from repro.service import MOOService
 
@@ -71,11 +72,12 @@ def run(quick: bool = True) -> dict:
     speedup = batched["probes_per_s"] / max(single["probes_per_s"], 1e-9)
     hv_ratio = batched["hypervolume"] / max(single["hypervolume"], 1e-12)
 
-    # -- 2. multi-session service with coalesced probe batches
+    # -- 2. multi-session service with coalesced probe batches; every
+    # tenant submits a freshly-built TaskSpec — content signatures (not
+    # explicit keys, not id()) dedupe the compiled solvers to two
     svc = MOOService(mogd=MOGD, batch_rects=4)
-    zdt, sph = make_zdt1(), make_sphere2()
-    sids = [svc.open_session(zdt, signature=("zdt1",)) for _ in range(4)]
-    sids += [svc.open_session(sph, signature=("sphere2",)) for _ in range(4)]
+    sids = [svc.create_session(zdt1_task()) for _ in range(4)]
+    sids += [svc.create_session(sphere2_task()) for _ in range(4)]
     svc.run_until(min_probes=8)  # warm both solvers
     with Timer() as t_svc:
         out = svc.run_until(min_probes=probes)

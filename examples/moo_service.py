@@ -1,21 +1,28 @@
-"""Multi-tenant MOO service: many tuning sessions, one optimizer.
+"""Multi-tenant MOO service driven by declarative TaskSpecs.
 
-Eight analytics tenants (recurring Spark-like jobs) open tuning sessions
-against one :class:`repro.service.MOOService`.  Sessions sharing a problem
-signature reuse the same compiled MOGD solver (no recompilation for
-recurring jobs), and every service round coalesces the pending probe work
-of all tenants into shared MOGD batches — one device dispatch serves the
-whole fleet.  Each tenant then gets its own recommendation (UN or WUN with
-tenant-specific weights) from its own resumable frontier.
+Eight analytics tenants (recurring Spark-like jobs) submit *task
+objectives* — not solver plumbing — to one :class:`repro.service.MOOService`:
+knobs, objectives (with an enforced cost cap for the budget-constrained
+tenants), and a per-tenant preference policy.  Structurally-equal specs
+share one content-addressed compiled solver (no recompilation for
+recurring jobs, even though every tenant builds fresh closures), and every
+service round coalesces the pending probe work of all tenants into shared
+MOGD batches — one device dispatch serves the whole fleet.
 
     PYTHONPATH=src python examples/moo_service.py
 """
 
 import jax.numpy as jnp
 
-from repro.core import MOGDConfig, MOOProblem, continuous, integer
+from repro.core import MOGDConfig, continuous, integer
 from repro.core.problem import SpaceEncoder
-from repro.service import MOOService
+from repro.service import (
+    MOOService,
+    Objective,
+    TaskSpec,
+    UtopiaNearest,
+    WeightedUtopiaNearest,
+)
 
 # one recurring job template: latency vs cost over cluster knobs, with a
 # per-tenant dataset scale folded into the objective model
@@ -23,41 +30,63 @@ specs = [integer("cores", 4, 64), continuous("mem_fraction", 0.2, 0.9)]
 enc = SpaceEncoder(specs)
 
 
-def make_job(scale: float) -> MOOProblem:
+def make_task(scale: float, weights=None, cost_cap=None) -> TaskSpec:
+    """A tenant's declarative task: objectives, caps, preference."""
+
     def objectives(x):
         cfg = enc.decode_soft(x)
         lat = scale * 120.0 / cfg["cores"] ** 0.9 + 2.0 * (1 - cfg["mem_fraction"])
         cost = cfg["cores"] * 0.02 * (1.0 + 0.1 * cfg["mem_fraction"])
         return jnp.stack([lat, cost])
 
-    return MOOProblem(specs=specs, objectives=objectives, k=2,
-                      names=("latency_s", "cost_usd"))
+    return TaskSpec(
+        knobs=specs,
+        objectives=(
+            Objective("latency_s"),
+            Objective("cost_usd",
+                      bound=None if cost_cap is None else (None, cost_cap)),
+        ),
+        model=objectives,
+        preference=(WeightedUtopiaNearest(weights) if weights
+                    else UtopiaNearest()),
+        name="etl",
+    )
 
 
 svc = MOOService(mogd=MOGDConfig(steps=80, multistart=8), batch_rects=4)
 
-# two recurring job classes (signatures), four tenants each
+# two recurring job classes, four tenants each; tenants re-build their spec
+# from scratch (fresh closures) — content signatures still dedupe compiles
 tenants = {}
 for i in range(8):
     scale = 1.0 if i < 4 else 3.5
-    sig = ("etl-small",) if i < 4 else ("etl-large",)
-    tenants[f"tenant-{i}"] = svc.open_session(make_job(scale), signature=sig)
+    w = (0.8, 0.2) if i % 2 == 0 else (0.2, 0.8)
+    tenants[f"tenant-{i}"] = svc.create_session(make_task(scale, weights=w))
 
-# drive all sessions together: probe work is coalesced per signature
+# drive all sessions together: probe work is coalesced per task signature
 svc.run_until(min_probes=32)
 st = svc.stats()
 print(f"{st['sessions']} sessions | {st['compiled_solvers']} compiled solvers "
       f"({st['solver_cache_hits']} cache hits) | "
       f"{st['coalesced_probes']} probes in {st['coalesced_batches']} shared batches")
 
-# per-tenant recommendations from per-session frontiers
+# per-tenant recommendations: each session's own preference policy applies
 for name, sid in list(tenants.items())[:4]:
-    w = (0.8, 0.2) if name.endswith(("0", "1")) else (0.2, 0.8)
-    rec = svc.recommend(sid, strategy="wun", weights=w)
+    rec = svc.recommend(sid)
     info = svc.session_info(sid)
     print(f"{name}: {rec.config} -> lat={rec.objectives[0]:.2f}s "
           f"cost=${rec.objectives[1]:.3f} "
           f"(frontier {rec.frontier_size}, probes {info.probes})")
+
+# a budget-capped tenant: the declared cost cap is *enforced* — the
+# frontier provably contains no plan above it
+sid_cap = svc.create_session(make_task(3.5, cost_cap=0.6))
+svc.probe(sid_cap, n_probes=32)
+rec = svc.recommend(sid_cap)
+F, _ = svc.frontier(sid_cap)
+print(f"capped tenant: cost<=0.6 -> max frontier cost "
+      f"{F[:, 1].max():.3f}, pick lat={rec.objectives[0]:.2f}s "
+      f"cost=${rec.objectives[1]:.3f}")
 
 # sessions are resumable: a tenant asks for a sharper frontier later
 sid0 = tenants["tenant-0"]

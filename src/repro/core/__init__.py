@@ -3,6 +3,8 @@
 Public API::
 
     from repro.core import (
+        TaskSpec, Objective,                      # declarative front door
+        UtopiaNearest, WeightedUtopiaNearest, WorkloadAware,
         MOOProblem, continuous, integer, categorical, boolean,
         MOGDConfig, MOGDSolver,
         ProgressiveFrontier, solve_pf,
@@ -10,6 +12,10 @@ Public API::
         utopia_nearest, weighted_utopia_nearest,
         pareto_mask, pareto_filter, hypervolume,
     )
+
+New code should describe tuning tasks with :class:`TaskSpec` and let
+``TaskSpec.compile()`` build the :class:`MOOProblem`; the raw constructors
+remain for the solver internals and legacy callers.
 """
 
 from .problem import (
@@ -47,8 +53,25 @@ from .mogd import (
     grid_reference_solve,
 )
 from .frontier_store import FrontierStore
+from .task import (
+    Objective,
+    Preference,
+    TaskSpec,
+    UtopiaNearest,
+    WeightedUtopiaNearest,
+    WorkloadAware,
+    as_problem,
+    preference_from_legacy,
+)
 from .progressive_frontier import PFResult, PFState, ProgressiveFrontier, solve_pf
-from .synthetic import make_dtlz2, make_mixed_problem, make_sphere2, make_zdt1
+from .synthetic import (
+    make_dtlz2,
+    make_mixed_problem,
+    make_sphere2,
+    make_zdt1,
+    sphere2_task,
+    zdt1_task,
+)
 from .baselines import (
     BaselineResult,
     normalized_constraints,

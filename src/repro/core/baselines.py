@@ -10,8 +10,10 @@
   sort, crowding distance, tournament selection, SBX crossover, polynomial
   mutation.  Exhibits the paper's inconsistency-across-probe-budgets issue.
 
-All methods consume the same :class:`MOOProblem` and the same gradient /
-evaluation machinery as PF so timing comparisons are apples-to-apples.
+All methods accept the same :class:`~repro.core.task.TaskSpec` (or a
+compiled :class:`MOOProblem`) and share PF's gradient / evaluation
+machinery, so timing comparisons are apples-to-apples; declared objective
+bounds are honored by every method (infeasible points are excluded).
 Each returns ``(F, X, trace)`` where trace rows are
 ``(elapsed_s, uncertain_fraction_or_nan, n_points)`` — WS/NC/Evo produce
 their first frontier only at the end of a full pass, which is exactly the
@@ -29,8 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import pareto
-from .mogd import MOGDConfig, MOGDSolver, estimate_objective_bounds
-from .problem import MOOProblem
+from .mogd import MOGDConfig, estimate_objective_bounds
+from .problem import MOOProblem, feasible_mask
+from .task import as_problem
 
 
 @dataclasses.dataclass
@@ -40,6 +43,21 @@ class BaselineResult:
     trace: list
     probes: int
     elapsed: float
+
+
+def _apply_value_constraints(problem: MOOProblem, F: np.ndarray,
+                             X: np.ndarray, tol: float = 1e-6):
+    """Mark-and-exclude points violating the task's hard value bounds, so
+    WS/NC/Evo honor a declared budget cap exactly like PF does (fair
+    comparison under the same TaskSpec).  Must run BEFORE Pareto masking —
+    an infeasible point may dominate the constrained optimum, and
+    filtering after the mask would drop both (FrontierStore.add applies
+    the same order)."""
+    vc = problem.value_constraints
+    if vc is None or len(F) == 0:
+        return F, X
+    ok = feasible_mask(vc, F, tol)
+    return F[ok], X[ok]
 
 
 # ---------------------------------------------------------------------------
@@ -75,13 +93,14 @@ def weight_lattice(k: int, n_points: int) -> np.ndarray:
 
 
 def weighted_sum(
-    problem: MOOProblem,
+    problem,  # MOOProblem or TaskSpec
     n_probes: int = 10,
     mogd: MOGDConfig = MOGDConfig(),
     bounds: np.ndarray | None = None,
 ) -> BaselineResult:
     """WS: each weight vector defines one scalarized SO problem, solved by
     multi-start gradient descent on sum_i w_i * F̂_i."""
+    problem = as_problem(problem)
     t0 = time.perf_counter()
     if bounds is None:
         bounds = estimate_objective_bounds(problem)
@@ -128,15 +147,16 @@ def weighted_sum(
     key = jax.random.PRNGKey(mogd.seed)
     x0s = jax.random.uniform(key, (len(W), mogd.multistart, problem.dim))
     X, F = run(W, x0s)
-    F, X = np.asarray(F), np.asarray(X)
-    mask = np.asarray(pareto.pareto_mask(F))
+    F, X = _apply_value_constraints(problem, np.asarray(F), np.asarray(X))
+    if len(F):
+        mask = np.asarray(pareto.pareto_mask(F))
+        F, X = F[mask], X[mask]
     el = time.perf_counter() - t0
-    return BaselineResult(F[mask], X[mask], [(el, np.nan, int(mask.sum()))],
-                          int(len(W)), el)
+    return BaselineResult(F, X, [(el, np.nan, len(F))], int(len(W)), el)
 
 
 def normalized_constraints(
-    problem: MOOProblem,
+    problem,  # MOOProblem or TaskSpec
     n_probes: int = 10,
     mogd: MOGDConfig = MOGDConfig(),
     bounds: np.ndarray | None = None,
@@ -150,6 +170,7 @@ def normalized_constraints(
     (reference) points, which are found first by k single-objective solves
     — part of why NC's time-to-first-frontier is long (Fig. 4a).
     """
+    problem = as_problem(problem)
     t0 = time.perf_counter()
     if bounds is None:
         bounds = estimate_objective_bounds(problem)
@@ -180,7 +201,8 @@ def normalized_constraints(
     boxes = np.stack(boxes)
     solver = problem.solver_for(mogd)
     res = solver.solve(boxes, target=0)
-    F, X = res.f[res.feasible], res.x[res.feasible]
+    F, X = _apply_value_constraints(problem, res.f[res.feasible],
+                                    res.x[res.feasible])
     if len(F):
         mask = np.asarray(pareto.pareto_mask(F))
         F, X = F[mask], X[mask]
@@ -213,7 +235,7 @@ def _fast_non_dominated_sort(F: np.ndarray) -> np.ndarray:
 
 
 def nsga2(
-    problem: MOOProblem,
+    problem,  # MOOProblem or TaskSpec
     n_probes: int = 50,
     pop_size: int = 40,
     seed: int = 0,
@@ -225,6 +247,7 @@ def nsga2(
     """NSGA-II; ``n_probes`` caps the number of *frontier points* requested,
     generations continue until the population's first front stabilizes at
     that size or the generation budget runs out."""
+    problem = as_problem(problem)
     t0 = time.perf_counter()
     rng = np.random.default_rng(seed)
     D = problem.dim
@@ -296,15 +319,23 @@ def nsga2(
                 order.extend(take.tolist())
                 break
         P, F = allP[order], allF[order]
+        # stopping criterion and trace count only *feasible* first-front
+        # points — a bounded task must not stop early (or report frontier
+        # sizes) on the strength of cap-violating individuals
+        vc = problem.value_constraints
+        feas_F = F if vc is None else F[feasible_mask(vc, F)]
+        first_front = (feas_F[_fast_non_dominated_sort(feas_F) == 0]
+                       if len(feas_F) else feas_F)
         if record_every_gen:
-            first = F[_fast_non_dominated_sort(F) == 0]
-            trace.append((time.perf_counter() - t0, np.nan, len(first)))
-        first_front = F[_fast_non_dominated_sort(F) == 0]
+            trace.append((time.perf_counter() - t0, np.nan,
+                          len(first_front)))
         if len(np.unique(np.round(first_front, 9), axis=0)) >= n_probes:
             break
-    ranks = _fast_non_dominated_sort(F)
-    sel = ranks == 0
-    Fo, Xo = F[sel], problem_encoder_snap(P[sel])
-    _, uniq = np.unique(np.round(Fo, 9), axis=0, return_index=True)
+    Fo, Xo = _apply_value_constraints(problem, F, problem_encoder_snap(P))
+    if len(Fo):
+        sel = _fast_non_dominated_sort(Fo) == 0
+        Fo, Xo = Fo[sel], Xo[sel]
+        _, uniq = np.unique(np.round(Fo, 9), axis=0, return_index=True)
+        Fo, Xo = Fo[uniq], Xo[uniq]
     el = time.perf_counter() - t0
-    return BaselineResult(Fo[uniq], Xo[uniq], trace, evals, el)
+    return BaselineResult(Fo, Xo, trace, evals, el)

@@ -69,12 +69,24 @@ class FrontierStore:
     """Grow-on-demand array store with a live incremental Pareto mask."""
 
     def __init__(self, k: int, dim: int, capacity: int = 256,
-                 use_kernel: bool = False, kernel_interpret: bool = True):
+                 use_kernel: bool = False, kernel_interpret: bool = True,
+                 bounds: np.ndarray | None = None, bounds_tol: float = 1e-6):
         cap = _bucket(capacity, floor=64)
         self.k = int(k)
         self.dim = int(dim)
         self.use_kernel = use_kernel
         self.kernel_interpret = kernel_interpret
+        # Hard value constraints (k, 2) rows (lo, hi), ±inf = open edge.
+        # Offers violating them are marked infeasible and excluded — the
+        # frontier can never contain a point outside a declared budget cap.
+        # Tolerance semantics are shared with MOGD and the baselines via
+        # problem.feasible_mask.
+        self._bounds = None
+        self._bounds_tol = bounds_tol
+        if bounds is not None:
+            b = np.asarray(bounds, dtype=np.float64).reshape(self.k, 2)
+            if np.any(np.isfinite(b)):
+                self._bounds = b
         self._F = np.full((cap, self.k), np.inf, dtype=np.float64)
         self._X = np.zeros((cap, self.dim), dtype=np.float64)
         self._alive = np.zeros(cap, dtype=bool)
@@ -86,6 +98,7 @@ class FrontierStore:
         self._row_keys: list = []  # key per appended row, aligned with [0, n)
         self.total_offered = 0
         self.total_accepted = 0
+        self.total_infeasible = 0  # offers excluded by the value constraints
 
     # ------------------------------------------------------------------
     @property
@@ -169,6 +182,15 @@ class FrontierStore:
             # collide in fp32 dedupe instead of wrongly killing each other).
             F_new = np.float64(np.float32(F_new))
         self.total_offered += F_new.shape[0]
+        if self._bounds is not None:
+            # mark-and-exclude: infeasible offers never enter the frontier
+            from .problem import feasible_mask
+
+            ok = feasible_mask(self._bounds, F_new, self._bounds_tol)
+            self.total_infeasible += int((~ok).sum())
+            if not ok.any():
+                return 0
+            F_new, X_new = F_new[ok], X_new[ok]
         # Dedupe (within the batch and against the live frontier) at the
         # seed finalize's 1e-9 resolution.  Offers equal to dead or
         # previously rejected points need no keys: their old dominator is

@@ -28,7 +28,6 @@ before loss construction (see ``MOOProblem.effective_objectives``).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
 import jax
@@ -95,12 +94,35 @@ def _eq4_loss(
     return target_term + viol_term + tie_term
 
 
+def _user_bound_arrays(problem: MOOProblem):
+    """Per-objective hard-bound arrays ``(ulo, uhi, uscale)`` or None.
+
+    ``uscale`` normalizes the violation penalty and tolerance; it is the
+    shared :func:`repro.core.problem.bound_scales` scale, so MOGD, the
+    frontier store, and the baselines judge near-cap points identically."""
+    from .problem import bound_scales
+
+    vc = problem.value_constraints
+    if vc is None:
+        return None
+    vc = np.asarray(vc, dtype=np.float64).reshape(problem.k, 2)
+    if not np.any(np.isfinite(vc)):
+        return None
+    scale = bound_scales(vc)
+    return jnp.asarray(vc[:, 0]), jnp.asarray(vc[:, 1]), jnp.asarray(scale)
+
+
 class MOGDSolver:
     """Batched MOGD over a fixed :class:`MOOProblem`.
 
     One instance caches a jit per (target objective) — the PF algorithms
     only ever use a handful of targets, so compilation is amortized across
     the thousands of CO probes of a planning session.
+
+    When the problem carries user value constraints (a TaskSpec objective
+    ``bound``), every CO solve additionally penalizes bound violations and
+    reports bound-infeasible results as infeasible — a declared budget cap
+    is enforced at the solver, not filtered after the fact.
     """
 
     def __init__(self, problem: MOOProblem, config: MOGDConfig = MOGDConfig()):
@@ -119,13 +141,27 @@ class MOGDSolver:
         obj_fn = self.problem.effective_objectives(cfg.alpha)
         snap = self.problem.encoder.snap
         penalty = cfg.penalty
+        user_bounds = _user_bound_arrays(self.problem)
+
+        if user_bounds is None:
+            bound_pen = lambda f: 0.0
+        else:
+            ulo, uhi, uscale = user_bounds
+
+            def bound_pen(f: Array) -> Array:
+                # excess is 0 at open (±inf) edges: max(-inf, 0) == 0
+                excess = jnp.maximum(ulo - f, 0.0) + jnp.maximum(f - uhi, 0.0)
+                return jnp.where(
+                    excess > 0.0, (excess / uscale) ** 2 + penalty, 0.0
+                ).sum()
 
         def descend_one(x0: Array, lo: Array, hi: Array, target: Array) -> Array:
             """GD from one start for one CO problem -> final x (D,)."""
 
-            loss_fn = lambda x: _eq4_loss(
-                obj_fn(x), lo, hi, target, penalty, cfg.tie_break_eps
-            )
+            def loss_fn(x: Array) -> Array:
+                f = obj_fn(x)
+                return _eq4_loss(f, lo, hi, target, penalty,
+                                 cfg.tie_break_eps) + bound_pen(f)
             grad_fn = jax.grad(loss_fn)
 
             def step(carry, _):
@@ -166,6 +202,11 @@ class MOGDSolver:
                 jnp.logical_and(fhat >= -cfg.feas_tol, fhat <= 1.0 + cfg.feas_tol),
                 axis=-1,
             )  # (B, S)
+            if user_bounds is not None:
+                tol = cfg.feas_tol * uscale
+                feas = jnp.logical_and(feas, jnp.all(
+                    jnp.logical_and(fvals >= ulo - tol, fvals <= uhi + tol),
+                    axis=-1))
             onehot = jax.nn.one_hot(target, fvals.shape[-1],
                                     dtype=fvals.dtype)
             ft = jnp.sum(fvals * onehot, axis=-1)  # (B, S)

@@ -111,15 +111,45 @@ class SpaceEncoder:
 
     # -- encoding: dict of raw values -> relaxed vector --------------------
     def encode(self, cfg: dict) -> np.ndarray:
+        """Raw knob dict -> relaxed vector; validates the configuration.
+
+        Unknown knob names, missing knobs, categorical values outside the
+        declared choices, and numeric values outside ``[low, high]`` all
+        raise ``ValueError`` — a mistyped or stale configuration must fail
+        loudly, not silently encode to garbage."""
+        known = {s.name for s in self.specs}
+        unknown = set(cfg) - known
+        if unknown:
+            raise ValueError(
+                f"unknown knob(s) {sorted(unknown)}; valid knobs: "
+                f"{sorted(known)}")
+        missing = known - set(cfg)
+        if missing:
+            raise ValueError(f"missing knob value(s) {sorted(missing)}")
         x = np.zeros(self.dim, dtype=np.float64)
         for spec, off in zip(self.specs, self._offsets):
             v = cfg[spec.name]
             if spec.kind == "categorical":
+                if v not in spec.choices:
+                    raise ValueError(
+                        f"knob {spec.name!r}: value {v!r} not in choices "
+                        f"{spec.choices}")
                 x[off + spec.choices.index(v)] = 1.0
             elif spec.kind == "boolean":
                 x[off] = 1.0 if v else 0.0
             else:
-                x[off] = (float(v) - spec.low) / (spec.high - spec.low)
+                try:
+                    fv = float(v)
+                except (TypeError, ValueError):
+                    raise ValueError(
+                        f"knob {spec.name!r}: expected a number, got {v!r}"
+                    ) from None
+                tol = 1e-9 * (spec.high - spec.low)
+                if not (spec.low - tol <= fv <= spec.high + tol):
+                    raise ValueError(
+                        f"knob {spec.name!r}: value {fv} outside "
+                        f"[{spec.low}, {spec.high}]")
+                x[off] = (fv - spec.low) / (spec.high - spec.low)
         return x
 
     def decode_soft(self, x: Array) -> dict:
@@ -168,6 +198,38 @@ class SpaceEncoder:
 
 
 # ---------------------------------------------------------------------------
+# Hard value bounds ([F_i^L, F_i^U], ±inf = open edge): shared feasibility
+# semantics.  Every layer that checks a declared bound — MOGD's solve-time
+# mask, the frontier store's mark-and-exclude, the baselines' filter —
+# derives its tolerance from the SAME per-objective scale, so a point near
+# a cap is judged identically everywhere.
+# ---------------------------------------------------------------------------
+
+
+def bound_scales(vc: np.ndarray) -> np.ndarray:
+    """Per-objective tolerance scale for value constraints ``vc: (k, 2)``:
+    the bound width where both edges are finite, else the magnitude of the
+    single finite edge (min 1), else 1 for fully-open rows."""
+    vc = np.asarray(vc, dtype=np.float64).reshape(-1, 2)
+    lo, hi = vc[:, 0], vc[:, 1]
+    both = np.isfinite(lo) & np.isfinite(hi)
+    edge = np.where(np.isfinite(lo), np.abs(lo), np.abs(hi))
+    edge = np.nan_to_num(edge, posinf=1.0, neginf=1.0)
+    width = np.where(both, hi - lo, 1.0)  # finite where selected
+    return np.maximum(np.where(both, width, np.maximum(edge, 1.0)), 1e-12)
+
+
+def feasible_mask(vc: np.ndarray, F: np.ndarray,
+                  tol: float = 1e-6) -> np.ndarray:
+    """Boolean mask of rows of ``F: (N, k)`` within the value constraints
+    (with relative slack ``tol`` per :func:`bound_scales`)."""
+    vc = np.asarray(vc, dtype=np.float64).reshape(-1, 2)
+    eps = tol * bound_scales(vc)
+    F = np.asarray(F, dtype=np.float64)
+    return np.all((F >= vc[:, 0] - eps) & (F <= vc[:, 1] + eps), axis=-1)
+
+
+# ---------------------------------------------------------------------------
 # MOO problem
 # ---------------------------------------------------------------------------
 
@@ -188,8 +250,12 @@ class MOOProblem:
     k: int
     names: tuple = ()
     objective_stds: Callable[[Array], Array] | None = None
-    # Optional user value constraints per objective (paper: [F_i^L, F_i^U]).
+    # Optional user value constraints per objective (paper: [F_i^L, F_i^U]),
+    # rows (lo, hi) in minimized orientation; ±inf marks an open edge.
     value_constraints: np.ndarray | None = None  # (k, 2) or None
+    # Per-objective uncertainty weights (TaskSpec's Objective.alpha).  When
+    # set they take precedence over the scalar alpha a solver config passes.
+    alphas: np.ndarray | None = None  # (k,) or None
 
     def __post_init__(self):
         self.encoder = SpaceEncoder(self.specs)
@@ -202,13 +268,18 @@ class MOOProblem:
         return self.encoder.dim
 
     def effective_objectives(self, alpha: float = 0.0) -> Callable[[Array], Array]:
-        """Mean + alpha * std objective vector function (paper Eq. for F̃)."""
-        if alpha == 0.0 or self.objective_stds is None:
+        """Mean + alpha * std objective vector function (paper Eq. for F̃).
+
+        ``alpha`` may be a scalar (legacy MOGDConfig.alpha) or a (k,)
+        vector; a spec-declared ``self.alphas`` vector overrides it."""
+        a = self.alphas if self.alphas is not None else alpha
+        if self.objective_stds is None or not np.any(np.asarray(a) != 0.0):
             return self.objectives
         mean_fn, std_fn = self.objectives, self.objective_stds
+        av = jnp.asarray(a) if np.ndim(a) else a
 
         def fn(x: Array) -> Array:
-            return mean_fn(x) + alpha * std_fn(x)
+            return mean_fn(x) + av * std_fn(x)
 
         return fn
 

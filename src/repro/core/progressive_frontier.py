@@ -42,6 +42,7 @@ from .hyperrectangle import (
 )
 from .mogd import COResult, MOGDConfig, MOGDSolver, estimate_objective_bounds, grid_reference_solve
 from .problem import MOOProblem
+from .task import as_problem
 
 
 @dataclasses.dataclass
@@ -73,6 +74,7 @@ class PFResult:
     probes: int
     elapsed: float
     state: PFState  # resume handle
+    infeasible_excluded: int = 0  # offers rejected by value constraints
 
 
 class ProgressiveFrontier:
@@ -92,6 +94,7 @@ class ProgressiveFrontier:
             raise ValueError(f"unknown PF mode {mode!r}")
         if batch_rects < 1:
             raise ValueError("batch_rects must be >= 1")
+        problem = as_problem(problem)  # accept a TaskSpec front door too
         self.problem = problem
         self.mode = mode
         self.grid_l = grid_l
@@ -126,11 +129,19 @@ class ProgressiveFrontier:
         """Init phase of Alg. 1: k single-objective solves -> reference
         points -> global Utopia/Nadir -> first rectangle."""
         t0 = time.perf_counter()
-        if self.problem.value_constraints is not None:
-            bounds = np.asarray(self.problem.value_constraints, dtype=np.float64).T
-            bounds = bounds.reshape(2, self._k)
+        vc = self.problem.value_constraints
+        if vc is not None and np.all(np.isfinite(vc)):
+            # fully-bounded task: the declared box IS the objective box
+            bounds = np.asarray(vc, dtype=np.float64).reshape(self._k, 2).T
         else:
             bounds = estimate_objective_bounds(self.problem)
+            if vc is not None:
+                # Overlay the user's hard value constraints [F^L, F^U]
+                # where declared (±inf edges keep the sampled estimate):
+                # the initial objective box — and hence every probe —
+                # honors the caps.
+                user = np.asarray(vc, dtype=np.float64).reshape(self._k, 2).T
+                bounds = np.where(np.isfinite(user), user, bounds)
         refs, xs = [], []
         for i in range(self._k):
             r = (
@@ -156,7 +167,8 @@ class ProgressiveFrontier:
         nadir = utopia + span
         store = FrontierStore(k=self._k, dim=self.problem.dim,
                               use_kernel=self.use_kernel,
-                              kernel_interpret=self.kernel_interpret)
+                              kernel_interpret=self.kernel_interpret,
+                              bounds=vc)
         store.add(refs, np.stack(xs))
         state = PFState(
             queue=RectangleQueue(make_rectangle(utopia, nadir)),
@@ -295,11 +307,12 @@ class ProgressiveFrontier:
             probes=state.probes,
             elapsed=state.elapsed,
             state=state,
+            infeasible_excluded=state.store.total_infeasible,
         )
 
 
 def solve_pf(
-    problem: MOOProblem,
+    problem,  # MOOProblem or TaskSpec
     mode: str = "AP",
     n_probes: int = 32,
     mogd: MOGDConfig = MOGDConfig(),

@@ -33,9 +33,16 @@ def weighted_utopia_nearest(
     F: np.ndarray, utopia: np.ndarray, nadir: np.ndarray, weights
 ) -> int:
     """WUN: weights scale normalized objective distances; larger weight on
-    an objective pulls the recommendation toward points good on it."""
+    an objective pulls the recommendation toward points good on it.
+
+    Weights must be non-negative with a positive sum — a zero or negative
+    weight vector has no meaningful normalization and raises."""
     w = np.asarray(weights, dtype=np.float64)
-    w = w / max(w.sum(), 1e-12)
+    if np.any(w < 0.0):
+        raise ValueError(f"WUN weights must be >= 0, got {list(w)}")
+    if w.sum() <= 0.0:
+        raise ValueError(f"WUN weights must have positive sum, got {list(w)}")
+    w = w / w.sum()
     z = _normalize(F, utopia, nadir)
     return int(np.argmin(np.linalg.norm(w * z, axis=1)))
 
@@ -54,7 +61,12 @@ class WorkloadClassWeights:
     high: tuple = (0.7, 0.3)
 
     def for_class(self, cls: str, k: int) -> np.ndarray:
-        base = {"low": self.low, "medium": self.medium, "high": self.high}[cls]
+        table = {"low": self.low, "medium": self.medium, "high": self.high}
+        if cls not in table:
+            raise ValueError(
+                f"unknown workload class {cls!r}; valid classes: "
+                f"{sorted(table)}")
+        base = table[cls]
         w = np.ones(k)
         w[: min(len(base), k)] = base[: min(len(base), k)]
         return w
@@ -93,10 +105,15 @@ def select(
     weights=None,
     default_latency_s: float | None = None,
 ) -> int:
-    """Unified entry point over the §5 selectors (used by the MOO service).
+    """Unified entry point over the §5 selectors.
 
     ``strategy`` is one of ``"un"``, ``"wun"`` (requires ``weights``), or
     ``"workload"`` (requires ``weights`` and ``default_latency_s``).
+
+    Deprecated in favor of the typed :class:`repro.core.task.Preference`
+    policies (``UtopiaNearest`` / ``WeightedUtopiaNearest`` /
+    ``WorkloadAware``); kept as the shim behind
+    :func:`repro.core.task.preference_from_legacy`.
     """
     s = strategy.lower()
     if s == "un":

@@ -3,6 +3,11 @@
 Shared by the test suite (tests/conftest.py fixtures), the throughput
 benchmarks, and the service examples, so every layer exercises the same
 synthetic workloads the paper benchmarks against.
+
+``make_*`` return compiled :class:`MOOProblem`\\ s (solver-layer tests);
+``*_task`` return the declarative :class:`TaskSpec` front door used by the
+service/benchmark layers — each call builds fresh closures, so they also
+exercise content-addressed signature equality.
 """
 
 from __future__ import annotations
@@ -10,6 +15,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .problem import MOOProblem, SpaceEncoder, boolean, categorical, continuous, integer
+from .task import Objective, Preference, TaskSpec, UtopiaNearest
 
 
 def make_zdt1(d: int = 6) -> MOOProblem:
@@ -55,6 +61,42 @@ def make_dtlz2(k: int = 3, d: int = 6) -> MOOProblem:
         return jnp.stack(fs)
 
     return MOOProblem(specs=specs, objectives=obj, k=k)
+
+
+def zdt1_task(d: int = 6, f2_cap: float | None = None,
+              preference: Preference = UtopiaNearest()) -> TaskSpec:
+    """ZDT1 as a declarative TaskSpec; ``f2_cap`` declares a hard upper
+    bound on f2 (the regression tests' budget cap)."""
+    specs = [continuous(f"x{i}", 0.0, 1.0) for i in range(d)]
+
+    def obj(x):
+        f1 = x[0]
+        g = 1.0 + 9.0 * jnp.mean(x[1:])
+        f2 = g * (1.0 - jnp.sqrt(jnp.clip(f1 / g, 1e-12, None)))
+        return jnp.stack([f1, f2])
+
+    return TaskSpec(
+        knobs=specs,
+        objectives=(Objective("f1"),
+                    Objective("f2", bound=None if f2_cap is None
+                              else (None, f2_cap))),
+        model=obj,
+        preference=preference,
+        name="zdt1",
+    )
+
+
+def sphere2_task(d: int = 4,
+                 preference: Preference = UtopiaNearest()) -> TaskSpec:
+    specs = [continuous(f"x{i}", 0.0, 1.0) for i in range(d)]
+    a = jnp.full(d, 0.25)
+    b = jnp.full(d, 0.75)
+
+    def obj(x):
+        return jnp.stack([jnp.sum((x - a) ** 2), jnp.sum((x - b) ** 2)])
+
+    return TaskSpec(knobs=specs, objectives=("f1", "f2"), model=obj,
+                    preference=preference, name="sphere2")
 
 
 def make_mixed_problem() -> MOOProblem:

@@ -9,6 +9,7 @@ from .workloads import (
     batch_latency,
     batch_problem,
     batch_suite,
+    batch_task,
     default_config,
     generate_traces,
     spark_space,

@@ -253,6 +253,37 @@ def batch_problem(w: BatchWorkload, models: dict | None = None,
                       names=("latency_s", "cost_usd"), objective_stds=stds)
 
 
+def batch_task(w: BatchWorkload, models: dict | None = None,
+               model_stds: dict | None = None,
+               preference=None,
+               cost_cap: float | None = None,
+               alpha: float = 0.0,
+               model_tag: object = None):
+    """Declarative TaskSpec for one batch workload (the new front door).
+
+    ``cost_cap`` declares the paper's budgetary cap ``F_cost <= cap`` as an
+    enforced bound; ``alpha`` weights predictive std on both objectives
+    (uncertainty-aware solving, §4.2.3).  ``model_tag`` distinguishes
+    surrogate generations (e.g. a training seed) in the task signature —
+    ground-truth tasks need none, their closures fingerprint by content."""
+    from repro.core.task import Objective, TaskSpec, UtopiaNearest
+
+    problem = batch_problem(w, models=models, model_stds=model_stds)
+    return TaskSpec(
+        knobs=tuple(problem.specs),
+        objectives=(
+            Objective("latency_s", alpha=alpha),
+            Objective("cost_usd", alpha=alpha,
+                      bound=None if cost_cap is None else (None, cost_cap)),
+        ),
+        model=problem.objectives,
+        model_stds=problem.objective_stds,
+        preference=preference if preference is not None else UtopiaNearest(),
+        model_id=None if model_tag is None else (w.name, model_tag),
+        name=f"batch:{w.name}",
+    )
+
+
 def streaming_problem(w: StreamingWorkload, k: int = 2,
                       models: dict | None = None) -> MOOProblem:
     """k=2: (latency, -throughput); k=3 adds cost (paper Expt 2)."""

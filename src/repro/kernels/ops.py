@@ -7,7 +7,6 @@ True on this CPU container (Pallas interpret mode), False on real TPU.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_bhsd

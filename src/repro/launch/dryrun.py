@@ -35,7 +35,7 @@ from repro.configs import (
     input_specs,
     runnable,
 )
-from repro.distributed import named_sharding_tree, spec_tree, logical_spec
+from repro.distributed import named_sharding_tree, logical_spec
 from repro.launch.mesh import make_production_mesh
 from repro.launch.plans import Plan, apply_plan, baseline_plan, rules_for
 from repro.launch.roofline import (

@@ -1,9 +1,13 @@
 """The planning entry point: Progressive Frontier over execution plans.
 
-``plan_job(arch, shape)`` builds the MOOProblem (plan knobs x analytic or
-surrogate models), runs PF-AP (the paper's parallel approximate algorithm),
-and recommends a plan with Weighted-Utopia-Nearest — returning both the
-recommendation and the whole Pareto frontier (latency/cost/energy).
+``plan_job(arch, shape)`` builds the declarative :class:`TaskSpec` (plan
+knobs x analytic or surrogate models, objectives with optional hard value
+bounds, a typed preference policy), compiles it into the MOOProblem, runs
+PF-AP (the paper's parallel approximate algorithm), and recommends a plan
+via the spec's preference — returning both the recommendation and the
+whole Pareto frontier (latency/cost/energy).  The compiled-solver cache is
+keyed by ``TaskSpec.signature()``, so recurring planning jobs re-submitted
+with fresh model closures still skip XLA recompilation.
 
 ``replan_elastic`` is the paper's serverless/auto-scaling use case mapped
 to TPU fleets: after a node failure or resize, re-run PF against the
@@ -21,14 +25,16 @@ import numpy as np
 
 from repro.core import (
     MOGDConfig,
-    MOOProblem,
+    Objective,
+    Preference,
     ProgressiveFrontier,
-    weighted_utopia_nearest,
+    TaskSpec,
+    WeightedUtopiaNearest,
 )
 from repro.launch.plans import Plan
 from repro.nn import SHAPES, ArchConfig, ShapeSpec
 
-from .cost_model import HBM_BYTES, PlanModel
+from .cost_model import PlanModel
 from .space import decode_plan, plan_space
 
 
@@ -44,10 +50,21 @@ class PlanRecommendation:
     pf_state: object              # resumable
 
 
-def _problem_for(cfg: ArchConfig, shape: ShapeSpec,
-                 model: PlanModel | None = None,
-                 objectives=("latency", "cost"),
-                 chip_choices=None) -> tuple[MOOProblem, PlanModel]:
+def plan_task(cfg: ArchConfig, shape: ShapeSpec,
+              model: PlanModel | None = None,
+              objectives=("latency", "cost"),
+              chip_choices=None,
+              objective_bounds: dict | None = None,
+              preference: Preference | None = None,
+              shape_name: str = "") -> tuple[TaskSpec, PlanModel]:
+    """Build the declarative TaskSpec for one planning job.
+
+    ``objective_bounds`` maps objective name -> (low, high) hard value
+    constraints (e.g. ``{"cost": (None, 120.0)}`` for a budget cap); bounds
+    are enforced by MOGD and the frontier store, not merely reported.  The
+    spec's ``model_id`` encodes arch/shape/objectives/chips/calibration, so
+    a recurring planning job re-submitted later signatures equal and reuses
+    the compiled solver."""
     model = model or PlanModel(cfg, shape)
     specs = plan_space()
     if chip_choices is not None:
@@ -75,15 +92,32 @@ def _problem_for(cfg: ArchConfig, shape: ShapeSpec,
             soft["num_chips"] = w @ jnp.asarray(proj)
         return model.objectives(soft)[sel]
 
-    problem = MOOProblem(specs=specs, objectives=obj, k=len(sel),
-                         names=tuple(objectives))
-    return problem, model
+    bounds = objective_bounds or {}
+    unknown = set(bounds) - set(objectives)
+    if unknown:
+        raise ValueError(f"objective_bounds for unknown objectives "
+                         f"{sorted(unknown)}; declared: {objectives}")
+    objs = tuple(Objective(o, bound=bounds.get(o)) for o in objectives)
+    spec = TaskSpec(
+        knobs=tuple(specs),
+        objectives=objs,
+        model=obj,
+        preference=preference or WeightedUtopiaNearest((0.5,) * len(objs)),
+        # stable content id: recurring jobs (same arch/shape/objectives/
+        # chips/calibration) signature equal across fresh model closures
+        model_id=("plan", cfg.name, shape_name, tuple(objectives),
+                  tuple(chip_choices) if chip_choices else None,
+                  round(model.cal_compute, 6), round(model.cal_memory, 6),
+                  round(model.cal_collective, 6)),
+        name=f"plan:{cfg.name}:{shape_name}",
+    )
+    return spec, model
 
 
-# Compiled-solver cache: recurring planning sessions (the paper's setting)
-# reuse the jitted MOGD across plan_job calls for the same (arch, shape,
-# objectives, calibration) — recommendation latency is then the paper's
-# seconds-scale MOO time, not XLA compile time.
+# Compiled-solver cache keyed by TaskSpec.signature() (content-addressed):
+# recurring planning sessions (the paper's setting) reuse the jitted MOGD
+# across plan_job calls for the same task — recommendation latency is then
+# the paper's seconds-scale MOO time, not XLA compile time.
 _PF_CACHE: dict = {}
 
 
@@ -97,27 +131,43 @@ def plan_job(arch_cfg: ArchConfig, shape_name: str = "train_4k",
              mogd: MOGDConfig = MOGDConfig(steps=80, multistart=8),
              grid_l: int = 2,
              batch_rects: int = 4,
-             state=None) -> PlanRecommendation:
+             state=None,
+             objective_bounds: dict | None = None,
+             preference: Preference | None = None,
+             task: TaskSpec | None = None) -> PlanRecommendation:
+    """Plan a job by Progressive Frontier over the declarative task spec.
+
+    ``task`` overrides the internally-built spec; ``preference`` is the
+    typed §5 policy (``weights`` remains as a shim building a
+    WeightedUtopiaNearest); ``objective_bounds`` declares hard value caps
+    that provably constrain the returned frontier."""
     shape = SHAPES[shape_name]
     t0 = time.perf_counter()
-    key = (arch_cfg.name, shape_name, tuple(objectives),
-           tuple(chip_choices) if chip_choices else None,
-           None if model is None else (round(model.cal_compute, 6),
-                                       round(model.cal_memory, 6),
-                                       round(model.cal_collective, 6)),
-           mogd, grid_l, batch_rects)
+    user_task = task is not None
+    if task is None:
+        task, model = plan_task(arch_cfg, shape, model, objectives,
+                                chip_choices, objective_bounds,
+                                preference, shape_name)
+    # preference precedence: explicit policy > caller-supplied task's
+    # policy > the legacy `weights` kwarg (shimmed into WUN)
+    if preference is not None:
+        pref = preference
+    elif user_task:
+        pref = task.preference
+    else:
+        pref = WeightedUtopiaNearest(tuple(weights))
+    key = (task.signature(), mogd, grid_l, batch_rects)
     if key in _PF_CACHE:
         problem, pf = _PF_CACHE[key]
     else:
-        problem, model = _problem_for(arch_cfg, shape, model, objectives,
-                                      chip_choices)
+        problem = task.compile()
         # Cross-rectangle batched PF-AP: every planning iteration solves the
         # cells of the top-`batch_rects` rectangles in one MOGD dispatch.
         pf = ProgressiveFrontier(problem, mode="AP", mogd=mogd,
                                  grid_l=grid_l, batch_rects=batch_rects)
         _PF_CACHE[key] = (problem, pf)
     res = pf.run(n_probes=n_probes, deadline_s=deadline_s, state=state)
-    i = weighted_utopia_nearest(res.F, res.utopia, res.nadir, weights)
+    i = pref.pick(res.F, res.utopia, res.nadir)
     raw = problem.encoder.decode(np.asarray(res.X[i]))
     plan, chips, tp = decode_plan(raw)
     plans = [decode_plan(problem.encoder.decode(np.asarray(x)))

@@ -7,6 +7,15 @@ signature (the paper's recurring-job amortization made explicit) and probe
 work coalesced across sessions into shared MOGD batches.
 """
 
+from repro.core.task import (
+    Objective,
+    Preference,
+    TaskSpec,
+    UtopiaNearest,
+    WeightedUtopiaNearest,
+    WorkloadAware,
+)
+
 from .moo_service import (
     MOOService,
     Recommendation,
@@ -16,7 +25,13 @@ from .moo_service import (
 
 __all__ = [
     "MOOService",
+    "Objective",
+    "Preference",
     "Recommendation",
     "SessionInfo",
+    "TaskSpec",
+    "UtopiaNearest",
+    "WeightedUtopiaNearest",
+    "WorkloadAware",
     "problem_signature",
 ]

@@ -7,10 +7,13 @@ and are implemented here:
 * **Sessions** — each tuning job holds one resumable ``PFState`` (rectangle
   queue + incremental frontier store).  More probes extend the same
   frontier; the session survives across requests.
-* **Solver amortization** — compiled MOGD solvers are cached by *problem
-  signature*, so a recurring job (same config space, same objective model)
-  skips XLA recompilation entirely: its sessions attach to the already-
-  compiled solver.
+* **Solver amortization** — compiled MOGD solvers are cached by *task
+  signature*: :meth:`MOOService.create_session` takes a declarative
+  :class:`~repro.core.task.TaskSpec` whose content-derived ``signature()``
+  identifies the task, so a recurring job re-submitted with fresh closures
+  (same knobs, same objectives, same model content) skips XLA
+  recompilation entirely — its sessions attach to the already-compiled
+  problem and solver.  No ``id()`` identity anywhere.
 * **Probe coalescing** — ``step_all`` gathers the pending probe cells of
   every active session sharing a compiled solver and solves them in one
   MOGD batch: one device dispatch serves many tenants (the multi-tenant
@@ -28,21 +31,28 @@ import dataclasses
 import itertools
 import threading
 import time
+import warnings
 
 import numpy as np
 
 from repro.core import MOGDConfig, MOOProblem, ProgressiveFrontier
 from repro.core.mogd import MOGDSolver
 from repro.core.progressive_frontier import PFResult, PFState
-from repro.core.recommend import select
+from repro.core.task import Preference, TaskSpec, preference_from_legacy
 
 
 def problem_signature(problem: MOOProblem) -> tuple:
-    """Default signature: identifies the configuration space and objective
-    model of a problem *instance*.  Two sessions share compiled solvers and
-    probe batches only when their signatures match — recurring jobs should
-    pass an explicit stable signature (e.g. ``("tpch", "q7", "v3")``) so
-    re-submitted problems with fresh closures still hit the cache."""
+    """Legacy signature for raw MOOProblem *instances* (deprecated path).
+
+    Sessions opened through :meth:`MOOService.create_session` use the
+    content-derived ``TaskSpec.signature()`` instead — structurally-equal
+    specs (e.g. a recurring job re-submitted with fresh closures) hash
+    equal and reuse one compiled solver.  This id()-based fallback only
+    identifies a problem *object*, so it is used solely by the deprecated
+    ``open_session(problem)`` shim when no explicit signature is given."""
+    sig = getattr(problem, "signature", None)
+    if sig is not None:  # problem came from TaskSpec.compile()
+        return (sig,)
     return (
         tuple(problem.specs),
         problem.k,
@@ -85,6 +95,7 @@ class _Session:
     engine: ProgressiveFrontier
     solver_key: tuple  # (signature, mogd) entry in the service solver cache
     auto_signature: bool  # derived from the instance (not a recurring job)
+    spec: TaskSpec | None = None  # present for create_session() sessions
     state: PFState | None = None
     created_s: float = dataclasses.field(default_factory=time.perf_counter)
 
@@ -99,6 +110,7 @@ class MOOService:
         grid_l: int = 2,
         batch_rects: int = 4,
         max_sessions: int = 256,
+        max_cached_tasks: int = 512,
         use_kernel: bool = False,
         kernel_interpret: bool = True,
     ):
@@ -107,15 +119,21 @@ class MOOService:
         self.default_grid_l = grid_l
         self.default_batch_rects = batch_rects
         self.max_sessions = max_sessions
+        self.max_cached_tasks = max_cached_tasks
         self.use_kernel = use_kernel
         self.kernel_interpret = kernel_interpret
         self._sessions: dict[str, _Session] = {}
         # (signature, mogd) -> compiled solver; keeps the problem that built
         # it alive so id()-based signatures stay unambiguous.
         self._solvers: dict[tuple, tuple[MOGDSolver, MOOProblem]] = {}
+        # TaskSpec.signature() -> compiled MOOProblem: structurally-equal
+        # specs share one problem (one jitted objective batch) and hence
+        # one MOGD solver — content-addressed, never id()-keyed.
+        self._problems: dict[tuple, MOOProblem] = {}
         self._ids = itertools.count()
         self._lock = threading.RLock()
         self.solver_cache_hits = 0
+        self.problem_cache_hits = 0
         self.coalesced_batches = 0
         self.coalesced_probes = 0
 
@@ -130,6 +148,58 @@ class MOOService:
         self._solvers[key] = (solver, problem)
         return solver
 
+    def create_session(
+        self,
+        spec: TaskSpec,
+        mode: str | None = None,
+        mogd: MOGDConfig | None = None,
+        grid_l: int | None = None,
+        batch_rects: int | None = None,
+        target: int = 0,
+    ) -> str:
+        """The declarative front door: register a tuning session for a
+        :class:`TaskSpec`.  Compilation is content-addressed — a spec whose
+        ``signature()`` matches an earlier submission (a recurring job
+        re-submitted with fresh closures) reuses the already-compiled
+        problem and MOGD solver; no ``id()`` identity is ever required.
+        Lazy: no solve work happens until the first ``probe``/``step_all``."""
+        if not isinstance(spec, TaskSpec):
+            raise TypeError(
+                f"create_session expects a TaskSpec, got "
+                f"{type(spec).__name__}; legacy MOOProblem callers should "
+                f"use the deprecated open_session()")
+        with self._lock:
+            sig = (spec.signature(),)
+            problem = self._problems.pop(sig, None)  # re-insert as newest
+            if problem is None:
+                problem = spec.compile()
+            else:
+                self.problem_cache_hits += 1
+            self._problems[sig] = problem
+            sid = self._open(problem, sig, auto_sig=False, spec=spec,
+                             mode=mode, mogd=mogd, grid_l=grid_l,
+                             batch_rects=batch_rects, target=target)
+            self._evict_cold_tasks()  # after _open: new session counts live
+            return sid
+
+    def _evict_cold_tasks(self) -> None:
+        """Keep at most ``max_cached_tasks`` warm problems: recurring jobs
+        stay compiled across close/re-open, but a stream of *distinct*
+        specs cannot grow the cache (and its model closures) without
+        bound.  Oldest-unreferenced entries — and their solvers — go
+        first; signatures with open sessions are never evicted."""
+        if len(self._problems) <= self.max_cached_tasks:
+            return
+        live = {s.signature for s in self._sessions.values()}
+        for sig in list(self._problems):  # insertion order = LRU order
+            if len(self._problems) <= self.max_cached_tasks:
+                break
+            if sig in live:
+                continue
+            self._problems.pop(sig, None)
+            for key in [k for k in self._solvers if k[0] == sig]:
+                self._solvers.pop(key, None)
+
     def open_session(
         self,
         problem: MOOProblem,
@@ -140,16 +210,34 @@ class MOOService:
         batch_rects: int | None = None,
         target: int = 0,
     ) -> str:
-        """Register a tuning session; returns its id.  Lazy: no solve work
-        happens until the first ``probe``/``step_all``."""
+        """Deprecated shim: register a session for a raw MOOProblem.
+
+        Prefer :meth:`create_session` with a :class:`TaskSpec` — it derives
+        a stable content signature instead of relying on an explicit one
+        (or the id()-based instance fallback used here)."""
+        if isinstance(problem, TaskSpec):
+            warnings.warn(
+                "open_session(TaskSpec) is deprecated; use create_session()",
+                DeprecationWarning, stacklevel=2)
+            return self.create_session(problem, mode=mode, mogd=mogd,
+                                       grid_l=grid_l,
+                                       batch_rects=batch_rects, target=target)
         with self._lock:
-            if len(self._sessions) >= self.max_sessions:
-                raise RuntimeError(
-                    f"session limit reached ({self.max_sessions})")
             auto_sig = signature is None
             sig = problem_signature(problem) if auto_sig else signature
             if isinstance(sig, str):
                 sig = (sig,)
+            return self._open(problem, sig, auto_sig=auto_sig, spec=None,
+                              mode=mode, mogd=mogd, grid_l=grid_l,
+                              batch_rects=batch_rects, target=target)
+
+    def _open(self, problem: MOOProblem, sig: tuple, auto_sig: bool,
+              spec: TaskSpec | None, mode, mogd, grid_l, batch_rects,
+              target: int) -> str:
+        with self._lock:
+            if len(self._sessions) >= self.max_sessions:
+                raise RuntimeError(
+                    f"session limit reached ({self.max_sessions})")
             mogd = mogd if mogd is not None else self.default_mogd
             engine = ProgressiveFrontier(
                 problem,
@@ -166,7 +254,8 @@ class MOOService:
             sid = f"sess-{next(self._ids)}"
             self._sessions[sid] = _Session(sid, problem, sig, engine,
                                            solver_key=(sig, mogd),
-                                           auto_signature=auto_sig)
+                                           auto_signature=auto_sig,
+                                           spec=spec)
             return sid
 
     def close_session(self, session_id: str) -> None:
@@ -221,7 +310,9 @@ class MOOService:
                     if not len(sess.state.queue):
                         continue  # exhausted — frontier is final
                     if sess.engine.mode == "AP":
-                        key = (id(sess.engine.solver), sess.engine.target)
+                        # group by the content-addressed solver-cache key
+                        # (signature + MOGD config) — never id()
+                        key = (*sess.solver_key, sess.engine.target)
                         groups.setdefault(key, []).append(sess)
                     else:
                         singles.append(sess)
@@ -315,21 +406,36 @@ class MOOService:
     def recommend(
         self,
         session_id: str,
-        strategy: str = "un",
+        preference: Preference | str | None = None,
         weights=None,
         default_latency_s: float | None = None,
+        strategy: str | None = None,
     ) -> Recommendation:
-        """Pick one configuration from the session's live frontier via the
-        §5 selectors (UN / WUN / workload-aware WUN)."""
+        """Pick one configuration from the session's live frontier.
+
+        ``preference`` is a typed §5 policy (UtopiaNearest /
+        WeightedUtopiaNearest / WorkloadAware).  When omitted, the
+        session's TaskSpec preference applies (UN for legacy sessions).
+        The old string protocol — ``strategy=`` or a string passed as
+        ``preference`` — still works through a deprecation shim."""
+        if strategy is not None or isinstance(preference, str):
+            warnings.warn(
+                "string recommendation strategies are deprecated; pass a "
+                "Preference policy (see repro.core.task)",
+                DeprecationWarning, stacklevel=2)
+            preference = preference_from_legacy(
+                strategy if strategy is not None else preference,
+                weights=weights, default_latency_s=default_latency_s)
         with self._lock:
             sess = self._get(session_id)
+            if preference is None:
+                preference = (sess.spec.preference if sess.spec is not None
+                              else preference_from_legacy("un"))
             if sess.state is None or sess.state.store.n_points == 0:
                 raise RuntimeError(
                     f"session {session_id!r} has no frontier yet — probe first")
             F, X = sess.state.store.frontier()
-            i = select(F, sess.state.utopia, sess.state.nadir,
-                       strategy=strategy, weights=weights,
-                       default_latency_s=default_latency_s)
+            i = preference.pick(F, sess.state.utopia, sess.state.nadir)
             return Recommendation(
                 session_id=session_id,
                 index=i,
@@ -361,7 +467,9 @@ class MOOService:
             return {
                 "sessions": len(self._sessions),
                 "compiled_solvers": len(self._solvers),
+                "compiled_problems": len(self._problems),
                 "solver_cache_hits": self.solver_cache_hits,
+                "problem_cache_hits": self.problem_cache_hits,
                 "coalesced_batches": self.coalesced_batches,
                 "coalesced_probes": self.coalesced_probes,
                 "total_probes": sum(

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
 
 from repro.nn import ArchConfig
 from repro.nn import decode_step as _decode

@@ -14,9 +14,9 @@ import textwrap
 import jax
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.distributed import LOGICAL_DEFAULTS, ShardingRules, logical_spec
+from repro.distributed import ShardingRules, logical_spec
 
 
 class TestLogicalSpec:

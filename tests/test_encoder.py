@@ -1,0 +1,78 @@
+"""SpaceEncoder.encode validation: bad configurations fail loudly, and
+encode/decode round-trip exactly on every knob kind (deterministic
+counterpart of the hypothesis property in test_properties.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import boolean, categorical, continuous, integer
+from repro.core.problem import SpaceEncoder
+
+SPECS = [
+    continuous("frac", 0.2, 0.9),
+    integer("cores", 1, 8),
+    categorical("mode", ("slow", "fast", "turbo")),
+    boolean("flag"),
+]
+CFG = {"frac": 0.5, "cores": 4, "mode": "fast", "flag": True}
+
+
+@pytest.fixture()
+def enc():
+    return SpaceEncoder(SPECS)
+
+
+class TestEncodeValidation:
+    def test_unknown_knob_rejected(self, enc):
+        bad = dict(CFG, typo_knob=1)
+        with pytest.raises(ValueError, match="typo_knob"):
+            enc.encode(bad)
+
+    def test_missing_knob_rejected(self, enc):
+        bad = {k: v for k, v in CFG.items() if k != "cores"}
+        with pytest.raises(ValueError, match="cores"):
+            enc.encode(bad)
+
+    def test_out_of_range_numeric_rejected(self, enc):
+        with pytest.raises(ValueError, match="frac"):
+            enc.encode(dict(CFG, frac=0.95))
+        with pytest.raises(ValueError, match="cores"):
+            enc.encode(dict(CFG, cores=0))
+
+    def test_non_numeric_rejected(self, enc):
+        with pytest.raises(ValueError, match="number"):
+            enc.encode(dict(CFG, frac="half"))
+
+    def test_unknown_categorical_choice_listed(self, enc):
+        with pytest.raises(ValueError) as ei:
+            enc.encode(dict(CFG, mode="warp"))
+        assert "turbo" in str(ei.value)  # message lists the valid choices
+
+    def test_boundary_values_accepted(self, enc):
+        enc.encode(dict(CFG, frac=0.2))
+        enc.encode(dict(CFG, frac=0.9))
+        enc.encode(dict(CFG, cores=8))
+
+
+class TestRoundTrip:
+    def test_encode_decode_identity(self, enc):
+        assert enc.decode(enc.encode(CFG)) == CFG
+
+    def test_roundtrip_every_categorical_choice(self, enc):
+        for mode in ("slow", "fast", "turbo"):
+            for flag in (True, False):
+                cfg = dict(CFG, mode=mode, flag=flag)
+                assert enc.decode(enc.encode(cfg)) == cfg
+
+    def test_roundtrip_integer_extremes(self, enc):
+        for cores in (1, 8):
+            cfg = dict(CFG, cores=cores)
+            assert enc.decode(enc.encode(cfg)) == cfg
+
+    def test_decode_of_snapped_point_reencodes(self, enc):
+        import jax
+
+        x = np.asarray(enc.snap(
+            jax.random.uniform(jax.random.PRNGKey(3), (enc.dim,))))
+        cfg = enc.decode(x)
+        assert enc.decode(enc.encode(cfg)) == cfg

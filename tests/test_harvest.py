@@ -6,7 +6,7 @@ import json
 import numpy as np
 import pytest
 
-from repro.data.harvest import _plan_to_knobs, harvest
+from repro.data.harvest import harvest
 
 
 def _fake_artifact(tmp_path, arch, shape, tag, terms, plan=None):

@@ -7,7 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config
-from repro.distributed import ShardingRules, logical_spec
+from repro.distributed import logical_spec
 from repro.launch.plans import Plan, apply_plan, baseline_plan, rules_for
 from repro.launch.roofline import (
     CollectiveStats,

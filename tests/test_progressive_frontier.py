@@ -269,8 +269,6 @@ class TestBaselines:
 
     def test_pf_beats_ws_coverage_on_zdt1(self, zdt1):
         """The paper's core coverage claim (Fig 4b-c), as an assertion."""
-        from repro.core import coverage_spread
-
         pf = solve_pf(zdt1, mode="AP", n_probes=60,
                       mogd=MOGDConfig(steps=120, multistart=8))
         ws = weighted_sum(zdt1, n_probes=10,

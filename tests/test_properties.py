@@ -49,10 +49,36 @@ class TestEncoderProperties:
         assert enc.decode(x2) == cfg
 
     @given(_spec_strategy(), st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_encode_decode_roundtrip_from_raw(self, specs, seed):
+        """encode(decode(encode(cfg))) round-trips for any *valid* raw
+        configuration, and encode's validation accepts everything decode
+        can produce (the two stay mutually consistent)."""
+        rng = np.random.default_rng(seed)
+        enc = SpaceEncoder(specs)
+        cfg = {}
+        for s in specs:
+            if s.kind == "continuous":
+                cfg[s.name] = float(rng.uniform(s.low, s.high))
+            elif s.kind == "integer":
+                cfg[s.name] = int(rng.integers(int(s.low), int(s.high) + 1))
+            elif s.kind == "categorical":
+                cfg[s.name] = s.choices[int(rng.integers(len(s.choices)))]
+            else:
+                cfg[s.name] = bool(rng.integers(2))
+        out = enc.decode(enc.encode(cfg))
+        for s in specs:
+            if s.kind == "continuous":
+                assert out[s.name] == pytest.approx(cfg[s.name], abs=1e-9)
+            else:
+                assert out[s.name] == cfg[s.name]
+        # decode -> encode never trips the validation
+        assert enc.decode(enc.encode(out)) == out
+
+    @given(_spec_strategy(), st.integers(0, 10_000))
     @settings(max_examples=30, deadline=None)
     def test_snap_idempotent(self, specs, seed):
         import jax
-        import jax.numpy as jnp
 
         enc = SpaceEncoder(specs)
         x = jax.random.uniform(jax.random.PRNGKey(seed), (enc.dim,))
@@ -65,7 +91,6 @@ class TestEncoderProperties:
     @settings(max_examples=30, deadline=None)
     def test_decode_soft_categorical_convex(self, specs):
         import jax
-        import jax.numpy as jnp
 
         enc = SpaceEncoder(specs)
         x = jax.random.uniform(jax.random.PRNGKey(0), (enc.dim,)) + 0.01

@@ -1,0 +1,101 @@
+"""§5 selector coverage: WUN weight normalization, workload classification
+threshold edges, and error paths of the (deprecated) select() protocol."""
+
+import numpy as np
+import pytest
+
+from repro.core.recommend import (
+    WorkloadClassWeights,
+    classify_workload,
+    select,
+    utopia_nearest,
+    weighted_utopia_nearest,
+    workload_aware_wun,
+)
+
+F = np.array([[0.0, 1.0], [0.45, 0.45], [1.0, 0.0]])
+U, N = np.zeros(2), np.ones(2)
+
+
+class TestWUNWeights:
+    def test_scale_invariant_normalization(self):
+        """Weights are normalized: scaling all weights changes nothing."""
+        a = weighted_utopia_nearest(F, U, N, (0.8, 0.2))
+        b = weighted_utopia_nearest(F, U, N, (8.0, 2.0))
+        assert a == b
+
+    def test_extreme_weight_picks_extreme_point(self):
+        assert weighted_utopia_nearest(F, U, N, (1.0, 0.0)) == 0
+        assert weighted_utopia_nearest(F, U, N, (0.0, 1.0)) == 2
+
+    def test_zero_weights_rejected(self):
+        with pytest.raises(ValueError, match="positive sum"):
+            weighted_utopia_nearest(F, U, N, (0.0, 0.0))
+
+    def test_negative_weights_rejected(self):
+        with pytest.raises(ValueError, match=">= 0"):
+            weighted_utopia_nearest(F, U, N, (-1.0, 2.0))
+
+    def test_uniform_weights_match_un(self):
+        assert (weighted_utopia_nearest(F, U, N, (1.0, 1.0))
+                == utopia_nearest(F, U, N))
+
+
+class TestWorkloadClassWeights:
+    def test_unknown_class_is_descriptive_value_error(self):
+        with pytest.raises(ValueError) as ei:
+            WorkloadClassWeights().for_class("extreme", k=2)
+        msg = str(ei.value)
+        assert "extreme" in msg
+        for cls in ("low", "medium", "high"):
+            assert cls in msg
+
+    def test_known_classes_pad_to_k(self):
+        w = WorkloadClassWeights().for_class("high", k=3)
+        np.testing.assert_allclose(w, [0.7, 0.3, 1.0])
+
+
+class TestClassifyWorkload:
+    @pytest.mark.parametrize("latency,expected", [
+        (0.0, "low"),
+        (29.999, "low"),
+        (30.0, "medium"),  # boundary is inclusive-upper
+        (299.999, "medium"),
+        (300.0, "high"),
+        (1e6, "high"),
+    ])
+    def test_threshold_edges(self, latency, expected):
+        assert classify_workload(latency) == expected
+
+    def test_custom_thresholds(self):
+        assert classify_workload(5.0, thresholds=(1.0, 10.0)) == "medium"
+
+
+class TestWorkloadAwareWUN:
+    def test_long_jobs_weight_latency(self):
+        """A high-latency-class workload pulls the pick toward low latency
+        relative to a low-class one with the same external weights."""
+        i_long = workload_aware_wun(F, U, N, (1.0, 1.0),
+                                    default_latency_s=500.0)
+        i_short = workload_aware_wun(F, U, N, (1.0, 1.0),
+                                     default_latency_s=5.0)
+        assert F[i_long][0] <= F[i_short][0]
+
+
+class TestSelectErrorPaths:
+    def test_unknown_strategy(self):
+        with pytest.raises(ValueError, match="unknown"):
+            select(F, U, N, strategy="pareto-magic")
+
+    def test_wun_requires_weights(self):
+        with pytest.raises(ValueError, match="weights"):
+            select(F, U, N, strategy="wun")
+
+    def test_workload_requires_weights_and_latency(self):
+        with pytest.raises(ValueError, match="workload"):
+            select(F, U, N, strategy="workload", weights=(1, 1))
+        with pytest.raises(ValueError, match="workload"):
+            select(F, U, N, strategy="workload", default_latency_s=10.0)
+
+    def test_strategy_case_insensitive(self):
+        assert select(F, U, N, strategy="UN") == utopia_nearest(F, U, N)

@@ -1,10 +1,6 @@
 """Fault-tolerance layer: checkpoint atomicity/integrity/resharding, async
 manager, straggler detection, elastic controller."""
 
-import json
-import os
-import pathlib
-import threading
 
 import jax
 import jax.numpy as jnp

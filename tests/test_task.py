@@ -1,0 +1,381 @@
+"""TaskSpec front door: declarative objectives, enforced bounds,
+content-addressed signatures, preference policies, and solver reuse."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    MOGDConfig,
+    Objective,
+    TaskSpec,
+    UtopiaNearest,
+    WeightedUtopiaNearest,
+    WorkloadAware,
+    as_problem,
+    continuous,
+    integer,
+    preference_from_legacy,
+    solve_pf,
+    zdt1_task,
+)
+from repro.core.mogd import MOGDSolver
+from repro.service import MOOService
+
+FAST = MOGDConfig(steps=60, multistart=6)
+
+
+def _toy_spec(scale=1.0, cap=None, preference=UtopiaNearest(), model_id=None):
+    """A tiny 2-objective spec built with *fresh closures* on every call."""
+    specs = [continuous("a", 0.0, 1.0), integer("n", 1, 4)]
+
+    def model(x):
+        return jnp.stack([scale * x[0] + x[1], 1.0 - x[0]])
+
+    return TaskSpec(
+        knobs=specs,
+        objectives=(Objective("lat"),
+                    Objective("cost",
+                              bound=None if cap is None else (None, cap))),
+        model=model,
+        preference=preference,
+        model_id=model_id,
+    )
+
+
+class TestObjective:
+    def test_direction_validated(self):
+        with pytest.raises(ValueError, match="direction"):
+            Objective("f", direction="minimise")
+
+    def test_bound_ordering_validated(self):
+        with pytest.raises(ValueError, match="exceed"):
+            Objective("f", bound=(2.0, 1.0))
+
+    def test_negative_alpha_rejected(self):
+        with pytest.raises(ValueError, match="alpha"):
+            Objective("f", alpha=-0.5)
+
+    def test_minimized_bound_flips_for_max(self):
+        o = Objective("thr", direction="max", bound=(10.0, 100.0))
+        assert o.minimized_bound() == (-100.0, -10.0)
+        open_lo = Objective("f", bound=(None, 5.0)).minimized_bound()
+        assert open_lo == (-np.inf, 5.0)
+
+
+class TestPreference:
+    def test_wun_rejects_bad_weights(self):
+        with pytest.raises(ValueError):
+            WeightedUtopiaNearest((-0.1, 1.0))
+        with pytest.raises(ValueError):
+            WeightedUtopiaNearest((0.0, 0.0))
+
+    def test_legacy_shim(self):
+        assert isinstance(preference_from_legacy("un"), UtopiaNearest)
+        p = preference_from_legacy("wun", weights=(0.2, 0.8))
+        assert isinstance(p, WeightedUtopiaNearest)
+        p = preference_from_legacy("workload", weights=(1, 1),
+                                   default_latency_s=10.0)
+        assert isinstance(p, WorkloadAware)
+        with pytest.raises(ValueError):
+            preference_from_legacy("nope")
+        with pytest.raises(ValueError):
+            preference_from_legacy("wun")  # missing weights
+
+    def test_pick_matches_selector_semantics(self):
+        F = np.array([[0.0, 1.0], [0.5, 0.5], [1.0, 0.0]])
+        u, n = np.zeros(2), np.ones(2)
+        assert UtopiaNearest().pick(F, u, n) == 1
+        assert WeightedUtopiaNearest((1.0, 0.0)).pick(F, u, n) == 0
+
+    def test_weight_arity_checked_against_objectives(self):
+        with pytest.raises(ValueError, match="weights"):
+            _toy_spec(preference=WeightedUtopiaNearest((1.0, 1.0, 1.0)))
+
+
+class TestSignature:
+    def test_fresh_closures_signature_equal(self):
+        s1, s2 = _toy_spec(), _toy_spec()
+        assert s1.model is not s2.model  # genuinely different objects
+        assert s1.signature() == s2.signature()
+
+    def test_content_changes_signature(self):
+        base = _toy_spec().signature()
+        assert _toy_spec(scale=2.0).signature() != base  # model constant
+        assert _toy_spec(cap=5.0).signature() != base  # objective bound
+        other_knobs = TaskSpec(
+            knobs=[continuous("a", 0.0, 2.0), integer("n", 1, 4)],
+            objectives=("lat", "cost"),
+            model=_toy_spec().model)
+        assert other_knobs.signature() != base  # knob space
+
+    def test_preference_excluded_from_signature(self):
+        a = _toy_spec(preference=UtopiaNearest())
+        b = _toy_spec(preference=WeightedUtopiaNearest((0.9, 0.1)))
+        assert a.signature() == b.signature()
+
+    def test_model_id_overrides_fingerprint(self):
+        a = _toy_spec(scale=1.0, model_id=("job", "v1"))
+        b = _toy_spec(scale=2.0, model_id=("job", "v1"))
+        assert a.signature() == b.signature()
+        c = _toy_spec(scale=1.0, model_id=("job", "v2"))
+        assert a.signature() != c.signature()
+
+    def test_nested_def_constant_changes_signature(self):
+        def make(c):
+            ns = {"jnp": jnp}
+            exec(f"def model(x):\n"
+                 f"    def inner(v):\n"
+                 f"        return v * {c}\n"
+                 f"    return jnp.stack([inner(x[0]), 1.0 - x[0]])", ns)
+            return TaskSpec(knobs=[continuous("a", 0, 1)],
+                            objectives=("f1", "f2"), model=ns["model"])
+
+        assert make(2.0).signature() == make(2.0).signature()
+        assert make(2.0).signature() != make(3.0).signature()
+
+    def test_global_helper_change_changes_signature(self):
+        def make(c):
+            ns = {"jnp": jnp}
+            exec(f"def helper(v):\n"
+                 f"    return v * {c}\n"
+                 f"def model(x):\n"
+                 f"    return jnp.stack([helper(x[0]), 1.0 - x[0]])", ns)
+            return TaskSpec(knobs=[continuous("a", 0, 1)],
+                            objectives=("f1", "f2"), model=ns["model"])
+
+        assert make(2.0).signature() == make(2.0).signature()
+        assert make(2.0).signature() != make(3.0).signature()
+
+    def test_partial_models_fingerprint_by_content(self):
+        import functools
+
+        def f(x, s):
+            return jnp.stack([x[0] * s, 1.0 - x[0]])
+
+        def g(x, s):
+            return jnp.stack([x[0] + s, 1.0 - x[0]])
+
+        mk = lambda m: TaskSpec(knobs=[continuous("a", 0, 1)],
+                                objectives=("f1", "f2"), model=m)
+        assert (mk(functools.partial(f, s=2.0)).signature()
+                == mk(functools.partial(f, s=2.0)).signature())
+        assert (mk(functools.partial(f, s=2.0)).signature()
+                != mk(functools.partial(f, s=3.0)).signature())
+        assert (mk(functools.partial(f, s=2.0)).signature()
+                != mk(functools.partial(g, s=2.0)).signature())
+
+    def test_kwonly_default_changes_signature(self):
+        def make(s):
+            def model(x, *, scale=s):
+                return jnp.stack([x[0] * scale, 1.0 - x[0]])
+            return TaskSpec(knobs=[continuous("a", 0, 1)],
+                            objectives=("f1", "f2"), model=model)
+
+        assert make(1.0).signature() == make(1.0).signature()
+        assert make(1.0).signature() != make(99.0).signature()
+
+    def test_alpha_without_stds_rejected(self):
+        with pytest.raises(ValueError, match="model_stds"):
+            TaskSpec(knobs=[continuous("a", 0, 1)],
+                     objectives=(Objective("f", alpha=1.0),),
+                     model=lambda x: x)
+
+    def test_from_problem_name_arity_checked(self):
+        from repro.core import MOOProblem
+
+        p = MOOProblem(specs=[continuous("a", 0, 1)],
+                       objectives=lambda x: jnp.stack([x[0], 1 - x[0]]),
+                       k=2, names=("lat",))
+        with pytest.raises(ValueError, match="names"):
+            TaskSpec.from_problem(p)
+
+    def test_unfingerprintable_model_raises_without_model_id(self):
+        class Weird:
+            __slots__ = ("f",)  # no __dict__ to fingerprint
+
+            def __call__(self, x):
+                return x
+
+        spec = TaskSpec(knobs=[continuous("a", 0, 1)], objectives=("f",),
+                        model=Weird())
+        with pytest.raises(TypeError, match="model_id"):
+            spec.signature()
+
+
+class TestCompile:
+    def test_compile_is_single_construction_path(self):
+        spec = _toy_spec(cap=1.5)
+        p = spec.compile()
+        assert p.k == 2 and p.names == ("lat", "cost")
+        assert p.task_spec is spec
+        assert p.signature == spec.signature()
+        np.testing.assert_allclose(p.value_constraints[1], [-np.inf, 1.5])
+
+    def test_max_direction_negated(self):
+        spec = TaskSpec(
+            knobs=[continuous("a", 0.0, 1.0)],
+            objectives=(Objective("lat"), Objective("thr", direction="max")),
+            model=lambda x: jnp.stack([x[0], x[0] * 2.0]),
+        )
+        f = spec.compile().objectives(jnp.array([0.5]))
+        np.testing.assert_allclose(np.asarray(f), [0.5, -1.0])
+
+    def test_alpha_folds_std_into_effective_objectives(self):
+        spec = TaskSpec(
+            knobs=[continuous("a", 0.0, 1.0)],
+            objectives=(Objective("f1", alpha=2.0), Objective("f2")),
+            model=lambda x: jnp.stack([x[0], x[0]]),
+            model_stds=lambda x: jnp.stack([x[0] * 0.0 + 1.0,
+                                            x[0] * 0.0 + 1.0]),
+        )
+        p = spec.compile()
+        f = p.effective_objectives()(jnp.array([0.5]))
+        # f1 gets +2.0 * std, f2's alpha is 0 -> untouched
+        np.testing.assert_allclose(np.asarray(f), [2.5, 0.5])
+
+    def test_as_problem_caches_by_signature(self):
+        p1 = as_problem(_toy_spec())
+        p2 = as_problem(_toy_spec())
+        assert p1 is p2
+        assert as_problem(p1) is p1
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="knob"):
+            TaskSpec(knobs=[], objectives=("f",), model=lambda x: x)
+        with pytest.raises(ValueError, match="Objective"):
+            TaskSpec(knobs=[continuous("a", 0, 1)], objectives=(),
+                     model=lambda x: x)
+        with pytest.raises(ValueError, match="duplicate"):
+            TaskSpec(knobs=[continuous("a", 0, 1)], objectives=("f", "f"),
+                     model=lambda x: x)
+        with pytest.raises(ValueError, match="Preference"):
+            TaskSpec(knobs=[continuous("a", 0, 1)], objectives=("f",),
+                     model=lambda x: x, preference="un")
+
+
+class TestEnforcedBounds:
+    """Acceptance: a declared budget cap provably changes what comes back."""
+
+    def test_mogd_reports_bound_violations_infeasible(self):
+        # cost = 1 - x0 >= 0.5 requires x0 <= 0.5; cap cost at 0.3 and
+        # constrain a probe box where lat forces x0 small -> infeasible
+        spec = _toy_spec(cap=0.3)
+        solver = MOGDSolver(spec.compile(), FAST)
+        # probe box asking for tiny lat (x0 ~ 0, n ~ 1) -> cost ~ 1 > cap
+        box = np.array([[0.0, 0.0], [1.3, 1.1]])
+        res = solver.solve(box[None], target=0)
+        assert not bool(res.feasible[0])
+
+    def test_bounded_frontier_excludes_infeasible_and_changes_pick(self):
+        cap = 0.6
+        unbounded = zdt1_task()
+        bounded = zdt1_task(f2_cap=cap)
+        assert unbounded.signature() != bounded.signature()
+        r_u = solve_pf(unbounded, n_probes=32, mogd=FAST)
+        r_b = solve_pf(bounded, n_probes=32, mogd=FAST)
+        # the unbounded ZDT1 frontier spans f2 well above the cap
+        assert r_u.F[:, 1].max() > cap
+        # the bounded frontier contains no infeasible point at all
+        assert len(r_b.F) > 0
+        assert np.all(r_b.F[:, 1] <= cap + 1e-6)
+        # and the recommendation changes
+        i_u = unbounded.preference.pick(r_u.F, r_u.utopia, r_u.nadir)
+        i_b = bounded.preference.pick(r_b.F, r_b.utopia, r_b.nadir)
+        assert not np.allclose(r_u.F[i_u], r_b.F[i_b])
+
+    def test_store_excludes_and_counts_infeasible(self):
+        from repro.core import FrontierStore
+
+        store = FrontierStore(k=2, dim=3,
+                              bounds=np.array([[-np.inf, np.inf],
+                                               [-np.inf, 0.5]]))
+        n = store.add(np.array([[0.1, 0.9], [0.2, 0.4]]), np.zeros((2, 3)))
+        assert n == 1
+        assert store.total_infeasible == 1
+        F, _ = store.frontier()
+        assert np.all(F[:, 1] <= 0.5)
+
+    def test_baselines_filter_infeasible_before_pareto_mask(self):
+        """An infeasible point that dominates the constrained optimum must
+        not knock it out: feasibility filters before the Pareto mask."""
+        from repro.core import MOOProblem, pareto_mask
+        from repro.core.baselines import _apply_value_constraints
+
+        problem = MOOProblem(
+            specs=[continuous("a", 0, 1)],
+            objectives=lambda x: jnp.stack([x[0], x[0]]),
+            k=2,
+            value_constraints=np.array([[0.5, np.inf], [-np.inf, np.inf]]))
+        # (0,0) is infeasible (f1 < 0.5) and dominates the feasible (.6,.6)
+        F = np.array([[0.0, 0.0], [0.6, 0.6]])
+        X = np.zeros((2, 1))
+        Ff, Xf = _apply_value_constraints(problem, F, X)
+        np.testing.assert_allclose(Ff, [[0.6, 0.6]])
+        assert np.asarray(pareto_mask(Ff)).sum() == 1  # survivor kept
+
+
+class TestServiceFrontDoor:
+    """Acceptance: structurally-equal specs share one compiled solver."""
+
+    def test_equal_specs_hit_one_solver_without_id_identity(self):
+        svc = MOOService(mogd=FAST, batch_rects=2)
+        s1 = svc.create_session(zdt1_task())
+        s2 = svc.create_session(zdt1_task())  # fresh closures, equal content
+        st = svc.stats()
+        assert st["compiled_solvers"] == 1
+        assert st["solver_cache_hits"] == 1
+        assert st["compiled_problems"] == 1
+        assert st["problem_cache_hits"] == 1
+        # the sessions actually run and coalesce into shared batches
+        svc.run_until(min_probes=8)
+        assert svc.stats()["coalesced_batches"] >= 1
+        for sid in (s1, s2):
+            F, X = svc.frontier(sid)
+            assert len(F) >= 2
+
+    def test_different_specs_do_not_collide(self):
+        svc = MOOService(mogd=FAST, batch_rects=2)
+        svc.create_session(zdt1_task())
+        svc.create_session(zdt1_task(f2_cap=0.7))
+        assert svc.stats()["compiled_solvers"] == 2
+        assert svc.stats()["solver_cache_hits"] == 0
+
+    def test_recommend_uses_spec_preference_and_legacy_shim(self):
+        svc = MOOService(mogd=FAST, batch_rects=2)
+        sid = svc.create_session(
+            zdt1_task(preference=WeightedUtopiaNearest((0.9, 0.1))))
+        svc.probe(sid, n_probes=16)
+        rec_default = svc.recommend(sid)  # spec's latency-heavy WUN
+        rec_explicit = svc.recommend(
+            sid, preference=WeightedUtopiaNearest((0.1, 0.9)))
+        assert rec_default.objectives[0] <= rec_explicit.objectives[0] + 1e-9
+        with pytest.warns(DeprecationWarning):
+            rec_legacy = svc.recommend(sid, strategy="wun",
+                                       weights=(0.9, 0.1))
+        assert rec_legacy.index == rec_default.index
+
+    def test_cold_cached_tasks_evicted_open_sessions_kept(self):
+        from repro.core import sphere2_task
+
+        svc = MOOService(mogd=FAST, max_cached_tasks=1)
+        s1 = svc.create_session(zdt1_task())
+        svc.close_session(s1)
+        s2 = svc.create_session(sphere2_task())  # over cap -> zdt1 evicted
+        assert svc.stats()["compiled_problems"] == 1
+        svc.create_session(zdt1_task())
+        # both signatures now have open sessions: neither is evictable
+        assert svc.stats()["compiled_problems"] == 2
+        assert s2 in svc._sessions
+
+    def test_create_session_rejects_raw_problem(self):
+        svc = MOOService(mogd=FAST)
+        with pytest.raises(TypeError, match="TaskSpec"):
+            svc.create_session(as_problem(zdt1_task()))
+
+    def test_open_session_taskspec_deprecation(self):
+        svc = MOOService(mogd=FAST)
+        with pytest.warns(DeprecationWarning):
+            sid = svc.open_session(zdt1_task())
+        assert svc.session_info(sid).session_id == sid
