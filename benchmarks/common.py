@@ -2,9 +2,44 @@
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def write_json(name: str, payload: dict, quick: bool | None = None) -> str:
+    """Persist a benchmark summary as ``results/BENCH_<name>.json``.
+
+    This is the machine-readable perf trajectory CI retains as an
+    artifact; the file is one JSON object with the benchmark name, mode,
+    and summary dict (non-finite floats serialized as strings so the file
+    stays strictly valid JSON)."""
+    def sanitize(v):
+        if isinstance(v, dict):
+            return {str(k): sanitize(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return [sanitize(x) for x in v]
+        if isinstance(v, np.ndarray):
+            return [sanitize(x) for x in v.tolist()]
+        if isinstance(v, (np.floating, np.integer, np.bool_)):
+            v = v.item()
+        if isinstance(v, float) and not np.isfinite(v):
+            return repr(v)
+        if isinstance(v, (bool, int, float, str)) or v is None:
+            return v
+        return str(v)
+
+    record = {"benchmark": name, "summary": sanitize(payload)}
+    if quick is not None:
+        record["mode"] = "smoke" if quick else "full"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"BENCH_{name}.json"
+    path.write_text(json.dumps(record, indent=1, allow_nan=False))
+    return str(path)
 
 
 class Timer:

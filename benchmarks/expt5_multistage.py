@@ -1,0 +1,118 @@
+"""Expt 5 — composed per-stage tuning vs flattened single-space tuning.
+
+The DAG layer's claim (DESIGN.md §8, after arXiv:2403.00995): tuning each
+stage's small subspace and *composing* the per-stage Pareto frontiers
+along the job DAG reaches equal-or-better job-level frontier quality than
+optimizing the flattened joint space — at a fraction of the probes —
+because PF probe efficiency collapses in the concatenated
+``sum(d_s)``-dimensional space while the composed path pays only
+``sum(N_s)`` cheap low-dimensional probes plus an array-native
+composition pass.
+
+For 3–8-stage random series-parallel DAGs (analytic latency/cost stage
+family, per-stage theta), both paths get measured at matched hypervolume
+reference points; the composed path uses *half* the flattened probe
+budget (the acceptance bar: >= flattened hypervolume at <= 0.5x probes).
+
+    PYTHONPATH=src python -m benchmarks.expt5_multistage
+    PYTHONPATH=src python scripts/run_benchmarks.py --smoke   # CI path
+
+Writes ``results/BENCH_expt5_multistage.json``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    JobDAG,
+    MOGDConfig,
+    hypervolume_2d,
+    make_analytics_family,
+    random_series_parallel_edges,
+    solve_dag,
+    solve_pf,
+)
+
+from .common import Timer, emit, write_json
+
+MOGD = MOGDConfig(steps=60, multistart=8)
+
+
+def make_job(n_stages: int, seed: int) -> JobDAG:
+    """Random n-stage series-parallel analytics job (latency, cost)."""
+    rng = np.random.default_rng(seed)
+    fam = make_analytics_family()
+    names = [f"s{i}" for i in range(n_stages)]
+    stages = [
+        fam.stage(n, rng.uniform([1.0, 0.2, 0.1, 0.3],
+                                 [6.0, 1.0, 1.5, 1.2]))
+        for n in names
+    ]
+    return JobDAG(stages, random_series_parallel_edges(names, rng),
+                  name=f"job{n_stages}")
+
+
+def _compare_one(n_stages: int, probes_per_stage: int, seed: int) -> dict:
+    dag = make_job(n_stages, seed)
+    with Timer() as t_comp:
+        comp = solve_dag(dag, n_probes_per_stage=probes_per_stage,
+                         mogd=MOGD, batch_rects=4)
+    composed_probes = comp.probes
+    # the flattened baseline gets DOUBLE the composed probe budget — the
+    # acceptance bar is "equal-or-better HV at <= 0.5x the probe count"
+    flat_budget = 2 * composed_probes
+    flat_task = dag.flatten()
+    with Timer() as t_flat:
+        flat = solve_pf(flat_task, n_probes=flat_budget, mogd=MOGD,
+                        batch_rects=4)
+    # shared HV reference: componentwise worst over both frontiers + 5%
+    both = np.concatenate([comp.frontier.F, flat.F], axis=0)
+    ref = both.max(axis=0) * 1.05 + 1e-9
+    hv_comp = hypervolume_2d(comp.frontier.F, ref)
+    hv_flat = hypervolume_2d(flat.F, ref)
+    return {
+        "n_stages": n_stages,
+        "seed": seed,
+        "edges": len(dag.edges),
+        "probes_composed": int(composed_probes),
+        "probes_flattened": int(flat.probes),
+        "probe_ratio": float(composed_probes / max(flat.probes, 1)),
+        "hv_composed": float(hv_comp),
+        "hv_flattened": float(hv_flat),
+        "hv_ratio": float(hv_comp / max(hv_flat, 1e-12)),
+        "frontier_composed": int(len(comp.frontier)),
+        "frontier_flattened": int(len(flat.F)),
+        "dispatches_composed": int(comp.dispatches),
+        "wall_composed_s": float(t_comp.s),
+        "wall_flattened_s": float(t_flat.s),
+        "composed_ge_flat_at_half_probes": bool(
+            hv_comp >= hv_flat and composed_probes <= 0.5 * flat.probes),
+    }
+
+
+def run(quick: bool = True) -> dict:
+    sizes = (3, 5) if quick else (3, 5, 8)
+    probes_per_stage = 16 if quick else 48
+    rows = [_compare_one(n, probes_per_stage, seed=n) for n in sizes]
+    emit(rows, "expt5_multistage")
+    by_size = {r["n_stages"]: r for r in rows}
+    anchor = by_size.get(5, rows[-1])  # the acceptance-criterion DAG size
+    summary = {
+        "sizes": list(sizes),
+        "probes_per_stage": probes_per_stage,
+        "rows": rows,
+        "hv_ratio_5stage": anchor["hv_ratio"],
+        "probe_ratio_5stage": anchor["probe_ratio"],
+        "acceptance_5stage": anchor["composed_ge_flat_at_half_probes"],
+        "acceptance_all": bool(all(
+            r["composed_ge_flat_at_half_probes"] for r in rows)),
+    }
+    emit([{k: v for k, v in summary.items() if k != "rows"}],
+         "expt5_summary")
+    write_json("expt5_multistage", summary, quick=quick)
+    return summary
+
+
+if __name__ == "__main__":
+    print({k: v for k, v in run().items() if k != "rows"})

@@ -24,8 +24,33 @@ SUITES = [
     "roofline",          # §Roofline: dry-run artifact table
     "planner_frontier",  # beyond-paper: plan-space Pareto frontier
     "service_throughput",  # cross-rectangle batching + MOO service rates
+    "expt5_multistage",  # composed per-stage vs flattened tuning (DAG)
     "kernelbench",       # kernel vs oracle + VMEM accounting
 ]
+
+
+def run_suite(names, quick: bool) -> tuple[dict, list]:
+    """Run benchmark modules by name; returns (summaries, failures).
+
+    The single orchestration path shared by this full runner and the CI
+    smoke entry point (``scripts/run_benchmarks.py``)."""
+    summaries, failures = {}, []
+    for name in names:
+        print(f"\n########## {name} ({'quick' if quick else 'full'}) "
+              f"##########")
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            t = time.perf_counter()
+            summary = mod.run(quick=quick)
+            if not isinstance(summary, dict) or not summary:
+                raise ValueError(
+                    f"{name}.run() returned empty/non-dict summary")
+            summary["_wall_s"] = time.perf_counter() - t
+            summaries[name] = summary
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    return summaries, failures
 
 
 def main() -> None:
@@ -35,18 +60,8 @@ def main() -> None:
     ap.add_argument("--out", default="results/bench_summary.json")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else SUITES
-    summaries, failures = {}, []
     t0 = time.perf_counter()
-    for name in names:
-        print(f"\n########## {name} ##########")
-        try:
-            mod = importlib.import_module(f"benchmarks.{name}")
-            t = time.perf_counter()
-            summaries[name] = mod.run(quick=not args.full)
-            summaries[name]["_wall_s"] = time.perf_counter() - t
-        except Exception as e:  # noqa: BLE001
-            traceback.print_exc()
-            failures.append((name, repr(e)))
+    summaries, failures = run_suite(names, quick=not args.full)
     print(f"\n===== benchmark summaries ({time.perf_counter()-t0:.0f}s) =====")
     print(json.dumps(summaries, indent=1, default=str))
     try:

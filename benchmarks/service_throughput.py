@@ -28,7 +28,7 @@ from repro.core import (
 )
 from repro.service import MOOService
 
-from .common import Timer, emit
+from .common import Timer, emit, write_json
 
 MOGD = MOGDConfig(steps=80, multistart=8)
 HV_REF = np.array([1.5, 1.5])
@@ -103,6 +103,7 @@ def run(quick: bool = True) -> dict:
         "solver_cache_hits": int(st["solver_cache_hits"]),
     }
     emit([summary], "service_summary")
+    write_json("service_throughput", summary, quick=quick)
     return summary
 
 

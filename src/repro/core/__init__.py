@@ -63,7 +63,24 @@ from .task import (
     as_problem,
     preference_from_legacy,
 )
-from .progressive_frontier import PFResult, PFState, ProgressiveFrontier, solve_pf
+from .progressive_frontier import (
+    PFResult,
+    PFState,
+    ProgressiveFrontier,
+    coalesce_step,
+    solve_pf,
+)
+from .dag import (
+    ComposedFrontier,
+    DAGResult,
+    FamilySolver,
+    JobDAG,
+    StageFamily,
+    StageSpec,
+    make_analytics_family,
+    random_series_parallel_edges,
+    solve_dag,
+)
 from .synthetic import (
     make_dtlz2,
     make_mixed_problem,

@@ -94,6 +94,47 @@ def _eq4_loss(
     return target_term + viol_term + tie_term
 
 
+def adam_project_descend(loss_fn: Callable, x0: Array, cfg: MOGDConfig) -> Array:
+    """Multi-step Adam descent with cosine LR decay and projection onto
+    ``[0,1]^D`` (§4.2.1), from one start.  Shared by :class:`MOGDSolver`
+    and the DAG stage-family solver (``repro.core.dag``)."""
+    grad_fn = jax.grad(loss_fn)
+
+    def step(carry, _):
+        x, m, v, t = carry
+        g = grad_fn(x)
+        g = jnp.where(jnp.isfinite(g), g, 0.0)
+        m = cfg.adam_b1 * m + (1 - cfg.adam_b1) * g
+        v = cfg.adam_b2 * v + (1 - cfg.adam_b2) * g * g
+        mh = m / (1 - cfg.adam_b1 ** t)
+        vh = v / (1 - cfg.adam_b2 ** t)
+        frac = (t - 1.0) / cfg.steps
+        lr = cfg.lr * (
+            cfg.lr_floor
+            + (1 - cfg.lr_floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        )
+        x = x - lr * mh / (jnp.sqrt(vh) + cfg.adam_eps)
+        # Projection: walk back to the boundary of [0,1]^D (§4.2.1).
+        x = jnp.clip(x, 0.0, 1.0)
+        return (x, m, v, t + 1.0), None
+
+    z = jnp.zeros_like(x0)
+    (x, _, _, _), _ = jax.lax.scan(
+        step, (x0, z, z, jnp.float32(1.0)), None, length=cfg.steps
+    )
+    return x
+
+
+def single_objective_box(bounds: np.ndarray) -> np.ndarray:
+    """Constraint box for an unconstrained single-objective reference solve
+    (Def 3.4): the global objective bounds *widened downward* by one full
+    span — sampled bounds under-estimate the achievable minimum, and an
+    over-tight lower edge would make the true optimum look infeasible."""
+    bounds = np.asarray(bounds, dtype=np.float64)
+    span = np.maximum(bounds[1] - bounds[0], 1e-12)
+    return np.stack([bounds[0] - span, bounds[1]])
+
+
 def _user_bound_arrays(problem: MOOProblem):
     """Per-objective hard-bound arrays ``(ulo, uhi, uscale)`` or None.
 
@@ -162,31 +203,8 @@ class MOGDSolver:
                 f = obj_fn(x)
                 return _eq4_loss(f, lo, hi, target, penalty,
                                  cfg.tie_break_eps) + bound_pen(f)
-            grad_fn = jax.grad(loss_fn)
 
-            def step(carry, _):
-                x, m, v, t = carry
-                g = grad_fn(x)
-                g = jnp.where(jnp.isfinite(g), g, 0.0)
-                m = cfg.adam_b1 * m + (1 - cfg.adam_b1) * g
-                v = cfg.adam_b2 * v + (1 - cfg.adam_b2) * g * g
-                mh = m / (1 - cfg.adam_b1 ** t)
-                vh = v / (1 - cfg.adam_b2 ** t)
-                frac = (t - 1.0) / cfg.steps
-                lr = cfg.lr * (
-                    cfg.lr_floor
-                    + (1 - cfg.lr_floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
-                )
-                x = x - lr * mh / (jnp.sqrt(vh) + cfg.adam_eps)
-                # Projection: walk back to the boundary of [0,1]^D (§4.2.1).
-                x = jnp.clip(x, 0.0, 1.0)
-                return (x, m, v, t + 1.0), None
-
-            z = jnp.zeros_like(x0)
-            (x, _, _, _), _ = jax.lax.scan(
-                step, (x0, z, z, jnp.float32(1.0)), None, length=cfg.steps
-            )
-            return x
+            return adam_project_descend(loss_fn, x0, cfg)
 
         def solve_batch(x0s: Array, los: Array, his: Array, target: Array):
             """x0s: (B, S, D); los/his: (B, k) -> per-problem best."""
@@ -267,17 +285,9 @@ class MOGDSolver:
         return np.asarray(x), np.asarray(f), np.asarray(feas)
 
     def solve_single_objective(self, target: int, bounds: np.ndarray) -> COResult:
-        """Unconstrained single-objective min (reference points, Def 3.4).
-
-        The constraint box is the global objective bounds *widened downward*
-        by one full span: sampled bounds under-estimate the achievable
-        minimum, and an over-tight lower edge would make the true optimum
-        look like a constraint violation.
-        """
-        bounds = np.asarray(bounds, dtype=np.float64)
-        span = np.maximum(bounds[1] - bounds[0], 1e-12)
-        widened = np.stack([bounds[0] - span, bounds[1]])
-        return self.solve(widened[None], target=target)
+        """Unconstrained single-objective min (reference points, Def 3.4);
+        see :func:`single_objective_box` for the widening rationale."""
+        return self.solve(single_objective_box(bounds)[None], target=target)
 
 
 # ---------------------------------------------------------------------------

@@ -311,6 +311,59 @@ class ProgressiveFrontier:
         )
 
 
+def coalesce_step(entries, solve) -> int:
+    """One shared probe dispatch over many PF sessions' pending cells.
+
+    ``entries`` is a list of ``(engine, state)`` pairs; ``solve`` maps
+    ``(all_boxes: (B, 2, k), prepared)`` to a :class:`COResult` over the
+    concatenated boxes, where ``prepared`` is the aligned list of
+    ``(engine, state, cells, boxes)`` spans (callers that need per-span
+    metadata — e.g. per-stage family parameters — read it from there).
+    Results are split back per session, absorbed, and each state is
+    charged its share of the shared wall time.  A failed dispatch restores
+    every popped cell (no uncertain space leaks).  Returns the number of
+    probes performed.
+
+    This is the single coalescing primitive behind both the multi-tenant
+    service (``repro.service``) and the multi-stage DAG solver
+    (``repro.core.dag``) — DESIGN.md §5/§8.
+    """
+    prepared = []
+    for engine, state in entries:
+        cells, boxes = engine.prepare_parallel(state)
+        if boxes is not None:
+            prepared.append((engine, state, cells, boxes))
+    if not prepared:
+        return 0
+    all_boxes = np.concatenate([b for *_, b in prepared], axis=0)
+    t0 = time.perf_counter()
+    try:
+        res = solve(all_boxes, prepared)
+    except Exception:
+        # a failed shared dispatch must not leak any tenant's popped
+        # uncertain space — return every prepared cell to its queue
+        for engine, state, cells, _ in prepared:
+            engine.restore(state, cells)
+        raise
+    wall = time.perf_counter() - t0
+    off = 0
+    total = all_boxes.shape[0]
+    for engine, state, cells, boxes in prepared:
+        n = boxes.shape[0]
+        sub = dataclasses.replace(
+            res,
+            x=res.x[off: off + n],
+            f=res.f[off: off + n],
+            feasible=res.feasible[off: off + n],
+        )
+        engine.absorb(state, cells, sub)
+        # charge each session its share of the shared dispatch
+        state.elapsed += wall * (n / total)
+        state.record()
+        off += n
+    return total
+
+
 def solve_pf(
     problem,  # MOOProblem or TaskSpec
     mode: str = "AP",

@@ -3,6 +3,7 @@
 
     mogd_mlp        fused surrogate-MLP batch forward (the MOGD hot loop)
     pareto_filter   blocked O(n^2) Pareto domination count
+    compose         blocked all-pairs frontier composition (DAG stages)
     flash_attention causal GQA flash attention (train/prefill)
     rwkv6_wkv       RWKV-6 WKV recurrence, state resident in VMEM
     mamba_scan      S6 selective scan, state resident in VMEM

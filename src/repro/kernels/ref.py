@@ -23,6 +23,19 @@ def pareto_counts(F):
     return dom.sum(axis=0).astype(jnp.int32)
 
 
+def pairwise_compose(FA, FB, add_mask):
+    """All-pairs frontier composition: ``FA: (N, k)`` x ``FB: (M, k)`` ->
+    ``(N*M, k)`` in row-major order (row ``i*M + j`` composes ``FA[i]``
+    with ``FB[j]``).  Objective ``o`` composes as ``FA+FB`` where
+    ``add_mask[o]`` (series latency, summed cost) and as ``max(FA, FB)``
+    otherwise (parallel branches on the critical path)."""
+    FA, FB = jnp.asarray(FA), jnp.asarray(FB)
+    m = jnp.asarray(add_mask, bool)[None, None, :]
+    comp = jnp.where(m, FA[:, None, :] + FB[None, :, :],
+                     jnp.maximum(FA[:, None, :], FB[None, :, :]))
+    return comp.reshape(-1, FA.shape[-1])
+
+
 def flash_attention(q, k, v, causal=True):
     """q/k/v: (B, S, H, dh) with H == Hk (repeat GQA upstream)."""
     B, S, H, dh = q.shape

@@ -95,13 +95,19 @@ def _layer_init(kg: KeyGen, cfg: ArchConfig, mixer: str, ffn: str) -> dict:
     return p
 
 
-def _layer_cache_init(cfg: ArchConfig, mixer: str, batch: int, max_seq: int,
-                      abstract: bool) -> dict:
+def _layer_cache_init(cfg: ArchConfig, mixer: str, ffn: str, batch: int,
+                      max_seq: int, abstract: bool) -> dict:
     """Per-layer decode cache (PV leaves with logical axes)."""
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
         lambda s, d: jnp.zeros(s, d))
+    extra = {}
+    if ffn == "moe":
+        # per-expert loads of the current dispatch chunk: incremental decode
+        # reproduces the full pass's capacity drops (see moe.py docstring)
+        extra["moe_counts"] = PV(
+            mk((batch, cfg.moe.num_experts), jnp.int32), ("batch", None))
     if mixer == "attn":
-        return init_layer_cache(cfg, batch, max_seq, abstract)
+        return {**init_layer_cache(cfg, batch, max_seq, abstract), **extra}
     if mixer == "mamba":
         m = cfg.hybrid.mamba
         din = m.expand * cfg.d_model
@@ -110,6 +116,7 @@ def _layer_cache_init(cfg: ArchConfig, mixer: str, batch: int, max_seq: int,
                     ("batch", "d_inner", "d_state")),
             "conv": PV(mk((batch, m.d_conv - 1, din), cfg.cdtype()),
                        ("batch", None, "d_inner")),
+            **extra,
         }
     if mixer == "rwkv":
         r = cfg.rwkv
@@ -121,6 +128,7 @@ def _layer_cache_init(cfg: ArchConfig, mixer: str, batch: int, max_seq: int,
                        ("batch", None)),
             "x_cm": PV(mk((batch, cfg.d_model), cfg.cdtype()),
                        ("batch", None)),
+            **extra,
         }
     raise ValueError(mixer)
 
@@ -149,12 +157,18 @@ def _apply_mixer(p, cfg: ArchConfig, mixer: str, x, rules, mode, cache, pos,
     raise ValueError(mixer)
 
 
-def _apply_ffn(p, cfg: ArchConfig, ffn: str, x, rules, mode, cache):
+def _apply_ffn(p, cfg: ArchConfig, ffn: str, x, rules, mode, cache, pos):
     """Returns (y, extra_cache_updates or {})."""
     if ffn == "mlp":
         return mlp(p["mlp"], x, cfg.activation, rules), {}
     if ffn == "moe":
-        return moe(p["moe"], cfg, cfg.moe, x, rules), {}
+        if mode == "train":
+            return moe(p["moe"], cfg, cfg.moe, x, rules), {}
+        counts = (cache.get("moe_counts")
+                  if mode == "decode" and cache is not None else None)
+        y, new_counts = moe(p["moe"], cfg, cfg.moe, x, rules, counts=counts,
+                            pos=pos, return_counts=True)
+        return y, {"moe_counts": new_counts}
     if ffn == "rwkv_cm":
         prev = cache.get("x_cm") if cache is not None else None
         y, x_cm = rwkv_channel_mix(p["channel_mix"], cfg, x, prev, rules)
@@ -170,7 +184,8 @@ def layer_apply(p, cfg: ArchConfig, mixer: str, ffn: str, x, rules, mode,
         cache, pos, max_seq)
     x = x + h
     h, cm_cache = _apply_ffn(
-        p, cfg, ffn, rmsnorm(p["norm2"], x, cfg.norm_eps), rules, mode, cache)
+        p, cfg, ffn, rmsnorm(p["norm2"], x, cfg.norm_eps), rules, mode, cache,
+        pos)
     x = x + h
     if new_cache is not None and cm_cache:
         new_cache = {**new_cache, **cm_cache}
@@ -220,8 +235,9 @@ def blocks_cache_init(cfg: ArchConfig, batch: int, max_seq: int,
     units = []
     for _ in range(n_scan):
         unit = {
-            f"l{i}": _layer_cache_init(cfg, mixer, batch, max_seq, abstract)
-            for i, (mixer, _) in enumerate(plan)
+            f"l{i}": _layer_cache_init(cfg, mixer, ffn, batch, max_seq,
+                                       abstract)
+            for i, (mixer, ffn) in enumerate(plan)
         }
         units.append(unit)
     return _stack_pv(units)

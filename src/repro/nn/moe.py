@@ -3,7 +3,7 @@
 Differentiable, shardable top-k routing with capacity:
 
     router logits (fp32) -> top-k gates -> capacity-limited position-in-
-    expert via cumulative sum -> dispatch one-hot (g, s, E, C) ->
+    expert via causal cumulative sum -> dispatch one-hot (g, s, E, C) ->
     expert_in = einsum(dispatch, x) -> per-expert FFN -> combine.
 
 Tokens are processed in groups (``group_size``) so the dispatch/combine
@@ -16,6 +16,28 @@ term tracks.
 
 ``impl="gather"`` replaces the two big dispatch/combine einsums with
 take-based gathers (beyond-paper optimization; see EXPERIMENTS.md §Perf).
+
+Capacity semantics (decode/prefill parity).  Capacity overflow must drop
+the *same* tokens whether a sequence is processed in one full pass or one
+token at a time, so three choices here deliberately diverge from GShard:
+
+* **Token-major serialization** — slot positions are assigned in token
+  order (a token's slot depends only on *earlier* tokens' loads), not
+  GShard's choice-major order (where a token's 2nd-choice slot depends on
+  *later* tokens' 1st choices).  Choice-major is impossible to reproduce
+  incrementally.
+* **Config-static capacity** — capacity derives from ``group_size``, never
+  from the runtime group length, so a 1-token decode step and a full-
+  sequence pass agree on the drop threshold.
+* **Per-row groups** — dispatch groups never span batch rows
+  (``gs = min(group_size, S)``), so one row's load cannot evict another
+  row's tokens, and a decode step (its own group per row) sees the same
+  grouping as the full pass.
+
+Incremental decode then carries per-expert usage ``counts (B, E)`` in the
+layer cache (reset every ``group_size`` tokens — the full pass's chunk
+boundary) and reproduces full-pass drops exactly; this fixed the seed-era
+qwen2-moe decode/prefill logit mismatch.
 """
 
 from __future__ import annotations
@@ -64,52 +86,61 @@ def _top_k_gating(logits: Array, m: MoEConfig):
     return gates, oh
 
 
-def _dispatch_tensors(gates: Array, oh: Array, m: MoEConfig, capacity: int):
-    """GShard position-in-expert. Returns combine (g,s,E,C) and dispatch
-    (bool same shape)."""
-    g, s, k, E = oh.shape
-    # priority: iterate the k choices in order; earlier choices get earlier
-    # slots (standard GShard serialization of top-k). Accumulate the (g,s,E,C)
-    # dispatch per choice to avoid ever materializing a 5-D (g,s,k,E,C).
-    disp = jnp.zeros((g, s, E, capacity), gates.dtype)
-    running = jnp.zeros((g, E), oh.dtype)
-    for j in range(k):
-        mj = oh[:, :, j]  # (g, s, E)
-        pos = jnp.cumsum(mj, axis=1) - mj + running[:, None]
-        running = running + mj.sum(axis=1)
-        keep = (pos < capacity) & (mj > 0)
-        disp = disp + jnp.where(
-            keep[..., None],
-            jax.nn.one_hot(pos, capacity, dtype=gates.dtype),
-            0.0,
-        )
+def expert_capacity(m: MoEConfig) -> int:
+    """Config-static per-expert capacity: derived from ``group_size`` (not
+    the runtime group length) so a decode step and a full-sequence pass
+    agree on when a token overflows."""
+    cap = int(m.group_size * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, -(-cap // 8) * 8)  # round up to multiple of 8
+
+
+def _expert_positions(oh: Array, capacity: int, base: Array | None):
+    """Causal (token-major) position-in-expert.
+
+    ``oh: (g, s, k, E)`` one-hot choices.  A token's slot in expert ``e``
+    is the number of *earlier* tokens in the group assigned to ``e`` (any
+    choice rank) — top-k experts are distinct per token, so within-token
+    order is immaterial.  ``base: (g, E)`` adds prior loads carried in from
+    a decode cache.  Returns ``(assign (g,s,E), pos (g,s,E), loads (g,E))``
+    where ``loads`` counts every assignment (kept or dropped, matching the
+    running-count semantics of the full pass).
+    """
+    assign = oh.sum(axis=2)  # (g, s, E) in {0, 1}
+    pos = jnp.cumsum(assign, axis=1) - assign  # exclusive prefix loads
+    if base is not None:
+        pos = pos + base[:, None, :].astype(pos.dtype)
+    loads = pos[:, -1] + assign[:, -1]  # (g, E) total after the group
+    return assign, pos, loads
+
+
+def _dispatch_tensors(gates: Array, oh: Array, capacity: int,
+                      base: Array | None = None):
+    """Dense dispatch. Returns combine (g,s,E,C), dispatch (same shape),
+    and the per-group expert loads (g,E)."""
+    assign, pos, loads = _expert_positions(oh, capacity, base)
+    keep = (pos < capacity) & (assign > 0)
+    disp = jnp.where(
+        keep[..., None],
+        jax.nn.one_hot(pos, capacity, dtype=gates.dtype),
+        0.0,
+    )
     comb = jnp.einsum("gse,gsec->gsec", gates, disp)
-    return comb, disp
+    return comb, disp, loads
 
 
-def _gather_dispatch(xt, gates, oh, m: MoEConfig, capacity: int):
+def _gather_dispatch(xt, gates, oh, capacity: int, base: Array | None = None):
     """Scatter/gather token routing (beyond-paper; §Perf iteration Q1).
 
     Replaces the two O(s*E*C*D) one-hot dispatch/combine einsums with
     O(s*k*D) scatter-adds and gathers — same capacity semantics, same
     gradients (scatter/gather have exact transpose rules).  Returns
-    (expert_in (g,E,C,D), combine_fn(eout) -> (g,s,D)).
+    (expert_in (g,E,C,D), combine_fn(eout) -> (g,s,D), loads (g,E)).
     """
     g, s, k, E = oh.shape
+    assign, pos_e, loads = _expert_positions(oh, capacity, base)
     topi = jnp.argmax(oh, axis=-1)                  # (g, s, k) expert ids
-    # position-in-expert per choice (same GShard serialization as einsum)
-    pos_list, keep_list = [], []
-    running = jnp.zeros((g, E), oh.dtype)
-    for j in range(k):
-        mj = oh[:, :, j]
-        pos = jnp.cumsum(mj, axis=1) - mj + running[:, None]
-        running = running + mj.sum(axis=1)
-        posj = jnp.take_along_axis(pos, topi[:, :, j][..., None],
-                                   axis=-1)[..., 0]  # (g, s)
-        pos_list.append(posj)
-        keep_list.append(posj < capacity)
-    pos = jnp.stack(pos_list, 2).astype(jnp.int32)   # (g, s, k)
-    keep = jnp.stack(keep_list, 2)                   # (g, s, k)
+    pos = jnp.take_along_axis(pos_e, topi, axis=-1).astype(jnp.int32)
+    keep = pos < capacity                            # (g, s, k)
     gi = jnp.arange(g)[:, None, None]
     D = xt.shape[-1]
     contrib = jnp.where(keep[..., None], 1.0, 0.0).astype(xt.dtype)
@@ -123,25 +154,49 @@ def _gather_dispatch(xt, gates, oh, m: MoEConfig, capacity: int):
         wk = (gate_k * keep).astype(eout.dtype)[..., None]
         return (y_k * wk).sum(axis=2)
 
-    return expert_in, combine
+    return expert_in, combine, loads
 
 
-def moe(p: dict, cfg: ArchConfig, m: MoEConfig, x: Array, rules=None) -> Array:
-    """x: (B, S, D) -> (B, S, D)."""
+def moe(p: dict, cfg: ArchConfig, m: MoEConfig, x: Array, rules=None,
+        counts: Array | None = None, pos: Array | None = None,
+        return_counts: bool = False):
+    """x: (B, S, D) -> (B, S, D), or ``(y, counts)`` with
+    ``return_counts=True``.
+
+    ``counts: (B, E)`` are prior per-expert loads from a decode cache
+    (single-token steps); ``pos`` is the step's global position, used to
+    reset the loads at ``group_size`` chunk boundaries.  The returned
+    counts are the loads after this call's last chunk, ready to cache.
+    """
     impl = cfg.moe_impl
     B, S, D = x.shape
     N = B * S
-    gs = min(m.group_size, N)
+    # Per-row groups: a dispatch group never spans batch rows, so decode
+    # (one group per row) and the full pass agree on group membership.
+    gs = min(m.group_size, S)
+    if S % gs:
+        # a ragged tail group would silently span rows (train) or break
+        # the loads bookkeeping (prefill/decode) — fail loudly instead
+        raise ValueError(
+            f"moe: sequence length {S} must be <= group_size "
+            f"({m.group_size}) or a multiple of it; pad the sequence or "
+            f"adjust MoEConfig.group_size")
     g = N // gs
     xt = x.reshape(g, gs, D)
     logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
     gates, oh = _top_k_gating(logits, m)
-    capacity = int(gs * m.top_k / m.num_experts * m.capacity_factor)
-    capacity = max(8, -(-capacity // 8) * 8)  # round up to multiple of 8
+    capacity = expert_capacity(m)
+    base = None
+    if counts is not None:
+        # decode step (S == 1, g == B): chunk boundary resets the loads,
+        # matching where the full pass starts a fresh dispatch group
+        fresh = (pos % m.group_size) == 0
+        base = jnp.where(fresh, 0, counts).astype(jnp.float32)
     if impl == "gather":
-        ein, combine_fn = _gather_dispatch(xt, gates, oh, m, capacity)
+        ein, combine_fn, loads = _gather_dispatch(xt, gates, oh, capacity,
+                                                  base)
     else:
-        comb, disp = _dispatch_tensors(gates, oh, m, capacity)
+        comb, disp, loads = _dispatch_tensors(gates, oh, capacity, base)
         comb = comb.astype(x.dtype)
         # dispatch: (g,s,E,C) x (g,s,D) -> (g,E,C,D) [induces all-to-all]
         ein = jnp.einsum("gsec,gsd->gecd", disp.astype(x.dtype), xt)
@@ -169,4 +224,10 @@ def moe(p: dict, cfg: ArchConfig, m: MoEConfig, x: Array, rules=None) -> Array:
         shared = hs @ p["shared_w2"]
         sg = jax.nn.sigmoid((x @ p["shared_gate"]).astype(jnp.float32))
         y = y + shared * sg.astype(x.dtype)
-    return y
+    if not return_counts:
+        return y
+    # loads after each row's LAST chunk — the state a subsequent decode
+    # step needs (earlier chunks' loads are dead: their boundary passed)
+    E = loads.shape[-1]
+    counts_out = loads.reshape(B, S // gs, E)[:, -1].astype(jnp.int32)
+    return y, counts_out

@@ -13,6 +13,12 @@ decoupled modeling engine.
 
 from .space import PLAN_KNOBS, decode_plan, plan_space
 from .cost_model import CHIP_COST_PER_S, HBM_BYTES, PlanModel
-from .planner import PlanRecommendation, plan_job, replan_elastic
+from .planner import (
+    JobPlanRecommendation,
+    PlanRecommendation,
+    plan_dag,
+    plan_job,
+    replan_elastic,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

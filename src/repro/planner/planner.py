@@ -24,18 +24,64 @@ import time
 import numpy as np
 
 from repro.core import (
+    JobDAG,
     MOGDConfig,
     Objective,
     Preference,
     ProgressiveFrontier,
     TaskSpec,
     WeightedUtopiaNearest,
+    solve_dag,
 )
 from repro.launch.plans import Plan
 from repro.nn import SHAPES, ArchConfig, ShapeSpec
 
 from .cost_model import PlanModel
 from .space import decode_plan, plan_space
+
+
+@dataclasses.dataclass
+class JobPlanRecommendation:
+    """Recommendation for a multi-stage job: one config per stage plus the
+    composed job-level frontier (latency over the critical path, cost over
+    all stages — the DAG's compose operators)."""
+
+    stage_configs: dict           # stage name -> raw knob dict
+    objectives: np.ndarray        # (k,) composed values of the pick
+    frontier_F: np.ndarray        # (N, k) composed Pareto frontier
+    frontier_X: np.ndarray        # (N, D_total) per-stage encoded configs
+    stage_frontiers: dict         # stage name -> (F, X) per-stage frontier
+    probes: int                   # total probes spent (deduped stages)
+    elapsed_s: float
+
+
+def plan_dag(dag: JobDAG,
+             n_probes_per_stage: int = 24,
+             preference: Preference | None = None,
+             mogd: MOGDConfig = MOGDConfig(steps=80, multistart=8),
+             grid_l: int = 2,
+             batch_rects: int = 4,
+             use_kernel: bool = False,
+             deadline_s: float | None = None) -> JobPlanRecommendation:
+    """Plan a multi-stage job: batched per-stage Progressive Frontier,
+    DAG frontier composition, then one preference pick on the *composed*
+    frontier — returning the per-stage configurations that realize it."""
+    t0 = time.perf_counter()
+    res = solve_dag(dag, n_probes_per_stage=n_probes_per_stage, mogd=mogd,
+                    grid_l=grid_l, batch_rects=batch_rects,
+                    use_kernel=use_kernel, deadline_s=deadline_s)
+    comp = res.frontier
+    pref = preference or WeightedUtopiaNearest((0.5,) * dag.k)
+    i = pref.pick(comp.F, comp.utopia, comp.nadir)
+    return JobPlanRecommendation(
+        stage_configs=dag.decode(comp.X[i]),
+        objectives=np.asarray(comp.F[i]),
+        frontier_F=np.asarray(comp.F),
+        frontier_X=np.asarray(comp.X),
+        stage_frontiers=res.stage_frontiers,
+        probes=res.probes,
+        elapsed_s=time.perf_counter() - t0,
+    )
 
 
 @dataclasses.dataclass
@@ -140,7 +186,44 @@ def plan_job(arch_cfg: ArchConfig, shape_name: str = "train_4k",
     ``task`` overrides the internally-built spec; ``preference`` is the
     typed §5 policy (``weights`` remains as a shim building a
     WeightedUtopiaNearest); ``objective_bounds`` declares hard value caps
-    that provably constrain the returned frontier."""
+    that provably constrain the returned frontier.
+
+    A :class:`~repro.core.dag.JobDAG` may be passed in place of the arch
+    config: the job is then planned per stage (batched probes, composed
+    frontier) and a :class:`JobPlanRecommendation` is returned.
+    ``weights``/``preference``, ``n_probes`` (per stage), ``mogd``,
+    ``grid_l``, ``batch_rects`` and ``deadline_s`` apply as usual;
+    arch-planning parameters that have no DAG meaning are rejected."""
+    if isinstance(arch_cfg, JobDAG):
+        inapplicable = {
+            "objectives": tuple(objectives) != ("latency", "cost"),
+            "model": model is not None,
+            "chip_choices": chip_choices is not None,
+            "state": state is not None,
+            "objective_bounds": objective_bounds is not None,
+            "task": task is not None,
+        }
+        bad = sorted(k for k, v in inapplicable.items() if v)
+        if bad:
+            raise ValueError(
+                f"plan_job(JobDAG): parameter(s) {bad} do not apply to "
+                f"DAG planning — the DAG's stages declare objectives, "
+                f"models, and bounds")
+        if preference is not None:
+            pref = preference
+        else:
+            w = tuple(weights)
+            if len(w) != arch_cfg.k:
+                if w == (0.5, 0.5):  # untouched default: adapt to k
+                    w = (0.5,) * arch_cfg.k
+                else:
+                    raise ValueError(
+                        f"plan_job(JobDAG): {len(w)} weights for "
+                        f"{arch_cfg.k} objectives")
+            pref = WeightedUtopiaNearest(w)
+        return plan_dag(arch_cfg, n_probes_per_stage=n_probes,
+                        preference=pref, mogd=mogd, grid_l=grid_l,
+                        batch_rects=batch_rects, deadline_s=deadline_s)
     shape = SHAPES[shape_name]
     t0 = time.perf_counter()
     user_task = task is not None

@@ -17,6 +17,7 @@ from repro.core.task import (
 )
 
 from .moo_service import (
+    DagRecommendation,
     MOOService,
     Recommendation,
     SessionInfo,
@@ -24,6 +25,7 @@ from .moo_service import (
 )
 
 __all__ = [
+    "DagRecommendation",
     "MOOService",
     "Objective",
     "Preference",

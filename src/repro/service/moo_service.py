@@ -36,8 +36,9 @@ import warnings
 import numpy as np
 
 from repro.core import MOGDConfig, MOOProblem, ProgressiveFrontier
+from repro.core.dag import ComposedFrontier, JobDAG
 from repro.core.mogd import MOGDSolver
-from repro.core.progressive_frontier import PFResult, PFState
+from repro.core.progressive_frontier import PFResult, PFState, coalesce_step
 from repro.core.task import Preference, TaskSpec, preference_from_legacy
 
 
@@ -88,6 +89,29 @@ class SessionInfo:
 
 
 @dataclasses.dataclass
+class DagRecommendation:
+    """One per-stage configuration set picked from a DAG session's
+    composed frontier."""
+
+    dag_id: str
+    index: int
+    objectives: np.ndarray  # (k,) composed job-level values
+    stage_configs: dict  # stage name -> decoded knob dict
+    frontier_size: int
+
+
+@dataclasses.dataclass
+class _DagSession:
+    """A multi-stage job session: the DAG plus its per-stage child
+    sessions (deduped by stage signature)."""
+
+    dag_id: str
+    dag: JobDAG
+    stage_sids: dict  # stage name -> child session id
+    created_s: float = dataclasses.field(default_factory=time.perf_counter)
+
+
+@dataclasses.dataclass
 class _Session:
     session_id: str
     problem: MOOProblem
@@ -123,6 +147,7 @@ class MOOService:
         self.use_kernel = use_kernel
         self.kernel_interpret = kernel_interpret
         self._sessions: dict[str, _Session] = {}
+        self._dags: dict[str, _DagSession] = {}
         # (signature, mogd) -> compiled solver; keeps the problem that built
         # it alive so id()-based signatures stay unambiguous.
         self._solvers: dict[tuple, tuple[MOGDSolver, MOOProblem]] = {}
@@ -200,6 +225,115 @@ class MOOService:
             for key in [k for k in self._solvers if k[0] == sig]:
                 self._solvers.pop(key, None)
 
+    # ------------------------------------------------------------------
+    def create_dag_session(
+        self,
+        dag: JobDAG,
+        mode: str | None = None,
+        mogd: MOGDConfig | None = None,
+        grid_l: int | None = None,
+        batch_rects: int | None = None,
+        target: int = 0,
+    ) -> str:
+        """Register a multi-stage job: one child session per *distinct*
+        stage signature (a job repeating a recurring sub-task tunes it
+        once).  Child sessions enter the normal coalescing machinery, so
+        ``step_all``/``run_until`` batch a DAG's stage probes — and any
+        other tenant's equal-signature probes — into shared MOGD
+        dispatches.  Compose/recommend with :meth:`dag_frontier` /
+        :meth:`recommend_dag`."""
+        if not isinstance(dag, JobDAG):
+            raise TypeError(
+                f"create_dag_session expects a JobDAG, got "
+                f"{type(dag).__name__}")
+        with self._lock:
+            by_sig: dict[str, str] = {}
+            stage_sids: dict[str, str] = {}
+            try:
+                for stage in dag.stages:
+                    sig = stage.signature()
+                    if sig not in by_sig:
+                        by_sig[sig] = self.create_session(
+                            stage.task, mode=mode, mogd=mogd,
+                            grid_l=grid_l, batch_rects=batch_rects,
+                            target=target)
+                    stage_sids[stage.name] = by_sig[sig]
+            except Exception:
+                # a failing stage must not leak the siblings already
+                # registered — the caller has no dag_id to close them with
+                for sid in by_sig.values():
+                    self.close_session(sid)
+                raise
+            dag_id = f"dag-{next(self._ids)}"
+            self._dags[dag_id] = _DagSession(dag_id, dag, stage_sids)
+            return dag_id
+
+    def close_dag_session(self, dag_id: str) -> None:
+        with self._lock:
+            ds = self._dags.pop(dag_id, None)
+            if ds is None:
+                return
+            for sid in set(ds.stage_sids.values()):
+                self.close_session(sid)
+
+    def _get_dag(self, dag_id: str) -> _DagSession:
+        try:
+            return self._dags[dag_id]
+        except KeyError:
+            raise KeyError(f"unknown DAG session {dag_id!r}") from None
+
+    def _dag_snapshot(self, dag_id: str):
+        """Under the lock: the DAG plus copies of its stages' frontiers."""
+        with self._lock:
+            ds = self._get_dag(dag_id)
+            frontiers = {
+                name: self.frontier(sid)
+                for name, sid in ds.stage_sids.items()
+            }
+        empty = sorted(n for n, (F, _) in frontiers.items() if len(F) == 0)
+        if empty:
+            raise RuntimeError(
+                f"DAG session {dag_id!r}: stages {empty} have no "
+                f"frontier yet — probe first (run_until/step_all)")
+        return ds.dag, frontiers
+
+    def dag_frontier(self, dag_id: str) -> ComposedFrontier:
+        """Compose the job-level frontier from the stages' live frontiers
+        (critical-path / summed objectives per the DAG's operators), with
+        Pareto re-filtering through the FrontierStore kernel path.
+
+        Only the per-stage frontier *snapshot* happens under the service
+        lock (``frontier()`` already copies); the composition itself runs
+        outside it, so a large compose never stalls other tenants'
+        ``step_all``/``run_until``."""
+        dag, frontiers = self._dag_snapshot(dag_id)
+        return dag.compose_frontiers(
+            frontiers, use_kernel=self.use_kernel,
+            kernel_interpret=self.kernel_interpret)
+
+    def recommend_dag(
+        self,
+        dag_id: str,
+        preference: Preference | None = None,
+    ) -> DagRecommendation:
+        """Pick one composed point and return the per-stage configurations
+        realizing it.  ``preference`` defaults to UN on the composed
+        frontier.  Composes once, outside the service lock."""
+        comp = self.dag_frontier(dag_id)
+        with self._lock:
+            dag = self._get_dag(dag_id).dag
+        pref = preference if preference is not None else (
+            preference_from_legacy("un"))
+        i = pref.pick(comp.F, comp.utopia, comp.nadir)
+        return DagRecommendation(
+            dag_id=dag_id,
+            index=i,
+            objectives=comp.F[i],
+            stage_configs=dag.decode(comp.X[i]),
+            frontier_size=len(comp),
+        )
+
+    # ------------------------------------------------------------------
     def open_session(
         self,
         problem: MOOProblem,
@@ -335,43 +469,18 @@ class MOOService:
         return stats
 
     def _coalesced_step(self, sessions: list[_Session]) -> int:
-        """One shared MOGD dispatch over every session's pending cells."""
-        prepared = []
-        for sess in sessions:
-            cells, boxes = sess.engine.prepare_parallel(sess.state)
-            if boxes is not None:
-                prepared.append((sess, cells, boxes))
-        if not prepared:
-            return 0
-        all_boxes = np.concatenate([b for _, _, b in prepared], axis=0)
-        engine = prepared[0][0].engine
-        t0 = time.perf_counter()
-        try:
-            res = engine.solver.solve(all_boxes, target=engine.target)
-        except Exception:
-            # a failed shared dispatch must not leak any tenant's popped
-            # uncertain space — return every prepared cell to its queue
-            for sess, cells, _ in prepared:
-                sess.engine.restore(sess.state, cells)
-            raise
-        wall = time.perf_counter() - t0
-        off = 0
-        total = all_boxes.shape[0]
-        for sess, cells, boxes in prepared:
-            n = boxes.shape[0]
-            sub = dataclasses.replace(
-                res,
-                x=res.x[off: off + n],
-                f=res.f[off: off + n],
-                feasible=res.feasible[off: off + n],
-            )
-            sess.engine.absorb(sess.state, cells, sub)
-            # charge each session its share of the shared dispatch
-            sess.state.elapsed += wall * (n / total)
-            sess.state.record()
-            off += n
-        self.coalesced_batches += 1
-        self.coalesced_probes += total
+        """One shared MOGD dispatch over every session's pending cells
+        (``core.progressive_frontier.coalesce_step`` with the sessions'
+        shared solver)."""
+        engine = sessions[0].engine
+        total = coalesce_step(
+            [(s.engine, s.state) for s in sessions],
+            lambda boxes, _prepared: engine.solver.solve(
+                boxes, target=engine.target),
+        )
+        if total:
+            self.coalesced_batches += 1
+            self.coalesced_probes += total
         return total
 
     def run_until(self, min_probes: int, max_rounds: int = 10_000) -> dict:
@@ -466,6 +575,7 @@ class MOOService:
         with self._lock:
             return {
                 "sessions": len(self._sessions),
+                "dag_sessions": len(self._dags),
                 "compiled_solvers": len(self._solvers),
                 "compiled_problems": len(self._problems),
                 "solver_cache_hits": self.solver_cache_hits,

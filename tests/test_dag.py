@@ -1,0 +1,364 @@
+"""DAG-aware multi-stage composition tests (DESIGN.md §8).
+
+Covers: series-parallel composition == brute-force cross product, the
+Pallas pairwise-composition kernel == its jnp oracle, the non-SP exact
+fallback, the batched per-stage solve path (dedupe + family dispatch +
+recomposition consistency), the service DAG sessions, the planner entry
+point, and JobDAG validation/signature semantics.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    JobDAG,
+    MOGDConfig,
+    StageSpec,
+    make_analytics_family,
+    pareto_filter,
+    random_series_parallel_edges,
+    solve_dag,
+)
+from repro.core.task import as_problem
+
+MOGD = MOGDConfig(steps=30, multistart=4)
+
+
+def _stages(n, seed=0, fam=None):
+    fam = fam or make_analytics_family()
+    rng = np.random.default_rng(seed)
+    return [fam.stage(f"s{i}", rng.uniform(0.5, 3.0, 4)) for i in range(n)]
+
+
+def _fake_frontiers(dag, sizes, seed=0):
+    """Synthetic per-stage frontiers (objective values + encoded X)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, n in zip(dag.stage_names, sizes):
+        d = dag.slices[name].stop - dag.slices[name].start
+        out[name] = (rng.uniform(0.5, 4.0, (n, dag.k)),
+                     rng.uniform(0.0, 1.0, (n, d)))
+    return out
+
+
+def _brute_force(dag, frontiers):
+    """Exact composed Pareto front via the full cross product."""
+    sizes = [len(frontiers[n][0]) for n in dag.stage_names]
+    idx = np.stack(np.meshgrid(*[np.arange(s) for s in sizes],
+                               indexing="ij")).reshape(len(sizes), -1)
+    vals = {n: np.asarray(frontiers[n][0], np.float64)[idx[i]]
+            for i, n in enumerate(dag.stage_names)}
+    return pareto_filter(dag.evaluate(vals))
+
+
+def _canon(F):
+    F = np.unique(np.round(np.asarray(F, np.float64), 6), axis=0)
+    return F[np.lexsort(F.T[::-1])]
+
+
+class TestComposition:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_sp_composition_matches_bruteforce(self, seed):
+        """Random 3-stage series-parallel DAG: pairwise composition with
+        intermediate Pareto filtering equals the cross-product front."""
+        rng = np.random.default_rng(seed)
+        stages = _stages(3, seed)
+        edges = random_series_parallel_edges([s.name for s in stages], rng)
+        dag = JobDAG(stages, edges)
+        frontiers = _fake_frontiers(dag, [5, 7, 6], seed)
+        comp = dag.compose_frontiers(frontiers)
+        expect = _brute_force(dag, frontiers)
+        np.testing.assert_allclose(_canon(comp.F), _canon(expect),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_composed_x_provenance(self):
+        """Every composed row's X recomposes to its F through the stage
+        models and the DAG operators."""
+        stages = _stages(3, seed=3)
+        dag = JobDAG(stages, [("s0", "s1"), ("s0", "s2")])
+        frontiers = _fake_frontiers(dag, [4, 4, 4], 3)
+        # make F consistent with X through the actual stage models
+        frontiers = {
+            n: (np.asarray(as_problem(dag.stage(n).task).evaluate_batch(X)),
+                X)
+            for n, (F, X) in frontiers.items()
+        }
+        comp = dag.compose_frontiers(frontiers)
+        for i in range(len(comp)):
+            per = {
+                n: np.asarray(as_problem(dag.stage(n).task).evaluate_batch(
+                    comp.X[i][dag.slices[n]][None]))[0]
+                for n in dag.stage_names
+            }
+            np.testing.assert_allclose(dag.evaluate(per), comp.F[i],
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_non_sp_fallback_exact(self):
+        """The N-graph (a->c, a->d, b->d) is not series-parallel: the
+        cross-product fallback must still produce the exact front."""
+        stages = _stages(4, seed=4)
+        names = [s.name for s in stages]  # s0..s3 = a, b, c, d
+        dag = JobDAG(stages, [(names[0], names[2]), (names[0], names[3]),
+                              (names[1], names[3])])
+        frontiers = _fake_frontiers(dag, [4, 5, 3, 4], 4)
+        comp = dag.compose_frontiers(frontiers)
+        expect = _brute_force(dag, frontiers)
+        np.testing.assert_allclose(_canon(comp.F), _canon(expect),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_non_sp_combo_guard(self):
+        stages = _stages(4, seed=4)
+        names = [s.name for s in stages]
+        dag = JobDAG(stages, [(names[0], names[2]), (names[0], names[3]),
+                              (names[1], names[3])])
+        frontiers = _fake_frontiers(dag, [4, 5, 3, 4], 4)
+        with pytest.raises(ValueError, match="max_combos"):
+            dag.compose_frontiers(frontiers, max_combos=10)
+
+    def test_compose_operator_semantics(self):
+        """critical_path takes the longest path; sum totals every stage;
+        max peaks — checked on a hand-computable diamond."""
+        stages = _stages(4, seed=5)
+        dag = JobDAG(stages, [("s0", "s1"), ("s0", "s2"), ("s1", "s3"),
+                              ("s2", "s3")],
+                     compose=("critical_path", "sum"))
+        vals = {
+            "s0": np.array([[1.0, 10.0]]),
+            "s1": np.array([[2.0, 20.0]]),
+            "s2": np.array([[5.0, 30.0]]),
+            "s3": np.array([[1.0, 40.0]]),
+        }
+        out = dag.evaluate({n: v[0] for n, v in vals.items()})
+        # longest path: s0 -> s2 -> s3 = 1 + 5 + 1; cost: sum = 100
+        np.testing.assert_allclose(out, [7.0, 100.0])
+        dag_max = JobDAG(stages, dag.edges, compose=("max", "sum"))
+        out = dag_max.evaluate({n: v[0] for n, v in vals.items()})
+        np.testing.assert_allclose(out, [5.0, 100.0])
+
+
+class TestComposeKernel:
+    @pytest.mark.parametrize("shape", [(7, 5, 2), (130, 200, 3), (1, 1, 2)])
+    def test_kernel_matches_ref(self, shape):
+        """The Pallas pairwise-composition kernel must equal the jnp
+        oracle exactly (same order, same values) including padding."""
+        import jax.numpy as jnp
+
+        from repro.kernels.compose import pairwise_compose_blocked
+        from repro.kernels.ref import pairwise_compose
+
+        N, M, k = shape
+        rng = np.random.default_rng(N * M)
+        A = rng.normal(size=(N, k)).astype(np.float32)
+        B = rng.normal(size=(M, k)).astype(np.float32)
+        mask = rng.integers(0, 2, k).astype(bool)
+        ref = np.asarray(pairwise_compose(
+            jnp.asarray(A), jnp.asarray(B), jnp.asarray(mask)))
+        ker = np.asarray(pairwise_compose_blocked(A, B, mask,
+                                                  interpret=True))
+        np.testing.assert_array_equal(ref, ker)
+
+    def test_composition_via_kernel_path(self):
+        """compose_frontiers(use_kernel=True) routes the pairwise compose
+        AND the Pareto re-filter through the Pallas kernels and agrees
+        with the reference path."""
+        stages = _stages(3, seed=6)
+        dag = JobDAG(stages, [("s0", "s2"), ("s1", "s2")])
+        frontiers = _fake_frontiers(dag, [5, 6, 4], 6)
+        a = dag.compose_frontiers(frontiers, use_kernel=False)
+        b = dag.compose_frontiers(frontiers, use_kernel=True,
+                                  kernel_interpret=True)
+        np.testing.assert_allclose(_canon(a.F), _canon(b.F),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSolveDag:
+    def test_solve_dedupe_and_consistency(self):
+        """Duplicate stages solve once; every composed point recomposes to
+        its per-stage model values through the DAG operators."""
+        fam = make_analytics_family()
+        rng = np.random.default_rng(7)
+        s0 = fam.stage("s0", rng.uniform(0.5, 3.0, 4))
+        s1 = fam.stage("s1", rng.uniform(0.5, 3.0, 4))
+        s2 = fam.stage("s2", np.asarray(s0.theta))  # recurring sub-task
+        dag = JobDAG([s0, s1, s2], [("s0", "s1"), ("s1", "s2")])
+        res = solve_dag(dag, n_probes_per_stage=8, mogd=MOGD,
+                        batch_rects=2)
+        assert res.unique_stages == 2  # s2 deduped onto s0
+        assert len(res.frontier) > 0
+        # the family path batches all stages: one dispatch per round
+        assert res.dispatches <= 4
+        i = int(np.argmin(res.frontier.F[:, 0]))
+        per = {
+            n: np.asarray(as_problem(dag.stage(n).task).evaluate_batch(
+                res.frontier.X[i][dag.slices[n]][None]))[0]
+            for n in dag.stage_names
+        }
+        np.testing.assert_allclose(dag.evaluate(per), res.frontier.F[i],
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_family_single_dispatch_per_round(self):
+        """All stages of a family share ONE FamilySolver jit: its dispatch
+        count equals the coalesced rounds plus per-stage init solves, not
+        stages x rounds."""
+        fam = make_analytics_family()
+        stages = _stages(3, seed=8, fam=fam)
+        dag = JobDAG(stages, [("s0", "s1"), ("s0", "s2")])
+        res = solve_dag(dag, n_probes_per_stage=8, mogd=MOGD,
+                        batch_rects=2)
+        # 3 unique stages x >=2 probe rounds would be >=6 dispatches if
+        # probing looped per stage; coalesced it is one per round
+        assert res.dispatches <= 3
+        assert res.probes >= 3 * 8
+
+    def test_mixed_family_and_plain_stages(self):
+        """Non-family stages (hand-built TaskSpecs) coexist with family
+        stages in one DAG solve."""
+        from repro.core import sphere2_task
+
+        fam = make_analytics_family()
+        rng = np.random.default_rng(9)
+        s0 = fam.stage("s0", rng.uniform(0.5, 3.0, 4))
+        plain = sphere2_task(d=3)
+        # align objective names with the family's (latency, cost)
+        import dataclasses as dc
+
+        plain = dc.replace(plain, objectives=("latency", "cost"))
+        s1 = StageSpec("s1", plain)
+        dag = JobDAG([s0, s1], [("s0", "s1")])
+        res = solve_dag(dag, n_probes_per_stage=6, mogd=MOGD,
+                        batch_rects=2)
+        assert len(res.frontier) > 0
+        assert res.unique_stages == 2
+
+
+class TestServiceDag:
+    def test_dag_session_lifecycle(self):
+        from repro.service import MOOService
+
+        fam = make_analytics_family()
+        rng = np.random.default_rng(10)
+        stages = [fam.stage(f"s{i}", rng.uniform(0.5, 3.0, 4))
+                  for i in range(2)]
+        stages.append(fam.stage("s2", np.asarray(stages[0].theta)))
+        dag = JobDAG(stages, [("s0", "s1"), ("s1", "s2")])
+        svc = MOOService(mogd=MOGD, batch_rects=2)
+        did = svc.create_dag_session(dag)
+        st = svc.stats()
+        assert st["dag_sessions"] == 1
+        assert st["sessions"] == 2  # s2 shares s0's signature
+        with pytest.raises(RuntimeError, match="probe first"):
+            svc.recommend_dag(did)
+        svc.run_until(min_probes=8)
+        comp = svc.dag_frontier(did)
+        assert len(comp) > 0
+        rec = svc.recommend_dag(did)
+        assert sorted(rec.stage_configs) == ["s0", "s1", "s2"]
+        assert set(rec.stage_configs["s0"]) == {"parallelism", "mem_frac"}
+        assert rec.objectives.shape == (2,)
+        svc.close_dag_session(did)
+        st = svc.stats()
+        assert st["sessions"] == 0 and st["dag_sessions"] == 0
+
+    def test_dag_probes_coalesce_with_other_tenants(self):
+        """A DAG's stage sessions enter the existing cross-session
+        batches: an equal-signature standalone session shares the same
+        coalesced dispatch group."""
+        from repro.service import MOOService
+
+        fam = make_analytics_family()
+        theta = (1.0, 0.5, 0.7, 0.9)
+        dag = JobDAG([fam.stage("s0", theta)])
+        svc = MOOService(mogd=MOGD, batch_rects=2)
+        svc.create_dag_session(dag)
+        svc.create_session(fam.stage("other", theta).task)  # same content
+        assert svc.stats()["problem_cache_hits"] == 1
+        svc.step_all(rounds=1)
+        st = svc.stats()
+        # both sessions' probes landed in ONE shared dispatch
+        assert st["coalesced_batches"] == 1
+
+
+class TestPlannerDag:
+    def test_plan_job_accepts_dag(self):
+        from repro.planner import JobPlanRecommendation, plan_job
+
+        fam = make_analytics_family()
+        rng = np.random.default_rng(11)
+        stages = [fam.stage(f"s{i}", rng.uniform(0.5, 3.0, 4))
+                  for i in range(3)]
+        dag = JobDAG(stages, [("s0", "s1"), ("s0", "s2")])
+        rec = plan_job(dag, n_probes=8, mogd=MOGD)
+        assert isinstance(rec, JobPlanRecommendation)
+        assert sorted(rec.stage_configs) == ["s0", "s1", "s2"]
+        assert rec.frontier_F.shape[1] == 2
+        assert rec.frontier_X.shape[1] == dag.dim
+        # the recommendation is one of the frontier points
+        assert any(np.allclose(rec.objectives, f) for f in rec.frontier_F)
+
+
+class TestValidationAndSignatures:
+    def test_cycle_rejected(self):
+        stages = _stages(2)
+        with pytest.raises(ValueError, match="cycle"):
+            JobDAG(stages, [("s0", "s1"), ("s1", "s0")])
+
+    def test_unknown_edge_rejected(self):
+        with pytest.raises(ValueError, match="unknown"):
+            JobDAG(_stages(2), [("s0", "nope")])
+
+    def test_mismatched_objectives_rejected(self):
+        from repro.core import sphere2_task
+
+        fam = make_analytics_family()
+        s0 = fam.stage("s0", (1.0, 0.5, 0.7, 0.9))
+        s1 = StageSpec("s1", sphere2_task(d=3))  # objectives f1/f2
+        with pytest.raises(ValueError, match="aligned objectives"):
+            JobDAG([s0, s1], [("s0", "s1")])
+
+    def test_bad_compose_op_rejected(self):
+        with pytest.raises(ValueError, match="unknown compose"):
+            JobDAG(_stages(2), compose=("critical_path", "median"))
+
+    def test_flatten_matches_evaluate(self):
+        """The flattened single-space model equals per-stage evaluation
+        composed through the DAG operators."""
+        stages = _stages(3, seed=12)
+        dag = JobDAG(stages, [("s0", "s1"), ("s1", "s2")])
+        flat = as_problem(dag.flatten())
+        rng = np.random.default_rng(12)
+        x = rng.uniform(0, 1, dag.dim)
+        got = np.asarray(flat.evaluate_batch(x[None]))[0]
+        per = {
+            n: np.asarray(as_problem(dag.stage(n).task).evaluate_batch(
+                x[dag.slices[n]][None]))[0]
+            for n in dag.stage_names
+        }
+        np.testing.assert_allclose(got, dag.evaluate(per), rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_signature_content_addressed(self):
+        """Rebuilt (fresh-closure) equal jobs hash equal; changing a
+        theta, an edge, or a compose op changes the signature."""
+        fam = make_analytics_family()
+
+        def build(theta0=1.0, edge=("s0", "s1"), compose=None):
+            s0 = fam.stage("s0", (theta0, 0.5, 0.7, 0.9))
+            s1 = fam.stage("s1", (2.0, 0.4, 0.2, 1.1))
+            return JobDAG([s0, s1], [edge], compose=compose)
+
+        assert build().signature() == build().signature()
+        assert build().signature() != build(theta0=1.5).signature()
+        assert build().signature() != build(
+            edge=("s1", "s0")).signature()
+        assert build().signature() != build(
+            compose=("sum", "sum")).signature()
+
+    def test_stage_solver_reuse_across_jobs(self):
+        """Per-stage content signatures reuse compiled problems across
+        separately-built recurring jobs (the compile cache is keyed by
+        stage content, not job identity)."""
+        fam = make_analytics_family()
+        theta = (1.3, 0.6, 0.8, 1.0)
+        p1 = as_problem(fam.stage("a", theta).task)
+        p2 = as_problem(fam.stage("b", theta).task)  # fresh closure
+        assert p1 is p2
