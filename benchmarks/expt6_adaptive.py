@@ -1,0 +1,249 @@
+"""Expt 6 — closed-loop adaptive tuning vs a frozen-model baseline.
+
+The model server's claim (DESIGN.md §9, paper §2.3): because per-workload
+models are (re)trained online from observed traces and the MOO layer is
+told when its cached frontiers went stale, the system *adapts* — this is
+the mechanism behind the paper's 26-49% win over static tuning.
+
+Scenario (a ``runtime/elastic.py``-style event loop): an analytics job
+exposes one genuine latency/cost tradeoff knob plus three tuning knobs
+with a single efficient operating point θ (locality / memory-pressure /
+compression sweet spots).  Mid-stream the true cost surface shifts — θ
+jumps (data distribution change; the serverless auto-scaling use case) —
+so every configuration the old model thought efficient now pays a large
+penalty on BOTH objectives.  Fresh traces stream into the registry each
+step:
+
+* the **adaptive** arm's session watches the registry — drift crosses the
+  rolling watermark, the frontier is invalidated, inline retrains promote
+  new model versions, and the next probe pass warm re-solves PF seeded
+  with the prior frontier;
+* the **frozen** arm keeps probing the original v1 model (static tuning).
+
+Both arms get the same probe budget.  Frontiers are scored on the *true*
+current surface against a ground-truth oracle frontier, with the HV
+reference anchored to the oracle (an arm's out-of-box points count 0):
+``score = HV(true eval of frontier configs) / HV(oracle)``.  Acceptance:
+the adaptive arm recovers >= 90% of its pre-shift score after drift; the
+frozen arm does not; and ``recommend`` latency stays non-blocking
+throughout (training rides the ingest path only).
+
+    PYTHONPATH=src python -m benchmarks.expt6_adaptive
+    PYTHONPATH=src python scripts/run_benchmarks.py --smoke   # CI path
+
+Writes ``results/BENCH_expt6_adaptive.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    MOGDConfig,
+    Objective,
+    TaskSpec,
+    continuous,
+    hypervolume_2d,
+    solve_pf,
+)
+from repro.modelserver import DriftConfig, ModelRegistry, TrainerConfig
+from repro.service import MOOService
+
+from .common import Timer, emit, write_json
+
+MOGD = MOGDConfig(steps=60, multistart=6)
+
+KNOBS = (
+    continuous("scale", 0.0, 1.0),       # the latency-vs-cost tradeoff
+    continuous("locality", 0.0, 1.0),    # three knobs with one efficient
+    continuous("mem_fraction", 0.0, 1.0),  # operating point θ — the part
+    continuous("compress", 0.0, 1.0),    # of the surface that SHIFTS
+)
+THETA_PRE = np.array([0.20, 0.80, 0.30])
+THETA_POST = np.array([0.85, 0.15, 0.70])
+PENALTY = 1.5
+
+
+def true_objectives(X: np.ndarray, theta: np.ndarray) -> np.ndarray:
+    """Ground-truth (latency, cost) surface: the tradeoff knob trades the
+    objectives linearly; mis-tuning the θ knobs penalizes BOTH (spill /
+    poor locality / bad compression hurt latency and billed time alike)."""
+    X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+    pen = PENALTY * np.sum((X[:, 1:] - theta) ** 2, axis=1)
+    lat = 0.3 + X[:, 0] + pen
+    cost = 0.3 + (1.1 - X[:, 0]) + pen
+    return np.stack([lat, cost], axis=1)
+
+
+def oracle_task(theta: np.ndarray) -> TaskSpec:
+    """The modeling-free ground truth as a TaskSpec (scoring only)."""
+    import jax.numpy as jnp
+
+    th = jnp.asarray(theta)
+
+    def model(x):
+        pen = PENALTY * jnp.sum((x[1:] - th) ** 2)
+        return jnp.stack([0.3 + x[0] + pen, 0.3 + (1.1 - x[0]) + pen])
+
+    return TaskSpec(knobs=KNOBS,
+                    objectives=(Objective("latency"), Objective("cost")),
+                    model=model, name="oracle",
+                    model_id=("expt6-oracle", tuple(float(t) for t in theta)))
+
+
+def sample_traces(theta: np.ndarray, n: int, rng, noise: float = 0.02):
+    X = rng.random((n, len(KNOBS)))
+    Y = true_objectives(X, theta)
+    return X, Y * np.exp(rng.normal(0.0, noise, Y.shape))
+
+
+def _scores(theta: np.ndarray, oracle_F: np.ndarray, arms: dict) -> dict:
+    """HV of each arm's true-evaluated frontier configs over the oracle's
+    HV.  The reference point is anchored to the ORACLE frontier alone —
+    an arm whose configs are truly awful falls outside the box and scores
+    ~0 instead of inflating the reference for everyone.  The margin is
+    half the oracle span per objective: surrogate-error-level
+    suboptimality stays inside the box, a stranded operating point
+    (penalty ~``PENALTY``) does not."""
+    span = np.maximum(oracle_F.max(axis=0) - oracle_F.min(axis=0), 1e-9)
+    ref = oracle_F.max(axis=0) + 0.5 * span
+    hv_oracle = max(hypervolume_2d(oracle_F, ref), 1e-12)
+    return {name: float(hypervolume_2d(true_objectives(X, theta), ref)
+                        / hv_oracle)
+            for name, X in arms.items() if len(X)}
+
+
+def _regret(theta: np.ndarray, oracle_F: np.ndarray, x) -> float:
+    """True-surface regret of one recommended config: normalized distance
+    from its true objective values to the nearest oracle-frontier point
+    (0 = the pick is genuinely Pareto-optimal under the real surface)."""
+    f = true_objectives(np.asarray(x)[None], theta)[0]
+    span = np.maximum(oracle_F.max(axis=0) - oracle_F.min(axis=0), 1e-9)
+    return float(np.min(np.linalg.norm((oracle_F - f) / span, axis=1)))
+
+
+def run(quick: bool = True) -> dict:
+    n_warm = 240 if quick else 480
+    probe_budget = 48 if quick else 96
+    n_steps, step_traces = (8, 24) if quick else (10, 48)
+    oracle_probes = 48 if quick else 96
+
+    reg = ModelRegistry(
+        TrainerConfig(hidden=(48, 48), max_epochs=60 if quick else 120,
+                      seed=0),
+        DriftConfig(window=24, min_obs=12, mult=2.5, floor=0.12),
+        trim_on_drift=32,
+        retrain_on_drift=True,
+        retrain_every=24,  # keep improving as new-regime traces accumulate
+    )
+    w = reg.register_workload(
+        ("expt6", "analytics"), KNOBS,
+        (Objective("latency"), Objective("cost")))
+    events: list = []
+    reg.subscribe(events.append)
+    rng = np.random.default_rng(7)
+
+    # -- warmup: train v1 on pre-shift traces, tune both arms -------------
+    X0, Y0 = sample_traces(THETA_PRE, n_warm, rng)
+    reg.observe_batch(w, X0, Y0)
+    with Timer() as t_train0:
+        rep = reg.retrain(w)
+    assert rep.improved, "warmup training must promote v1"
+    v1_error = rep.outcome.candidate_error
+
+    svc = MOOService(mogd=MOGD, batch_rects=4, grid_l=2)
+    sid_adapt = svc.create_workload_session(reg, w)
+    sid_frozen = svc.create_session(reg.task_spec(w))  # static tuning arm
+    with Timer() as t_solve0:
+        svc.run_until(min_probes=probe_budget)
+
+    oracle_pre = solve_pf(oracle_task(THETA_PRE), n_probes=oracle_probes,
+                          mogd=MOGD, batch_rects=4).F
+    pre = _scores(THETA_PRE, oracle_pre, {
+        "adaptive": svc.frontier(sid_adapt)[1],
+        "frozen": svc.frontier(sid_frozen)[1],
+    })
+
+    # -- the shift + streaming event loop ---------------------------------
+    rec_lat, train_walls, drift_step, bump_step = [], [], None, None
+    for step in range(n_steps):
+        Xs, Ys = sample_traces(THETA_POST, step_traces, rng)
+        n_ev = len(events)
+        with Timer() as t_ingest:
+            reg.observe_batch(w, Xs, Ys)  # drift + inline retrain live here
+        for ev in events[n_ev:]:
+            if ev.kind == "drift" and drift_step is None:
+                drift_step = step
+            if ev.kind == "version" and bump_step is None:
+                bump_step = step
+        if any(ev.kind == "version" for ev in events[n_ev:]):
+            train_walls.append(t_ingest.s)
+        # the serving path: recommend latency must never pay for training
+        # or re-solves (stale sessions keep serving the last frontier)
+        t0 = time.perf_counter()
+        svc.recommend(sid_adapt)
+        rec_lat.append(time.perf_counter() - t0)
+        # equal post-shift probe budget for both arms (warm re-solve of the
+        # adaptive arm happens inside run_until, off the recommend path)
+        svc.run_until(min_probes=probe_budget + 8 * (step + 1))
+
+    oracle_post = solve_pf(oracle_task(THETA_POST), n_probes=oracle_probes,
+                           mogd=MOGD, batch_rects=4).F
+    post = _scores(THETA_POST, oracle_post, {
+        "adaptive": svc.frontier(sid_adapt)[1],
+        "frozen": svc.frontier(sid_frozen)[1],
+    })
+    regret_post = {
+        name: _regret(THETA_POST, oracle_post, svc.recommend(sid).x)
+        for name, sid in (("adaptive", sid_adapt), ("frozen", sid_frozen))
+    }
+
+    recovery = {k: post[k] / max(pre[k], 1e-12) for k in post}
+    rec_p95 = float(np.quantile(rec_lat, 0.95))
+    train_max = float(max(train_walls)) if train_walls else 0.0
+    stats = svc.stats()
+    summary = {
+        "theta_pre": THETA_PRE.tolist(),
+        "theta_post": THETA_POST.tolist(),
+        "v1_val_error": float(v1_error),
+        "score_pre": pre,
+        "score_post": post,
+        "recovery": recovery,
+        "regret_post": regret_post,
+        "adaptive_recovered_90pct": bool(recovery["adaptive"] >= 0.90),
+        "frozen_recovered_90pct": bool(recovery["frozen"] >= 0.90),
+        "adaptive_beats_frozen": bool(post["adaptive"] > post["frozen"]),
+        "drift_step": drift_step,
+        "version_bump_step": bump_step,
+        "model_versions": reg.info(w)["version"],
+        "frontier_invalidations": stats["frontier_invalidations"],
+        "warm_resolves": stats["warm_resolves"],
+        "recommend_p95_s": rec_p95,
+        "train_wall_max_s": train_max,
+        "warmup_train_s": float(t_train0.s),
+        "warmup_solve_s": float(t_solve0.s),
+        "recommend_nonblocking": bool(
+            rec_p95 < 0.25 and (not train_walls or train_max > 4 * rec_p95)),
+        "n_steps": n_steps,
+        "probe_budget": probe_budget,
+    }
+    emit([{k: v for k, v in summary.items()
+           if not isinstance(v, (dict, list))}], "expt6_adaptive")
+    write_json("expt6_adaptive", summary, quick=quick)
+    assert summary["adaptive_recovered_90pct"], (
+        f"adaptive arm recovered only {recovery['adaptive']:.3f} "
+        f"of its pre-shift score")
+    assert not summary["frozen_recovered_90pct"], (
+        f"frozen arm also recovered ({recovery['frozen']:.3f}) — the shift "
+        f"did not strand the static model")
+    assert summary["adaptive_beats_frozen"]
+    assert summary["recommend_nonblocking"], (
+        f"recommend p95 {rec_p95:.3f}s is not non-blocking "
+        f"(max train wall {train_max:.3f}s)")
+    return summary
+
+
+if __name__ == "__main__":
+    print({k: v for k, v in run().items()})

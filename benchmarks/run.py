@@ -25,6 +25,7 @@ SUITES = [
     "planner_frontier",  # beyond-paper: plan-space Pareto frontier
     "service_throughput",  # cross-rectangle batching + MOO service rates
     "expt5_multistage",  # composed per-stage vs flattened tuning (DAG)
+    "expt6_adaptive",    # online model server: drift -> warm re-solve
     "kernelbench",       # kernel vs oracle + VMEM accounting
 ]
 

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Deterministic test-file sharding for the CI ``tests-full`` matrix.
+
+The full suite (slow marks included) exceeds 10 minutes single-shot, so
+CI runs it as N parallel chunks.  Shards are whole test files — pytest
+fixtures/module state never split mid-file — assigned greedily by
+estimated runtime: measured CPU wall seconds for the known-heavy modules
+(``WEIGHTS``), file size as the tie-breaking proxy for everything else.
+
+    python scripts/ci_shard.py --chunks 3 --index 1      # chunk 1's files
+    python scripts/ci_shard.py --chunks 3 --list         # full assignment
+
+Greedy longest-processing-time assignment is deterministic for a fixed
+file set: every file lands in exactly one chunk, and CI's N jobs together
+run exactly the files ``pytest tests/`` would.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+TESTS = REPO / "tests"
+
+# Measured single-file wall seconds (CPU, JAX_PLATFORMS=cpu).  Only the
+# files that dominate the suite need entries — anything absent falls back
+# to a size-derived estimate.  Refresh when a module's weight changes
+# materially (--durations=10 output in CI is the source).
+WEIGHTS = {
+    "test_distributed.py": 480,
+    "test_archs.py": 420,
+    "test_pipeline.py": 480,
+    "test_kernels.py": 300,
+    "test_serving_sharded.py": 120,
+    "test_launch.py": 90,
+    "test_modelserver.py": 70,
+    "test_models.py": 60,
+    "test_properties.py": 45,
+    "test_dag.py": 30,
+}
+
+
+def _weight(p: pathlib.Path) -> float:
+    # ~45KB of plain test code runs in roughly a minute on the CI runner;
+    # the constant only matters relative to the measured entries above
+    return WEIGHTS.get(p.name, p.stat().st_size / 1500.0)
+
+
+def shard(chunks: int) -> list[list[pathlib.Path]]:
+    files = sorted(TESTS.glob("test_*.py"))
+    if not files:
+        raise SystemExit(f"no test files under {TESTS}")
+    if chunks < 1:
+        raise SystemExit("--chunks must be >= 1")
+    # LPT: heaviest files first, each onto the currently-lightest chunk;
+    # ties break on chunk index so output is stable across runs
+    order = sorted(files, key=lambda p: (-_weight(p), p.name))
+    loads = [0.0] * chunks
+    out: list[list[pathlib.Path]] = [[] for _ in range(chunks)]
+    for f in order:
+        i = min(range(chunks), key=lambda j: (loads[j], j))
+        out[i].append(f)
+        loads[i] += _weight(f)
+    return [sorted(c) for c in out]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--chunks", type=int, required=True)
+    ap.add_argument("--index", type=int, default=None,
+                    help="print chunk INDEX's files (space-separated)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the full assignment (debugging)")
+    args = ap.parse_args()
+    assignment = shard(args.chunks)
+    if args.list:
+        for i, files in enumerate(assignment):
+            est = sum(_weight(f) for f in files)
+            print(f"chunk {i} (~{est:.0f}s estimated):")
+            for f in files:
+                print(f"  {f.relative_to(REPO)}")
+        return
+    if args.index is None:
+        raise SystemExit("pass --index (or --list)")
+    if not 0 <= args.index < args.chunks:
+        raise SystemExit(f"--index must be in [0, {args.chunks})")
+    files = assignment[args.index]
+    if not files:  # a pytest invocation with no files would run EVERYTHING
+        print("--co", end="")
+        return
+    print(" ".join(str(f.relative_to(REPO)) for f in files))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,7 +26,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 RESULTS = REPO / "results"
 
 # benchmarks with a smoke mode cheap enough for per-PR CI
-DEFAULT = ["service_throughput", "expt5_multistage"]
+DEFAULT = ["service_throughput", "expt5_multistage", "expt6_adaptive"]
 
 
 def validate_artifact(name: str) -> dict:

@@ -294,6 +294,66 @@ class ProgressiveFrontier:
             state.record()
         return self.finalize(state)
 
+    def seed(self, X_seed: np.ndarray,
+             state: PFState | None = None) -> PFState:
+        """Warm-start a (fresh) state from known-good configurations —
+        the incremental re-solve path after a model update (DESIGN.md §9).
+
+        The seeds (typically the *previous* model's Pareto frontier) are
+        re-evaluated under the current objectives, offered to the frontier
+        store, and used to carve the initial rectangle set: each seed
+        point interior to an uncertain rectangle splits it around the
+        achieved point.  A seed is *achievable but not probe-optimal*, so
+        unlike a middle-point probe only the dominated corner ``[f, n]``
+        is discarded (sound for ANY achievable point — everything there
+        is dominated by the seed itself); the dominating corner
+        ``[u, f]``, where a better new-model frontier may live, is kept
+        uncertain (Prop. 3.4 would discard it only for an optimal probe).
+        The queue thus starts refined around the old frontier — minus
+        only provably-decided space — instead of as one maximal box, and
+        a seed that the new model maps outside the objective box (or that
+        its constraints reject) degrades gracefully to a plain store
+        offer.
+        """
+        if state is None:
+            state = self.initialize()
+        X_seed = np.asarray(X_seed, dtype=np.float64)
+        if X_seed.size == 0:
+            return state
+        t0 = time.perf_counter()
+        F = np.asarray(self.problem.evaluate_batch(X_seed),
+                       dtype=np.float64)
+        lo, hi = state.utopia, state.nadir
+        inside = np.all((F > lo) & (F < hi), axis=1)
+        # Offer the seeds at their TRUE re-evaluated values: clamping into
+        # the box would fabricate objective values and let a point that
+        # violates a declared value cap slip past the store's feasibility
+        # check.  Out-of-box seeds just participate in (and usually lose)
+        # the dominance pass; only verified-interior seeds carve the queue.
+        state.store.add(F, X_seed)
+        # Carve: utopia-nearest seeds first (they discard the most volume).
+        span = np.maximum(hi - lo, 1e-12)
+        order = np.argsort(((F - lo) / span).sum(axis=1))
+        rects: list[Rectangle] = []
+        while len(state.queue):
+            rects.append(state.queue.pop())
+        for f in F[order][inside[order]]:
+            for i, r in enumerate(rects):
+                if np.all(f > r.utopia) and np.all(f < r.nadir):
+                    rects.pop(i)
+                    rects.extend(split_rectangle(r.utopia, f, r.nadir))
+                    # keep the dominating corner: the seed is not an
+                    # optimal probe, so [u, f] may still hold the front
+                    dom = make_rectangle(r.utopia, f)
+                    if dom.volume > 0.0:
+                        rects.append(dom)
+                    break
+        for r in rects:
+            state.queue.push(r)
+        state.elapsed += time.perf_counter() - t0
+        state.record()
+        return state
+
     def finalize(self, state: PFState) -> PFResult:
         """Alg. 1 line 25 is already maintained incrementally per probe —
         reading the live frontier replaces the seed's O(N²) re-filter."""

@@ -20,7 +20,17 @@ import numpy as np
 from repro.core.problem import SpaceEncoder
 from repro.planner.space import plan_space
 
+# Default artifact root, resolved per call (NOT at import): it is relative
+# to the *current* working directory, so callers that need a stable or
+# sandboxed location (tests, the model-server ingest path) pass an explicit
+# ``directory=`` instead of relying on where the process was launched.
 DRYRUN_DIR = pathlib.Path("results/dryrun")
+
+
+def _resolve_root(directory) -> pathlib.Path:
+    """Explicit root argument threading: ``None`` keeps the historical
+    cwd-relative default; anything else (str/Path) is used as-is."""
+    return DRYRUN_DIR if directory is None else pathlib.Path(directory)
 
 _CANON = {
     "num_chips": {"16x16": 256, "2x16x16": 512},
@@ -45,9 +55,11 @@ def _plan_to_knobs(rec: dict) -> dict:
     }
 
 
-def harvest(arch: str, shape: str, directory=DRYRUN_DIR):
+def harvest(arch: str, shape: str, directory=None):
     """Rows for one (arch, shape): (X encoded (n, D), Y (n, 3) seconds
-    [compute, memory, collective], tags)."""
+    [compute, memory, collective], tags).  ``directory`` overrides the
+    cwd-relative artifact root (``None`` -> ``DRYRUN_DIR``)."""
+    directory = _resolve_root(directory)
     enc = SpaceEncoder(plan_space())
     X, Y, tags = [], [], []
     for p in sorted(directory.glob(f"{arch}__{shape}__*.json")):
@@ -60,8 +72,10 @@ def harvest(arch: str, shape: str, directory=DRYRUN_DIR):
     return np.asarray(X), np.asarray(Y), tags
 
 
-def harvest_all(directory=DRYRUN_DIR):
-    """All artifacts as one table keyed by (arch, shape)."""
+def harvest_all(directory=None):
+    """All artifacts as one table keyed by (arch, shape); ``directory``
+    as in :func:`harvest`."""
+    directory = _resolve_root(directory)
     out = {}
     for p in sorted(directory.glob("*.json")):
         arch, shape = p.stem.split("__")[:2]

@@ -60,11 +60,17 @@ def fit_mlp(
     hidden: tuple = (128, 128, 128, 128),
     config: TrainConfig = TrainConfig(),
     log_target: bool = False,
+    init_params: list | None = None,
 ) -> MLPRegressor:
     """Fit a standardized MLP regressor on encoded configs -> one objective.
 
     ``log_target=True`` trains on log(y) (latency/cost-style positive
     targets spanning decades) and inverts at prediction time.
+
+    ``init_params`` warm-starts optimization from an existing parameter
+    list (a previous snapshot of the same workload, or a neighboring
+    workload's model — the online model server's retraining path) instead
+    of He-init; layer shapes must match ``hidden``.
     """
     X = np.asarray(X, dtype=np.float32)
     y = np.asarray(y, dtype=np.float32).reshape(-1, 1)
@@ -84,7 +90,18 @@ def fit_mlp(
                    dropout=config.dropout)
     key = jax.random.PRNGKey(config.seed)
     key, init_key = jax.random.split(key)
-    params = init_mlp(init_key, spec)
+    if init_params is None:
+        params = init_mlp(init_key, spec)
+    else:
+        params = [{"w": jnp.asarray(l["w"]), "b": jnp.asarray(l["b"])}
+                  for l in init_params]
+        dims = spec.layer_dims
+        expect = [(dims[i], dims[i + 1]) for i in range(len(dims) - 1)]
+        got = [tuple(np.shape(l["w"])) for l in params]
+        if got != expect:
+            raise ValueError(
+                f"init_params layer shapes {got} do not match the requested "
+                f"architecture {expect}")
     opt = _adam_init(params)
 
     @jax.jit

@@ -21,7 +21,6 @@ from .moo_service import (
     MOOService,
     Recommendation,
     SessionInfo,
-    problem_signature,
 )
 
 __all__ = [
@@ -35,5 +34,4 @@ __all__ = [
     "UtopiaNearest",
     "WeightedUtopiaNearest",
     "WorkloadAware",
-    "problem_signature",
 ]

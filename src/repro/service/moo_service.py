@@ -42,26 +42,6 @@ from repro.core.progressive_frontier import PFResult, PFState, coalesce_step
 from repro.core.task import Preference, TaskSpec, preference_from_legacy
 
 
-def problem_signature(problem: MOOProblem) -> tuple:
-    """Legacy signature for raw MOOProblem *instances* (deprecated path).
-
-    Sessions opened through :meth:`MOOService.create_session` use the
-    content-derived ``TaskSpec.signature()`` instead — structurally-equal
-    specs (e.g. a recurring job re-submitted with fresh closures) hash
-    equal and reuse one compiled solver.  This id()-based fallback only
-    identifies a problem *object*, so it is used solely by the deprecated
-    ``open_session(problem)`` shim when no explicit signature is given."""
-    sig = getattr(problem, "signature", None)
-    if sig is not None:  # problem came from TaskSpec.compile()
-        return (sig,)
-    return (
-        tuple(problem.specs),
-        problem.k,
-        tuple(problem.names),
-        id(problem.objectives),
-    )
-
-
 @dataclasses.dataclass
 class Recommendation:
     """One configuration picked from a session's live frontier (§5)."""
@@ -86,6 +66,8 @@ class SessionInfo:
     uncertain_fraction: float
     exhausted: bool  # queue empty — frontier is final
     elapsed_s: float
+    workload: str | None = None  # registry workload sig being watched
+    stale: bool = False  # invalidated; warm re-solve pending
 
 
 @dataclasses.dataclass
@@ -118,9 +100,15 @@ class _Session:
     signature: tuple
     engine: ProgressiveFrontier
     solver_key: tuple  # (signature, mogd) entry in the service solver cache
-    auto_signature: bool  # derived from the instance (not a recurring job)
-    spec: TaskSpec | None = None  # present for create_session() sessions
+    spec: TaskSpec
     state: PFState | None = None
+    # model-server subscription (None for plain sessions): on a version
+    # bump or drift event for ``workload`` the session is marked stale and
+    # warm re-solved from ``registry.task_spec(workload)`` at the next
+    # probe/step — never on the recommend path.
+    registry: object | None = None
+    workload: str | None = None
+    stale: bool = False
     created_s: float = dataclasses.field(default_factory=time.perf_counter)
 
 
@@ -157,10 +145,15 @@ class MOOService:
         self._problems: dict[tuple, MOOProblem] = {}
         self._ids = itertools.count()
         self._lock = threading.RLock()
+        # model-server subscriptions: workload sig -> watching session ids
+        self._watch: dict[str, set[str]] = {}
+        self._registries: list = []
         self.solver_cache_hits = 0
         self.problem_cache_hits = 0
         self.coalesced_batches = 0
         self.coalesced_probes = 0
+        self.frontier_invalidations = 0
+        self.warm_resolves = 0
 
     # ------------------------------------------------------------------
     def _solver_for(self, problem: MOOProblem, signature: tuple,
@@ -191,21 +184,26 @@ class MOOService:
         if not isinstance(spec, TaskSpec):
             raise TypeError(
                 f"create_session expects a TaskSpec, got "
-                f"{type(spec).__name__}; legacy MOOProblem callers should "
-                f"use the deprecated open_session()")
+                f"{type(spec).__name__}; wrap raw problems with "
+                f"TaskSpec.from_problem()")
         with self._lock:
             sig = (spec.signature(),)
-            problem = self._problems.pop(sig, None)  # re-insert as newest
-            if problem is None:
-                problem = spec.compile()
-            else:
-                self.problem_cache_hits += 1
-            self._problems[sig] = problem
-            sid = self._open(problem, sig, auto_sig=False, spec=spec,
+            problem = self._compile_cached(spec, sig)
+            sid = self._open(problem, sig, spec=spec,
                              mode=mode, mogd=mogd, grid_l=grid_l,
                              batch_rects=batch_rects, target=target)
             self._evict_cold_tasks()  # after _open: new session counts live
             return sid
+
+    def _compile_cached(self, spec: TaskSpec, sig: tuple) -> MOOProblem:
+        """Signature-keyed compile-or-reuse (LRU re-insertion on hit)."""
+        problem = self._problems.pop(sig, None)  # re-insert as newest
+        if problem is None:
+            problem = spec.compile()
+        else:
+            self.problem_cache_hits += 1
+        self._problems[sig] = problem
+        return problem
 
     def _evict_cold_tasks(self) -> None:
         """Keep at most ``max_cached_tasks`` warm problems: recurring jobs
@@ -234,6 +232,8 @@ class MOOService:
         grid_l: int | None = None,
         batch_rects: int | None = None,
         target: int = 0,
+        registry=None,
+        workloads: dict | None = None,
     ) -> str:
         """Register a multi-stage job: one child session per *distinct*
         stage signature (a job repeating a recurring sub-task tunes it
@@ -241,11 +241,25 @@ class MOOService:
         ``step_all``/``run_until`` batch a DAG's stage probes — and any
         other tenant's equal-signature probes — into shared MOGD
         dispatches.  Compose/recommend with :meth:`dag_frontier` /
-        :meth:`recommend_dag`."""
+        :meth:`recommend_dag`.
+
+        ``workloads`` maps stage names to ModelRegistry workload
+        signatures: those stages' child sessions subscribe to ``registry``
+        and are invalidated (then warm re-solved) on model version bumps
+        or drift, exactly like :meth:`create_workload_session` sessions —
+        a model update to one recurring sub-task refreshes every DAG that
+        contains it."""
         if not isinstance(dag, JobDAG):
             raise TypeError(
                 f"create_dag_session expects a JobDAG, got "
                 f"{type(dag).__name__}")
+        workloads = workloads or {}
+        if workloads and registry is None:
+            raise ValueError("stage workloads require a registry")
+        unknown = set(workloads) - set(dag.stage_names)
+        if unknown:
+            raise ValueError(
+                f"workloads name unknown stages {sorted(unknown)}")
         with self._lock:
             by_sig: dict[str, str] = {}
             stage_sids: dict[str, str] = {}
@@ -258,6 +272,8 @@ class MOOService:
                             grid_l=grid_l, batch_rects=batch_rects,
                             target=target)
                     stage_sids[stage.name] = by_sig[sig]
+                for name, wsig in workloads.items():
+                    self.watch_workload(stage_sids[name], registry, wsig)
             except Exception:
                 # a failing stage must not leak the siblings already
                 # registered — the caller has no dag_id to close them with
@@ -334,77 +350,214 @@ class MOOService:
         )
 
     # ------------------------------------------------------------------
-    def open_session(
+    def _open(self, problem: MOOProblem, sig: tuple, spec: TaskSpec,
+              mode, mogd, grid_l, batch_rects, target: int) -> str:
+        with self._lock:
+            if len(self._sessions) >= self.max_sessions:
+                raise RuntimeError(
+                    f"session limit reached ({self.max_sessions})")
+            mogd = mogd if mogd is not None else self.default_mogd
+            engine = self._build_engine(
+                problem, sig, mogd,
+                mode=mode if mode is not None else self.default_mode,
+                grid_l=grid_l if grid_l is not None else self.default_grid_l,
+                batch_rects=(batch_rects if batch_rects is not None
+                             else self.default_batch_rects),
+                target=target)
+            sid = f"sess-{next(self._ids)}"
+            self._sessions[sid] = _Session(sid, problem, sig, engine,
+                                           solver_key=(sig, mogd),
+                                           spec=spec)
+            return sid
+
+    def _build_engine(self, problem: MOOProblem, sig: tuple,
+                      mogd: MOGDConfig, mode: str, grid_l: int,
+                      batch_rects: int, target: int) -> ProgressiveFrontier:
+        return ProgressiveFrontier(
+            problem,
+            mode=mode,
+            mogd=mogd,
+            grid_l=grid_l,
+            batch_rects=batch_rects,
+            target=target,
+            solver=self._solver_for(problem, sig, mogd),
+            use_kernel=self.use_kernel,
+            kernel_interpret=self.kernel_interpret,
+        )
+
+    def close_session(self, session_id: str) -> None:
+        with self._lock:
+            sess = self._sessions.pop(session_id, None)
+            if sess is None:
+                return
+            # content signatures are recurring jobs: compiled problems and
+            # solvers stay warm for the next submission (bounded by
+            # _evict_cold_tasks)
+            self._unwatch(sess)
+
+    def _unwatch(self, sess: _Session) -> None:
+        """Drop a session from its workload's watch set (lock held)."""
+        if sess.workload is None:
+            return
+        watchers = self._watch.get(sess.workload)
+        if watchers is not None:
+            watchers.discard(sess.session_id)
+            if not watchers:
+                self._watch.pop(sess.workload, None)
+
+    # ------------------------------------------------------------------
+    # Model-server integration (DESIGN.md §9): sessions subscribe to a
+    # ModelRegistry; a version bump or drift event invalidates the
+    # signature-keyed caches of every watching session and schedules a
+    # warm re-solve (seeded from the prior frontier) at the next probe —
+    # never on the recommend path, which keeps serving the last frontier.
+    # ------------------------------------------------------------------
+    def attach_registry(self, registry) -> None:
+        """Subscribe this service to a ModelRegistry's invalidation
+        events (idempotent)."""
+        with self._lock:
+            if registry in self._registries:
+                return
+            self._registries.append(registry)
+        registry.subscribe(self._on_model_event)
+
+    def create_workload_session(
         self,
-        problem: MOOProblem,
-        signature: tuple | str | None = None,
+        registry,
+        workload: str,
+        preference: Preference | None = None,
         mode: str | None = None,
         mogd: MOGDConfig | None = None,
         grid_l: int | None = None,
         batch_rects: int | None = None,
         target: int = 0,
     ) -> str:
-        """Deprecated shim: register a session for a raw MOOProblem.
-
-        Prefer :meth:`create_session` with a :class:`TaskSpec` — it derives
-        a stable content signature instead of relying on an explicit one
-        (or the id()-based instance fallback used here)."""
-        if isinstance(problem, TaskSpec):
-            warnings.warn(
-                "open_session(TaskSpec) is deprecated; use create_session()",
-                DeprecationWarning, stacklevel=2)
-            return self.create_session(problem, mode=mode, mogd=mogd,
-                                       grid_l=grid_l,
-                                       batch_rects=batch_rects, target=target)
+        """Register a tuning session whose objective model is served by a
+        :class:`~repro.modelserver.ModelRegistry` workload.  The session
+        tracks the registry: model version bumps and drift events
+        invalidate its frontier and trigger a warm incremental re-solve."""
+        self.attach_registry(registry)
+        spec = registry.task_spec(workload, preference=preference)
         with self._lock:
-            auto_sig = signature is None
-            sig = problem_signature(problem) if auto_sig else signature
-            if isinstance(sig, str):
-                sig = (sig,)
-            return self._open(problem, sig, auto_sig=auto_sig, spec=None,
-                              mode=mode, mogd=mogd, grid_l=grid_l,
-                              batch_rects=batch_rects, target=target)
-
-    def _open(self, problem: MOOProblem, sig: tuple, auto_sig: bool,
-              spec: TaskSpec | None, mode, mogd, grid_l, batch_rects,
-              target: int) -> str:
-        with self._lock:
-            if len(self._sessions) >= self.max_sessions:
-                raise RuntimeError(
-                    f"session limit reached ({self.max_sessions})")
-            mogd = mogd if mogd is not None else self.default_mogd
-            engine = ProgressiveFrontier(
-                problem,
-                mode=mode if mode is not None else self.default_mode,
-                mogd=mogd,
-                grid_l=grid_l if grid_l is not None else self.default_grid_l,
-                batch_rects=(batch_rects if batch_rects is not None
-                             else self.default_batch_rects),
-                target=target,
-                solver=self._solver_for(problem, sig, mogd),
-                use_kernel=self.use_kernel,
-                kernel_interpret=self.kernel_interpret,
-            )
-            sid = f"sess-{next(self._ids)}"
-            self._sessions[sid] = _Session(sid, problem, sig, engine,
-                                           solver_key=(sig, mogd),
-                                           auto_signature=auto_sig,
-                                           spec=spec)
+            sid = self.create_session(spec, mode=mode, mogd=mogd,
+                                      grid_l=grid_l, batch_rects=batch_rects,
+                                      target=target)
+            sess = self._sessions[sid]
+            sess.registry = registry
+            sess.workload = workload
+            self._watch.setdefault(workload, set()).add(sid)
+            self._recheck_watched(sess)
             return sid
 
-    def close_session(self, session_id: str) -> None:
+    def watch_workload(self, session_id: str, registry,
+                       workload: str) -> None:
+        """Subscribe an existing session (e.g. a DAG stage child) to a
+        registry workload's invalidation events."""
+        self.attach_registry(registry)
         with self._lock:
-            sess = self._sessions.pop(session_id, None)
-            if sess is None or not sess.auto_signature:
-                # explicit signatures are recurring jobs: their compiled
-                # solvers stay warm for the next submission
-                return
-            # instance-bound signatures can never be hit again once their
-            # last session closes — evict so the cache cannot leak solvers
-            still_used = any(s.solver_key == sess.solver_key
-                             for s in self._sessions.values())
-            if not still_used:
+            sess = self._get(session_id)
+            if sess.workload != workload:
+                self._unwatch(sess)  # rebinding must not leave the old
+                # workload's events able to poison this session
+            sess.registry = registry
+            sess.workload = workload
+            self._watch.setdefault(workload, set()).add(session_id)
+            self._recheck_watched(sess)
+
+    def _recheck_watched(self, sess: _Session) -> None:
+        """Close the subscribe->watch race: a version promoted between
+        fetching the spec and registering the watch set emitted its event
+        before this session was listening — compare against the
+        registry's CURRENT spec and invalidate if we already missed one.
+        Under the service lock."""
+        current = (self._registry_spec_for(sess).signature(),)
+        if current != sess.signature and not sess.stale:
+            sess.stale = True
+            self.frontier_invalidations += 1
+            self._problems.pop(sess.signature, None)
+            self._solvers.pop(sess.solver_key, None)
+
+    def _registry_spec_for(self, sess: _Session) -> TaskSpec:
+        """The spec a watched session would rebuild against right now:
+        the registry's active snapshot, with the session's own objective
+        declarations (bounds/alphas) and preference preserved."""
+        spec = sess.registry.task_spec(
+            sess.workload, preference=sess.spec.preference)
+        if spec.objectives != sess.spec.objectives:
+            # the session's author may have declared tighter bounds /
+            # alphas than the registry record (e.g. a DAG stage with a
+            # latency cap): a model refresh must not drop them
+            try:
+                spec = dataclasses.replace(
+                    spec, objectives=sess.spec.objectives)
+            except ValueError:
+                # the new backend can't honor the alphas (no predictive
+                # stds): keep the alpha-independent declarations — the
+                # author's HARD bounds must survive a model refresh
+                warnings.warn(
+                    f"session {sess.session_id}: model refresh dropped "
+                    f"uncertainty alphas (new snapshot has no predictive "
+                    f"stds); hard bounds preserved", RuntimeWarning,
+                    stacklevel=2)
+                stripped = tuple(
+                    dataclasses.replace(o, alpha=0.0)
+                    for o in sess.spec.objectives)
+                spec = dataclasses.replace(spec, objectives=stripped)
+        return spec
+
+    def _on_model_event(self, event) -> None:
+        """Registry callback: invalidate every watching session."""
+        with self._lock:
+            for sid in self._watch.get(event.workload, ()):
+                sess = self._sessions.get(sid)
+                if sess is None or sess.stale:
+                    continue
+                sess.stale = True
+                self.frontier_invalidations += 1
+                # drop the signature-keyed caches for the outdated model:
+                # the next compile under this signature must not resurrect
+                # a frontier/solver built against stale predictions
+                self._problems.pop(sess.signature, None)
                 self._solvers.pop(sess.solver_key, None)
+
+    def _refresh_stale_locked(self) -> None:
+        """Warm re-solve every stale session whose registry now serves a
+        different model version.  Runs on the probe/step path (under the
+        service lock), so recommend() latency never pays for it; the old
+        frontier keeps serving until the rebuilt one overtakes it."""
+        for sess in self._sessions.values():
+            if not sess.stale or sess.registry is None:
+                continue
+            spec = self._registry_spec_for(sess)
+            sig = (spec.signature(),)
+            if sig == sess.signature:
+                # drift flagged but no promoted retrain yet: nothing newer
+                # to rebuild against — stay stale, keep serving
+                continue
+            old_X = None
+            if sess.state is not None and sess.state.store.n_points:
+                _, old_X = sess.state.store.frontier()
+            problem = self._compile_cached(spec, sig)
+            mogd = sess.solver_key[1]
+            engine = self._build_engine(
+                problem, sig, mogd, mode=sess.engine.mode,
+                grid_l=sess.engine.grid_l,
+                batch_rects=sess.engine.batch_rects,
+                target=sess.engine.target)
+            state = None
+            if old_X is not None and len(old_X):
+                # incremental re-solve: the prior frontier becomes the
+                # initial rectangle set of the new PF state
+                state = engine.seed(old_X)
+            sess.problem = problem
+            sess.signature = sig
+            sess.solver_key = (sig, mogd)
+            sess.spec = spec
+            sess.engine = engine
+            sess.state = state
+            sess.stale = False
+            self.warm_resolves += 1
+            self._evict_cold_tasks()
 
     def __len__(self) -> int:
         return len(self._sessions)
@@ -421,6 +574,7 @@ class MOOService:
         """Advance one session by ``n_probes`` additional probes (resuming
         its PFState) and return the refreshed frontier."""
         with self._lock:
+            self._refresh_stale_locked()
             sess = self._get(session_id)
             res = sess.engine.run(n_probes=n_probes, state=sess.state,
                                   deadline_s=deadline_s)
@@ -435,6 +589,7 @@ class MOOService:
         Returns aggregate stats for the performed rounds."""
         stats = {"rounds": 0, "batches": 0, "probes": 0, "sessions": 0}
         with self._lock:
+            self._refresh_stale_locked()
             for _ in range(rounds):
                 groups: dict[tuple, list[_Session]] = {}
                 singles: list[_Session] = []
@@ -487,6 +642,10 @@ class MOOService:
         """Drive ``step_all`` until every active session has spent at least
         ``min_probes`` probes (or its queue is exhausted)."""
         out = {"rounds": 0, "batches": 0, "probes": 0}
+        with self._lock:
+            # rebuild invalidated sessions first: a freshly re-solved state
+            # restarts its probe budget, so it must count as pending below
+            self._refresh_stale_locked()
         for _ in range(max_rounds):
             pending = [
                 s for s in self._sessions.values()
@@ -569,6 +728,8 @@ class MOOService:
                     1.0 if st is None else st.queue.uncertain_fraction),
                 exhausted=st is not None and not len(st.queue),
                 elapsed_s=0.0 if st is None else st.elapsed,
+                workload=sess.workload,
+                stale=sess.stale,
             )
 
     def stats(self) -> dict:
@@ -582,6 +743,11 @@ class MOOService:
                 "problem_cache_hits": self.problem_cache_hits,
                 "coalesced_batches": self.coalesced_batches,
                 "coalesced_probes": self.coalesced_probes,
+                "watched_workloads": len(self._watch),
+                "stale_sessions": sum(
+                    1 for s in self._sessions.values() if s.stale),
+                "frontier_invalidations": self.frontier_invalidations,
+                "warm_resolves": self.warm_resolves,
                 "total_probes": sum(
                     s.state.probes for s in self._sessions.values()
                     if s.state is not None),

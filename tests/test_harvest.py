@@ -2,11 +2,12 @@
 modeling-engine path)."""
 
 import json
+import pathlib
 
 import numpy as np
 import pytest
 
-from repro.data.harvest import harvest
+from repro.data.harvest import DRYRUN_DIR, _resolve_root, harvest
 
 
 def _fake_artifact(tmp_path, arch, shape, tag, terms, plan=None):
@@ -26,6 +27,17 @@ def _fake_artifact(tmp_path, arch, shape, tag, terms, plan=None):
 
 
 class TestHarvest:
+    def test_root_argument_threading(self, tmp_path):
+        """Explicit roots (str or Path) are honored; the historical
+        cwd-relative default is preserved when omitted."""
+        assert _resolve_root(None) == DRYRUN_DIR
+        assert _resolve_root(str(tmp_path)) == tmp_path
+        assert _resolve_root(tmp_path) == tmp_path
+        assert isinstance(_resolve_root(str(tmp_path)), pathlib.Path)
+        _fake_artifact(tmp_path, "a", "train_4k", "", (1.0, 2.0, 3.0))
+        X, Y, _ = harvest("a", "train_4k", directory=str(tmp_path))
+        assert X.shape[0] == 1  # str roots work end-to-end
+
     def test_rows_and_encoding(self, tmp_path):
         _fake_artifact(tmp_path, "a", "train_4k", "", (1.0, 2.0, 3.0))
         _fake_artifact(tmp_path, "a", "train_4k", "opt", (0.5, 1.0, 1.5),

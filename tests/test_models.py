@@ -87,6 +87,44 @@ class TestGP:
         grad = jax.grad(lambda x: g(x))(jnp.asarray(X[0]))
         assert np.isfinite(np.asarray(grad)).all()
 
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_posterior_variance_nonneg_everywhere_zero_at_train(self, seed):
+        """GP sanity: Var >= 0 at any query (the clipped Cholesky form
+        cannot go negative even far outside the data), and ~0 exactly at
+        the training inputs for a near-noiseless fit."""
+        rng = np.random.default_rng(seed)
+        X = rng.random((40, 3))
+        y = np.sin(4 * X[:, 0]) - 2.0 * X[:, 1] * X[:, 2]
+        g = fit_gp(X, y, noise=1e-8)
+        # queries spanning inside, far outside, and degenerate points
+        Q = np.concatenate([
+            rng.random((64, 3)),
+            rng.random((64, 3)) * 20.0 - 10.0,
+            np.zeros((1, 3)),
+            np.full((1, 3), 1e3),
+            X[:5],
+        ])
+        std = np.asarray(g.predict_std(jnp.asarray(Q)))
+        assert std.shape == (len(Q),)
+        assert np.isfinite(std).all() and (std >= 0.0).all()
+        std_train = np.asarray(g.predict_std(jnp.asarray(X)))
+        y_scale = float(np.std(y))
+        assert std_train.max() < 5e-3 * y_scale
+
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_noiseless_fit_interpolates_targets(self, seed):
+        """Exact-GP sanity: with (near-)zero observation noise the
+        posterior mean interpolates the training targets."""
+        rng = np.random.default_rng(seed)
+        X = rng.random((35, 2))
+        y = np.exp(-X[:, 0]) + 0.5 * X[:, 1] ** 3
+        # 1e-7 is the numerically-safe "noiseless" floor: below it the
+        # float64 Cholesky can lose positive-definiteness on close points
+        g = fit_gp(X, y, noise=1e-7)
+        pred = np.asarray(g(jnp.asarray(X)))
+        scale = max(float(np.abs(y).max()), 1e-12)
+        assert np.abs(pred - y).max() < 1e-3 * scale
+
 
 class TestWorkloads:
     def test_suite_sizes(self):

@@ -1,12 +1,23 @@
 """MOOService: concurrent resumable sessions, coalesced probe batches,
-signature-keyed solver reuse, and §5 recommendation strategies."""
+signature-keyed solver reuse, and §5 recommendation strategies.
+
+All sessions go through the declarative front door —
+``create_session(TaskSpec)`` — whose content-derived signatures replace
+the removed ``open_session`` explicit/instance signatures: two
+structurally-equal specs (fresh closures included) share one compiled
+solver; distinct specs do not."""
 
 import numpy as np
 import pytest
 
 from repro.core import MOGDConfig
-from repro.core.synthetic import make_sphere2, make_zdt1
-from repro.service import MOOService, problem_signature
+from repro.core.synthetic import sphere2_task, zdt1_task
+from repro.core.task import (
+    UtopiaNearest,
+    WeightedUtopiaNearest,
+    WorkloadAware,
+)
+from repro.service import MOOService
 
 FAST = MOGDConfig(steps=60, multistart=6)
 
@@ -18,9 +29,8 @@ def svc():
 
 class TestSessions:
     def test_eight_concurrent_sessions(self, svc):
-        zdt, sph = make_zdt1(), make_sphere2()
-        sids = [svc.open_session(zdt, signature=("zdt1",)) for _ in range(4)]
-        sids += [svc.open_session(sph, signature=("sphere2",)) for _ in range(4)]
+        sids = [svc.create_session(zdt1_task()) for _ in range(4)]
+        sids += [svc.create_session(sphere2_task()) for _ in range(4)]
         assert len(svc) == 8
         out = svc.run_until(min_probes=12)
         assert out["probes"] > 0
@@ -32,10 +42,9 @@ class TestSessions:
             assert info.probes >= 12 or info.exhausted
 
     def test_solver_cache_shared_by_signature(self, svc):
-        zdt = make_zdt1()
-        s1 = svc.open_session(zdt, signature=("job-A",))
-        s2 = svc.open_session(zdt, signature=("job-A",))
-        s3 = svc.open_session(make_sphere2(), signature=("job-B",))
+        s1 = svc.create_session(zdt1_task())
+        s2 = svc.create_session(zdt1_task())  # fresh closures, equal content
+        s3 = svc.create_session(sphere2_task())
         st = svc.stats()
         assert st["compiled_solvers"] == 2
         assert st["solver_cache_hits"] == 1
@@ -45,46 +54,40 @@ class TestSessions:
         assert e1.solver is e2.solver
         assert e1.solver is not e3.solver
 
-    def test_default_signature_derives_from_problem(self):
-        p = make_zdt1()
-        assert problem_signature(p) == problem_signature(p)
-        assert problem_signature(p) != problem_signature(make_zdt1())
+    def test_content_signature_distinguishes_specs(self):
+        assert zdt1_task().signature() == zdt1_task().signature()
+        assert zdt1_task(d=6).signature() != zdt1_task(d=5).signature()
+        assert zdt1_task().signature() != sphere2_task().signature()
 
     def test_session_limit(self):
         svc = MOOService(mogd=FAST, max_sessions=2)
-        p = make_zdt1()
-        svc.open_session(p)
-        svc.open_session(p)
+        svc.create_session(zdt1_task())
+        svc.create_session(zdt1_task())
         with pytest.raises(RuntimeError):
-            svc.open_session(p)
+            svc.create_session(zdt1_task())
 
     def test_close_session(self, svc):
-        sid = svc.open_session(make_zdt1())
+        sid = svc.create_session(zdt1_task())
         assert len(svc) == 1
         svc.close_session(sid)
         assert len(svc) == 0
         with pytest.raises(KeyError):
             svc.frontier(sid)
 
-    def test_auto_signature_solver_evicted_on_close(self, svc):
-        sid = svc.open_session(make_zdt1())  # instance-bound signature
-        assert svc.stats()["compiled_solvers"] == 1
-        svc.close_session(sid)
-        assert svc.stats()["compiled_solvers"] == 0  # cannot leak
-
-    def test_explicit_signature_solver_survives_close(self, svc):
-        sid = svc.open_session(make_zdt1(), signature=("recurring-job",))
+    def test_recurring_solver_survives_close(self, svc):
+        sid = svc.create_session(zdt1_task())
         svc.close_session(sid)
         assert svc.stats()["compiled_solvers"] == 1  # stays warm
-        svc.open_session(make_zdt1(), signature=("recurring-job",))
+        svc.create_session(zdt1_task())  # re-submitted recurring job
         assert svc.stats()["solver_cache_hits"] == 1
+        assert svc.stats()["problem_cache_hits"] == 1
 
     def test_zero_batch_rects_rejected(self, svc):
         with pytest.raises(ValueError):
-            svc.open_session(make_zdt1(), batch_rects=0)
+            svc.create_session(zdt1_task(), batch_rects=0)
 
     def test_failed_dispatch_restores_queue(self, svc, monkeypatch):
-        sid = svc.open_session(make_zdt1(), signature=("boom",))
+        sid = svc.create_session(zdt1_task())
         svc.run_until(min_probes=6)
         sess = svc._sessions[sid]
         vol = sess.state.queue.total_volume
@@ -103,7 +106,7 @@ class TestSessions:
 
 class TestResume:
     def test_resume_returns_superset_frontier(self, svc):
-        sid = svc.open_session(make_zdt1(), signature=("resume",))
+        sid = svc.create_session(zdt1_task())
         r1 = svc.probe(sid, n_probes=8)
         F1 = np.asarray(r1.F)
         r2 = svc.probe(sid, n_probes=16)
@@ -119,7 +122,7 @@ class TestResume:
             assert dom.any()
 
     def test_coalesced_and_per_session_probes_mix(self, svc):
-        sid = svc.open_session(make_zdt1(), signature=("mix",))
+        sid = svc.create_session(zdt1_task())
         svc.run_until(min_probes=8)  # coalesced path
         p1 = svc.session_info(sid).probes
         svc.probe(sid, n_probes=8)  # per-session path resumes same state
@@ -127,26 +130,34 @@ class TestResume:
 
 
 class TestRecommend:
-    def test_strategies(self, svc):
-        sid = svc.open_session(make_zdt1(), signature=("rec",))
+    def test_preferences(self, svc):
+        sid = svc.create_session(zdt1_task())
         svc.probe(sid, n_probes=24)
-        un = svc.recommend(sid, strategy="un")
-        lat = svc.recommend(sid, strategy="wun", weights=(0.9, 0.1))
-        cost = svc.recommend(sid, strategy="wun", weights=(0.1, 0.9))
+        un = svc.recommend(sid, preference=UtopiaNearest())
+        lat = svc.recommend(sid, preference=WeightedUtopiaNearest((0.9, 0.1)))
+        cost = svc.recommend(sid, preference=WeightedUtopiaNearest((0.1, 0.9)))
         assert lat.objectives[0] <= cost.objectives[0] + 1e-9
         assert cost.objectives[1] <= lat.objectives[1] + 1e-9
-        wl = svc.recommend(sid, strategy="workload", weights=(0.5, 0.5),
-                           default_latency_s=500.0)
+        wl = svc.recommend(sid, preference=WorkloadAware(
+            (0.5, 0.5), default_latency_s=500.0))
         assert wl.frontier_size == un.frontier_size
         assert set(un.config) == {f"x{i}" for i in range(6)}
 
+    def test_legacy_strategy_shim_warns(self, svc):
+        sid = svc.create_session(zdt1_task())
+        svc.probe(sid, n_probes=8)
+        with pytest.warns(DeprecationWarning):
+            rec = svc.recommend(sid, strategy="un")
+        assert rec.index == svc.recommend(
+            sid, preference=UtopiaNearest()).index
+
     def test_recommend_before_probe_raises(self, svc):
-        sid = svc.open_session(make_zdt1())
+        sid = svc.create_session(zdt1_task())
         with pytest.raises(RuntimeError):
             svc.recommend(sid)
 
     def test_unknown_strategy_raises(self, svc):
-        sid = svc.open_session(make_zdt1(), signature=("bad",))
+        sid = svc.create_session(zdt1_task())
         svc.probe(sid, n_probes=6)
-        with pytest.raises(ValueError):
+        with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
             svc.recommend(sid, strategy="nope")

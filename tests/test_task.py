@@ -374,8 +374,7 @@ class TestServiceFrontDoor:
         with pytest.raises(TypeError, match="TaskSpec"):
             svc.create_session(as_problem(zdt1_task()))
 
-    def test_open_session_taskspec_deprecation(self):
-        svc = MOOService(mogd=FAST)
-        with pytest.warns(DeprecationWarning):
-            sid = svc.open_session(zdt1_task())
-        assert svc.session_info(sid).session_id == sid
+    def test_no_open_session_shim(self):
+        # the deprecated raw-problem shim is gone; the TaskSpec front door
+        # is the only way in
+        assert not hasattr(MOOService, "open_session")
