@@ -1,6 +1,7 @@
-"""Probe-throughput benchmarks for the array-native frontier engine.
+"""Probe-throughput benchmarks for the array-native frontier engine and
+the unified probe-executor plane.
 
-Two claims from the refactor, measured:
+Three claims from the refactors, measured:
 
 1. **Cross-rectangle batching** (PF-AP with ``batch_rects=B``) lifts probe
    throughput >=2x over the seed single-rectangle path at equal frontier
@@ -10,6 +11,12 @@ Two claims from the refactor, measured:
    shared MOGD batches: aggregate probes/sec across 8 concurrent sessions
    approaches single-session batched throughput, and recurring problem
    signatures skip recompilation entirely.
+3. **Structure-keyed coalescing** (DESIGN.md §10): N tenants over
+   *distinct* workloads sharing one MLP architecture run ``step_all``
+   with <=2 compiled executor structures (vs N per-tenant programs
+   before) and >=2x probes/sec over the per-tenant dispatch baseline at
+   equal (+-0.5%) hypervolume.  The structure-count bound is asserted —
+   this benchmark gates CI bench-smoke.
 
     PYTHONPATH=src python -m benchmarks.run --only service_throughput
 """
@@ -32,6 +39,7 @@ from .common import Timer, emit, write_json
 
 MOGD = MOGDConfig(steps=80, multistart=8)
 HV_REF = np.array([1.5, 1.5])
+N_HETERO = 8  # heterogeneous tenants (acceptance floor: >= 8)
 
 
 def _pf_rate(problem, batch_rects: int, n_probes: int, repeats: int = 3) -> dict:
@@ -59,6 +67,102 @@ def _pf_rate(problem, batch_rects: int, n_probes: int, repeats: int = 3) -> dict
                 "hypervolume": hypervolume_2d(res.F, HV_REF),
             }
     return best
+
+
+def _hetero_specs(n: int, d: int = 3, arch: tuple = (16, 16)) -> list:
+    """n distinct MLP-backed workloads sharing ONE architecture: the
+    multi-tenant mix the executor plane exists for (many workloads, same
+    model family — weights ride as data).  One shared builder
+    (``repro.core.synthetic.mlp_surrogate_task``) keeps this scenario in
+    lockstep with the executor/service tests."""
+    from repro.core.synthetic import mlp_surrogate_task
+
+    return [
+        mlp_surrogate_task(seed=i, d=d, arch=arch, y_offset=0.1 * i,
+                           name=f"hetero-{i}")
+        for i in range(n)
+    ]
+
+
+def _hetero_arm(specs: list, probes: int,
+                structure_coalescing: bool) -> tuple[dict, list]:
+    """One arm of the heterogeneous-tenant comparison.
+
+    ``cold`` times the full tenant-arrival path — create sessions, first
+    ``step_all`` rounds, every compilation the arm needs — which is where
+    per-tenant dispatch pays one XLA program per workload and the
+    executor plane pays one per *structure* (the paper's interactive-
+    speed story).  ``steady`` then times a second equal probe budget with
+    everything warm."""
+    svc = MOOService(mogd=MOGD, batch_rects=4,
+                     structure_coalescing=structure_coalescing)
+    with Timer() as t_cold:
+        sids = [svc.create_session(s) for s in specs]
+        cold = svc.run_until(min_probes=probes)
+    with Timer() as t_steady:
+        steady = svc.run_until(min_probes=2 * probes)
+    st = svc.stats()
+    fronts = [np.asarray(svc.frontier(sid)[0]) for sid in sids]
+    row = {
+        "mode": ("structure" if structure_coalescing else "per-tenant"),
+        "sessions": len(sids),
+        "cold_probes": cold["probes"],
+        "cold_wall_s": t_cold.s,
+        "cold_probes_per_s": cold["probes"] / max(t_cold.s, 1e-9),
+        "steady_probes": steady["probes"],
+        "steady_wall_s": t_steady.s,
+        "steady_probes_per_s": steady["probes"] / max(t_steady.s, 1e-9),
+        "dispatches": st["executor_dispatches"],
+        "structures": st["executor_structures"],
+        "compiles": st["executor_compiles"],
+    }
+    return row, fronts
+
+
+def _hetero_scenario(probes: int) -> dict:
+    specs = _hetero_specs(N_HETERO)
+    unified, fronts_u = _hetero_arm(specs, probes,
+                                    structure_coalescing=True)
+    baseline, fronts_b = _hetero_arm(specs, probes,
+                                     structure_coalescing=False)
+    emit([unified, baseline], "service_hetero")
+    # equal-quality check: per-workload hypervolume against a shared
+    # reference point (both arms probe the same workloads to the same
+    # budget, so the frontiers must match to +-0.5%)
+    hv_u, hv_b = [], []
+    for Fu, Fb in zip(fronts_u, fronts_b):
+        ref = np.maximum(Fu.max(axis=0), Fb.max(axis=0)) + 0.1
+        hv_u.append(hypervolume_2d(Fu, ref))
+        hv_b.append(hypervolume_2d(Fb, ref))
+    hv_ratio = float(sum(hv_u) / max(sum(hv_b), 1e-12))
+    speedup = (unified["cold_probes_per_s"]
+               / max(baseline["cold_probes_per_s"], 1e-9))
+    steady_ratio = (unified["steady_probes_per_s"]
+                    / max(baseline["steady_probes_per_s"], 1e-9))
+    summary = {
+        "tenants": N_HETERO,
+        "speedup_vs_per_tenant": float(speedup),
+        "steady_ratio_vs_per_tenant": float(steady_ratio),
+        "hv_ratio_vs_per_tenant": hv_ratio,
+        "hv_within_half_pct": bool(abs(hv_ratio - 1.0) <= 0.005),
+        "structures_unified": int(unified["structures"]),
+        "structures_per_tenant": int(baseline["structures"]),
+        "compiles_unified": int(unified["compiles"]),
+        "compiles_per_tenant": int(baseline["compiles"]),
+        "dispatches_unified": int(unified["dispatches"]),
+        "dispatches_per_tenant": int(baseline["dispatches"]),
+        "probes_per_s_unified": float(unified["cold_probes_per_s"]),
+        "probes_per_s_per_tenant": float(baseline["cold_probes_per_s"]),
+    }
+    # CI gates (bench-smoke fails the build on regression): N>=8 distinct
+    # workloads, one architecture, must compile <= 2 structures — vs one
+    # per tenant on the old dispatch path — at >=2x tenant-arrival
+    # throughput and unchanged frontier quality.
+    assert summary["structures_unified"] <= 2, summary
+    assert summary["structures_per_tenant"] >= N_HETERO, summary
+    assert summary["hv_within_half_pct"], summary
+    assert summary["speedup_vs_per_tenant"] >= 2.0, summary
+    return summary
 
 
 def run(quick: bool = True) -> dict:
@@ -93,6 +197,9 @@ def run(quick: bool = True) -> dict:
     }
     emit([svc_row], "service_throughput")
 
+    # -- 3. heterogeneous tenants: N distinct workloads, ONE architecture
+    hetero = _hetero_scenario(probes=48 if quick else 128)
+
     summary = {
         "cross_rect_speedup": float(speedup),
         "hv_ratio": float(hv_ratio),
@@ -101,6 +208,7 @@ def run(quick: bool = True) -> dict:
         "service_probes_per_s": float(svc_row["probes_per_s"]),
         "service_sessions": int(st["sessions"]),
         "solver_cache_hits": int(st["solver_cache_hits"]),
+        "hetero": hetero,
     }
     emit([summary], "service_summary")
     write_json("service_throughput", summary, quick=quick)

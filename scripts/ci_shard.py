@@ -34,6 +34,7 @@ WEIGHTS = {
     "test_pipeline.py": 480,
     "test_kernels.py": 300,
     "test_serving_sharded.py": 120,
+    "test_executor.py": 100,
     "test_launch.py": 90,
     "test_modelserver.py": 70,
     "test_models.py": 60,

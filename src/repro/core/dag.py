@@ -53,8 +53,6 @@ from .frontier_store import FrontierStore
 from .mogd import (
     COResult,
     MOGDConfig,
-    _eq4_loss,
-    adam_project_descend,
     single_objective_box,
 )
 from .problem import SpaceEncoder, VariableSpec
@@ -149,24 +147,37 @@ class StageFamily:
 
 
 class FamilySolver:
-    """Batched MOGD over a :class:`StageFamily`: one jit, per-box theta.
+    """Batched MOGD over a :class:`StageFamily`: one compiled program,
+    per-box theta — the original params-as-data path, now a thin frontend
+    over the :class:`~repro.exec.ProbeExecutor`.
 
     ``solve(boxes, thetas, target)`` descends every (box, multistart)
-    problem of *all* stages in one vmapped dispatch — the DAG
-    generalization of the PF-AP cross-rectangle batch (DESIGN.md §8).
-    Stage value bounds are not supported here (stages declaring bounds
-    fall back to their per-stage :class:`~repro.core.mogd.MOGDSolver`).
+    problem of *all* stages in one executor dispatch — the DAG
+    generalization of the PF-AP cross-rectangle batch (DESIGN.md §8/§10).
+    The program structure is the family's model fingerprint, so two
+    FamilySolvers over content-equal families (and any MOGD work sharing
+    that structure) reuse one compiled program.  Stage value bounds are
+    not supported here (stages declaring bounds fall back to their
+    per-stage :class:`~repro.core.mogd.MOGDSolver`).
     """
 
     def __init__(self, family: StageFamily,
-                 config: MOGDConfig = MOGDConfig()):
+                 config: MOGDConfig = MOGDConfig(), executor=None):
         import jax
+
+        from repro.exec import ParamProgram, default_executor
 
         self.family = family
         self.config = config
-        self._solver = None
+        self.executor = executor if executor is not None else default_executor()
         self._key = jax.random.PRNGKey(config.seed)
         self.dispatches = 0
+        model = family.model
+        self._program = ParamProgram(
+            apply=lambda theta, x: model(theta, x),
+            params=None,  # per-box thetas ride in each request
+            structure=("family", family._model_fp, len(family.objectives)),
+        )
 
     def _next_key(self):
         import jax
@@ -174,67 +185,14 @@ class FamilySolver:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def _build(self):
-        import jax
-        import jax.numpy as jnp
-
-        cfg = self.config
-        fam = self.family
-        snap = fam.encoder.snap
-        model = fam.model
-
-        def descend_one(x0, lo, hi, theta, target):
-            def loss_fn(x):
-                return _eq4_loss(model(theta, x), lo, hi, target,
-                                 cfg.penalty, cfg.tie_break_eps)
-
-            return adam_project_descend(loss_fn, x0, cfg)
-
-        def solve_batch(x0s, los, his, thetas, target):
-            """x0s: (B, S, D); los/his: (B, k); thetas: (B, T)."""
-            finals = jax.vmap(
-                lambda x0_s, lo, hi, th: jax.vmap(
-                    lambda x0: descend_one(x0, lo, hi, th, target))(x0_s)
-            )(x0s, los, his, thetas)  # (B, S, D)
-            snapped = snap(finals)
-            fvals = jax.vmap(
-                lambda xs, th: jax.vmap(lambda x: model(th, x))(xs)
-            )(snapped, thetas)  # (B, S, k)
-            width = jnp.maximum(his - los, 1e-12)[:, None, :]
-            fhat = (fvals - los[:, None, :]) / width
-            feas = jnp.all(
-                jnp.logical_and(fhat >= -cfg.feas_tol,
-                                fhat <= 1.0 + cfg.feas_tol),
-                axis=-1,
-            )  # (B, S)
-            onehot = jax.nn.one_hot(target, fvals.shape[-1],
-                                    dtype=fvals.dtype)
-            ft = jnp.sum(fvals * onehot, axis=-1)
-            score = jnp.where(feas, ft, jnp.inf)
-            best = jnp.argmin(score, axis=1)
-            take = lambda a: jnp.take_along_axis(
-                a, best[:, None, None] if a.ndim == 3 else best[:, None],
-                axis=1).squeeze(1)
-            return take(snapped), take(fvals), jnp.any(feas, axis=1)
-
-        return jax.jit(solve_batch)
-
-    @staticmethod
-    def _bucket(B: int) -> int:
-        b = 4
-        while b < B:
-            b *= 2
-        return b
-
     def solve(self, boxes: np.ndarray, thetas: np.ndarray,
               target: int = 0) -> COResult:
         """``boxes: (B, 2, k)`` with per-box stage parameters
-        ``thetas: (B, T)`` -> one vmapped dispatch over all boxes."""
+        ``thetas: (B, T)`` -> one executor dispatch over all boxes."""
         import jax
-        import jax.numpy as jnp
 
-        if self._solver is None:
-            self._solver = self._build()
+        from repro.exec import ProbeRequest
+
         boxes = np.asarray(boxes, dtype=np.float64)
         if boxes.ndim == 2:
             boxes = boxes[None]
@@ -243,21 +201,22 @@ class FamilySolver:
             raise ValueError(
                 f"{boxes.shape[0]} boxes but {thetas.shape[0]} thetas")
         B = boxes.shape[0]
-        cfg = self.config
         x0s = jax.random.uniform(
-            self._next_key(), (B, cfg.multistart, self.family.encoder.dim))
-        Bp = self._bucket(B)
-        los = jnp.asarray(boxes[:, 0])
-        his = jnp.asarray(boxes[:, 1])
-        ths = jnp.asarray(thetas)
-        if Bp != B:
-            pad = lambda a: jnp.concatenate(
-                [a, jnp.broadcast_to(a[:1], (Bp - B, *a.shape[1:]))], 0)
-            x0s, los, his, ths = pad(x0s), pad(los), pad(his), pad(ths)
-        x, f, feas = self._solver(x0s, los, his, ths, jnp.int32(target))
+            self._next_key(),
+            (B, self.config.multistart, self.family.encoder.dim))
+        req = ProbeRequest(
+            program=self._program,
+            encoder=self.family.encoder,
+            cfg=self.config,
+            x0s=x0s,
+            los=boxes[:, 0],
+            his=boxes[:, 1],
+            targets=np.full((B,), int(target), dtype=np.int32),
+            params_b=thetas,
+        )
+        x, f, feas = self.executor.solve_requests([req])
         self.dispatches += 1
-        return COResult(np.asarray(x[:B]), np.asarray(f[:B]),
-                        np.asarray(feas[:B]))
+        return COResult(np.asarray(x), np.asarray(f), np.asarray(feas))
 
 
 class _StageBoundSolver:

@@ -59,10 +59,10 @@ def _incremental_pass(E: Array, alive: Array, B: Array, bvalid: Array):
 
 
 def _bucket(n: int, floor: int = 4) -> int:
-    b = floor
-    while b < n:
-        b *= 2
-    return b
+    """Capacity bucketing via the single shared policy (repro.exec)."""
+    from repro.exec import bucket
+
+    return bucket(n, base=floor)
 
 
 class FrontierStore:

@@ -13,26 +13,41 @@ via multi-start projected gradient descent on the penalty loss of Eq. 4:
 
 with F̂_j = (F_j - C_j^L) / (C_j^U - C_j^L).
 
-TPU adaptation (DESIGN.md §2): the paper dispatches CO problems to a
+TPU adaptation (DESIGN.md §2, §10): the paper dispatches CO problems to a
 multi-threaded solver; here *all* (problems × multi-starts) descend in a
-single ``vmap``-batched, ``jit``-compiled program — the batched surrogate
-forward is the compute hot spot and has a fused Pallas kernel
-(``repro.kernels.mogd_mlp``).  Subgradients of the non-smooth indicator
-terms are handled by JAX's autodiff exactly as the paper prescribes
-("machine learning libraries allow subgradients").
+single ``vmap``-batched, ``jit``-compiled program owned by the
+:class:`~repro.exec.ProbeExecutor` — :class:`MOGDSolver` is a thin
+frontend that packages its problem as a ``(structure, params)``
+:class:`~repro.exec.ParamProgram` plus per-box data (boxes, user bounds,
+uncertainty weights, target index) and hands the batch to the executor.
+Problems sharing a model architecture therefore share ONE compiled
+program across solvers, sessions, and model versions.  Subgradients of
+the non-smooth indicator terms are handled by JAX's autodiff exactly as
+the paper prescribes ("machine learning libraries allow subgradients").
 
 Model uncertainty (§4.2.3) enters by replacing F with F̃ = E[F] + α·std[F]
-before loss construction (see ``MOOProblem.effective_objectives``).
+before loss construction (see ``MOOProblem.effective_objectives``; on the
+executor path the α vector rides as per-box data).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+
+# Re-exported for compatibility: the Eq. 4 loss and the projected-Adam
+# kernel live in the executor plane now (repro.exec.executor), which is
+# the single owner of the MOGD compute body.
+from repro.exec import (  # noqa: F401  (re-exports)
+    ParamProgram,
+    ProbeRequest,
+    adam_project_descend,
+    closure_program,
+    default_executor,
+)
+from repro.exec.executor import _eq4_loss  # noqa: F401  (re-export)
 
 from .problem import MOOProblem
 
@@ -71,60 +86,6 @@ class COResult:
     feasible: np.ndarray  # (B,) bool — Prop 3.3: probe may return nothing
 
 
-def _eq4_loss(
-    f: Array, lo: Array, hi: Array, target: Array, penalty: float,
-    tie_break_eps: float = 0.0,
-) -> Array:
-    """Paper Eq. 4 over one objective vector ``f: (k,)``.
-
-    ``target`` is a *traced* index (one-hot selection) so a single jit
-    serves every CO target — the PF session compiles once per problem.
-    """
-    width = jnp.maximum(hi - lo, 1e-12)
-    fhat = (f - lo) / width
-    onehot = jax.nn.one_hot(target, f.shape[-1], dtype=fhat.dtype)
-    ft = jnp.sum(fhat * onehot)
-    inside_t = jnp.logical_and(ft >= 0.0, ft <= 1.0)
-    target_term = jnp.where(inside_t, ft * ft, 0.0)
-    violated = jnp.logical_or(fhat < 0.0, fhat > 1.0)
-    viol_term = jnp.where(violated, (fhat - 0.5) ** 2 + penalty, 0.0).sum()
-    tie_term = tie_break_eps * jnp.sum(
-        jnp.where(violated, 0.0, jnp.clip(fhat, 0.0, 1.0) ** 2)
-    )
-    return target_term + viol_term + tie_term
-
-
-def adam_project_descend(loss_fn: Callable, x0: Array, cfg: MOGDConfig) -> Array:
-    """Multi-step Adam descent with cosine LR decay and projection onto
-    ``[0,1]^D`` (§4.2.1), from one start.  Shared by :class:`MOGDSolver`
-    and the DAG stage-family solver (``repro.core.dag``)."""
-    grad_fn = jax.grad(loss_fn)
-
-    def step(carry, _):
-        x, m, v, t = carry
-        g = grad_fn(x)
-        g = jnp.where(jnp.isfinite(g), g, 0.0)
-        m = cfg.adam_b1 * m + (1 - cfg.adam_b1) * g
-        v = cfg.adam_b2 * v + (1 - cfg.adam_b2) * g * g
-        mh = m / (1 - cfg.adam_b1 ** t)
-        vh = v / (1 - cfg.adam_b2 ** t)
-        frac = (t - 1.0) / cfg.steps
-        lr = cfg.lr * (
-            cfg.lr_floor
-            + (1 - cfg.lr_floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
-        )
-        x = x - lr * mh / (jnp.sqrt(vh) + cfg.adam_eps)
-        # Projection: walk back to the boundary of [0,1]^D (§4.2.1).
-        x = jnp.clip(x, 0.0, 1.0)
-        return (x, m, v, t + 1.0), None
-
-    z = jnp.zeros_like(x0)
-    (x, _, _, _), _ = jax.lax.scan(
-        step, (x0, z, z, jnp.float32(1.0)), None, length=cfg.steps
-    )
-    return x
-
-
 def single_objective_box(bounds: np.ndarray) -> np.ndarray:
     """Constraint box for an unconstrained single-objective reference solve
     (Def 3.4): the global objective bounds *widened downward* by one full
@@ -136,7 +97,8 @@ def single_objective_box(bounds: np.ndarray) -> np.ndarray:
 
 
 def _user_bound_arrays(problem: MOOProblem):
-    """Per-objective hard-bound arrays ``(ulo, uhi, uscale)`` or None.
+    """Per-objective hard-bound arrays ``(ulo, uhi, uscale)`` as ``(k,)``
+    numpy rows, or None.
 
     ``uscale`` normalizes the violation penalty and tolerance; it is the
     shared :func:`repro.core.problem.bound_scales` scale, so MOGD, the
@@ -150,144 +112,194 @@ def _user_bound_arrays(problem: MOOProblem):
     if not np.any(np.isfinite(vc)):
         return None
     scale = bound_scales(vc)
-    return jnp.asarray(vc[:, 0]), jnp.asarray(vc[:, 1]), jnp.asarray(scale)
+    return vc[:, 0], vc[:, 1], scale
 
 
 class MOGDSolver:
-    """Batched MOGD over a fixed :class:`MOOProblem`.
+    """Batched MOGD over a fixed :class:`MOOProblem` — a thin frontend
+    over the :class:`~repro.exec.ProbeExecutor`.
 
-    One instance caches a jit per (target objective) — the PF algorithms
-    only ever use a handful of targets, so compilation is amortized across
-    the thousands of CO probes of a planning session.
+    The solver packages its problem once as a ``(structure, params)``
+    program: problems sharing a model architecture (e.g. many workloads
+    served by one MLP family, or one workload across model versions)
+    share a single compiled executor program, with this problem's weights
+    riding as data.  Solvers whose :meth:`dispatch_key` matches can be
+    batched into ONE device dispatch via :func:`solve_grouped` — the
+    multi-tenant coalescing primitive behind ``MOOService.step_all``.
 
     When the problem carries user value constraints (a TaskSpec objective
     ``bound``), every CO solve additionally penalizes bound violations and
     reports bound-infeasible results as infeasible — a declared budget cap
-    is enforced at the solver, not filtered after the fact.
+    is enforced at the solver, not filtered after the fact.  Bounds ride
+    as per-box data (±inf = open edge), so bounded and unbounded tenants
+    still share one compiled program.
     """
 
-    def __init__(self, problem: MOOProblem, config: MOGDConfig = MOGDConfig()):
+    def __init__(self, problem: MOOProblem, config: MOGDConfig = MOGDConfig(),
+                 executor=None, split_params: bool = True):
         self.problem = problem
         self.config = config
-        self._solver: Callable | None = None
+        self.executor = executor if executor is not None else default_executor()
+        # split_params=False forces the opaque-closure program (one
+        # structure per problem content) — the pre-executor dispatch
+        # behavior, kept as the benchmark baseline and an escape hatch.
+        self.split_params = split_params
         self._key = jax.random.PRNGKey(config.seed)
+        self._program: ParamProgram | None = None
+        self._dispatch_key: tuple | None = None
+        self._use_std = False
+        self._alphas_vec: np.ndarray | None = None
 
     # ------------------------------------------------------------------
     def _next_key(self) -> Array:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def _build(self) -> Callable:
-        cfg = self.config
-        obj_fn = self.problem.effective_objectives(cfg.alpha)
-        snap = self.problem.encoder.snap
-        penalty = cfg.penalty
-        user_bounds = _user_bound_arrays(self.problem)
+    def _alphas(self) -> np.ndarray:
+        a = self.problem.alphas
+        if a is not None:
+            return np.asarray(a, dtype=np.float64).reshape(self.problem.k)
+        return np.full(self.problem.k, float(self.config.alpha))
 
-        if user_bounds is None:
-            bound_pen = lambda f: 0.0
+    def program(self) -> ParamProgram:
+        """The problem's effective-objective program (lazy, cached)."""
+        if self._program is not None:
+            return self._program
+        prog = getattr(self.problem, "program", None)
+        alphas = self._alphas()
+        wants_std = bool(np.any(alphas != 0.0))
+        if (self.split_params and prog is not None
+                and (not wants_std or prog.apply_std is not None)):
+            self._program = prog
+            self._use_std = wants_std and prog.apply_std is not None
+            self._alphas_vec = alphas
         else:
-            ulo, uhi, uscale = user_bounds
+            # Opaque model: fold uncertainty in exactly as before and key
+            # the structure by problem content (never id() when the
+            # content is fingerprintable).
+            obj = self.problem.effective_objectives(self.config.alpha)
+            self._program = closure_program(obj, _problem_token(self.problem))
+            self._use_std = False
+            self._alphas_vec = alphas
+        return self._program
 
-            def bound_pen(f: Array) -> Array:
-                # excess is 0 at open (±inf) edges: max(-inf, 0) == 0
-                excess = jnp.maximum(ulo - f, 0.0) + jnp.maximum(f - uhi, 0.0)
-                return jnp.where(
-                    excess > 0.0, (excess / uscale) ** 2 + penalty, 0.0
-                ).sum()
-
-        def descend_one(x0: Array, lo: Array, hi: Array, target: Array) -> Array:
-            """GD from one start for one CO problem -> final x (D,)."""
-
-            def loss_fn(x: Array) -> Array:
-                f = obj_fn(x)
-                return _eq4_loss(f, lo, hi, target, penalty,
-                                 cfg.tie_break_eps) + bound_pen(f)
-
-            return adam_project_descend(loss_fn, x0, cfg)
-
-        def solve_batch(x0s: Array, los: Array, his: Array, target: Array):
-            """x0s: (B, S, D); los/his: (B, k) -> per-problem best."""
-            finals = jax.vmap(
-                lambda x0_s, lo, hi: jax.vmap(
-                    lambda x0: descend_one(x0, lo, hi, target))(x0_s)
-            )(x0s, los, his)  # (B, S, D)
-            snapped = snap(finals)
-            fvals = jax.vmap(jax.vmap(obj_fn))(snapped)  # (B, S, k)
-            width = jnp.maximum(his - los, 1e-12)[:, None, :]
-            fhat = (fvals - los[:, None, :]) / width
-            feas = jnp.all(
-                jnp.logical_and(fhat >= -cfg.feas_tol, fhat <= 1.0 + cfg.feas_tol),
-                axis=-1,
-            )  # (B, S)
-            if user_bounds is not None:
-                tol = cfg.feas_tol * uscale
-                feas = jnp.logical_and(feas, jnp.all(
-                    jnp.logical_and(fvals >= ulo - tol, fvals <= uhi + tol),
-                    axis=-1))
-            onehot = jax.nn.one_hot(target, fvals.shape[-1],
-                                    dtype=fvals.dtype)
-            ft = jnp.sum(fvals * onehot, axis=-1)  # (B, S)
-            score = jnp.where(feas, ft, jnp.inf)
-            best = jnp.argmin(score, axis=1)  # (B,)
-            take = lambda a: jnp.take_along_axis(
-                a, best[:, None, None] if a.ndim == 3 else best[:, None], axis=1
-            ).squeeze(1)
-            return take(snapped), take(fvals), jnp.any(feas, axis=1)
-
-        return jax.jit(solve_batch)
+    def dispatch_key(self) -> tuple:
+        """The executor structure key: solvers with equal dispatch keys
+        batch into one device dispatch (params as data).  Cached — every
+        ingredient (program, encoder, config, use_std) is immutable after
+        the first call, and the service grouping loop asks per round."""
+        if self._dispatch_key is None:
+            prog = self.program()
+            self._dispatch_key = self.executor.structure_key(
+                prog, self.problem.encoder, self.config, self._use_std)
+        return self._dispatch_key
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _bucket(B: int) -> int:
-        """Pad batch sizes to a small set of buckets so a PF session hits
-        at most ~3 jit specializations instead of one per grid size."""
-        b = 4
-        while b < B:
-            b *= 2
-        return b
-
-    def _run(self, x0s, los, his, target: int):
-        if self._solver is None:
-            self._solver = self._build()
-        B = x0s.shape[0]
-        Bp = self._bucket(B)
-        if Bp != B:
-            pad = lambda a: jnp.concatenate(
-                [a, jnp.broadcast_to(a[:1], (Bp - B, *a.shape[1:]))], 0)
-            x0s, los, his = pad(x0s), pad(los), pad(his)
-        x, f, feas = self._solver(x0s, los, his, jnp.int32(target))
-        return x[:B], f[:B], feas[:B]
+    def _request(self, x0s, los, his, target: int) -> ProbeRequest:
+        prog = self.program()
+        B = int(np.shape(x0s)[0])
+        k = self.problem.k
+        ub = _user_bound_arrays(self.problem)
+        bounds = None
+        if ub is not None:
+            bounds = tuple(np.broadcast_to(b, (B, k)) for b in ub)
+        alphas = (np.broadcast_to(self._alphas_vec, (B, k))
+                  if self._use_std else None)
+        return ProbeRequest(
+            program=prog,
+            encoder=self.problem.encoder,
+            cfg=self.config,
+            x0s=x0s,
+            los=np.asarray(los, dtype=np.float64).reshape(B, k),
+            his=np.asarray(his, dtype=np.float64).reshape(B, k),
+            targets=np.full((B,), int(target), dtype=np.int32),
+            bounds=bounds,
+            alphas=alphas,
+            use_std=self._use_std,
+        )
 
     def solve(self, boxes: np.ndarray, target: int = 0) -> COResult:
         """Solve B CO problems; ``boxes: (B, 2, k)`` rows are (lo, hi)."""
-        boxes = np.asarray(boxes, dtype=np.float64)
-        if boxes.ndim == 2:
-            boxes = boxes[None]
-        B = boxes.shape[0]
-        cfg = self.config
-        x0s = jax.random.uniform(
-            self._next_key(), (B, cfg.multistart, self.problem.dim)
-        )
-        x, f, feas = self._run(
-            x0s, jnp.asarray(boxes[:, 0]), jnp.asarray(boxes[:, 1]), target)
-        return COResult(np.asarray(x), np.asarray(f), np.asarray(feas))
+        return solve_grouped([(self, boxes, target)])
 
     def refine(self, x0s: np.ndarray, box: np.ndarray, target: int = 0):
         """Descend from given starts (reference-solver elite refinement).
 
         ``x0s: (B, D)``; ``box: (2, k)``. Returns (x, f, feasible) arrays.
         """
+        x0s = np.asarray(x0s, dtype=np.float64)
         B = x0s.shape[0]
-        lo = jnp.broadcast_to(jnp.asarray(box[0]), (B, len(box[0])))
-        hi = jnp.broadcast_to(jnp.asarray(box[1]), (B, len(box[1])))
-        x, f, feas = self._run(jnp.asarray(x0s)[:, None, :], lo, hi, target)
-        return np.asarray(x), np.asarray(f), np.asarray(feas)
+        lo = np.broadcast_to(np.asarray(box[0]), (B, len(box[0])))
+        hi = np.broadcast_to(np.asarray(box[1]), (B, len(box[1])))
+        req = self._request(x0s[:, None, :], lo, hi, target)
+        x, f, feas = self.executor.solve_requests([req])
+        return x, f, feas
 
     def solve_single_objective(self, target: int, bounds: np.ndarray) -> COResult:
         """Unconstrained single-objective min (reference points, Def 3.4);
         see :func:`single_objective_box` for the widening rationale."""
         return self.solve(single_objective_box(bounds)[None], target=target)
+
+
+def solve_grouped(items) -> COResult:
+    """One shared executor dispatch over many solvers' box spans.
+
+    ``items`` is a list of ``(solver: MOGDSolver, boxes: (B, 2, k),
+    target: int)`` whose solvers share one :meth:`MOGDSolver.dispatch_key`
+    (and executor).  Each solver draws its own multistart seeds from its
+    own RNG stream — per-session determinism is preserved — and its
+    problem's params/bounds/targets ride as per-box data in the single
+    concatenated batch.  This is the multi-tenant coalescing primitive
+    ``MOOService._coalesced_step`` dispatches through (DESIGN.md §10).
+    """
+    executor = items[0][0].executor
+    requests = []
+    for solver, boxes, target in items:
+        if solver.executor is not executor:
+            raise ValueError(
+                "solve_grouped items mix ProbeExecutor instances — a "
+                "group must share one dispatch plane (telemetry and mesh "
+                "config live per executor)")
+        boxes = np.asarray(boxes, dtype=np.float64)
+        if boxes.ndim == 2:
+            boxes = boxes[None]
+        B = boxes.shape[0]
+        x0s = jax.random.uniform(
+            solver._next_key(), (B, solver.config.multistart,
+                                 solver.problem.dim))
+        requests.append(
+            solver._request(x0s, boxes[:, 0], boxes[:, 1], target))
+    x, f, feas = executor.solve_requests(requests)
+    return COResult(np.asarray(x), np.asarray(f), np.asarray(feas))
+
+
+def _problem_token(problem: MOOProblem):
+    """Content token for an opaque problem's program structure.
+
+    Prefers the TaskSpec signature stamped by ``TaskSpec.compile``; falls
+    back to fingerprinting the objective callables, and only as a last
+    resort to a process-unique token (per-problem compilation — exactly
+    the pre-executor behavior for unfingerprintable models)."""
+    tok = getattr(problem, "_structure_token", None)
+    if tok is not None:
+        return tok
+    sig = getattr(problem, "signature", None)
+    if isinstance(sig, str):
+        tok = ("sig", sig)
+    else:
+        try:
+            from .task import _fingerprint
+
+            tok = ("fp", _fingerprint(
+                (problem.objectives, problem.objective_stds,
+                 None if problem.alphas is None
+                 else np.asarray(problem.alphas))))
+        except TypeError:
+            from repro.exec.executor import _UIDS
+
+            tok = ("uid", next(_UIDS))
+    problem._structure_token = tok
+    return tok
 
 
 # ---------------------------------------------------------------------------

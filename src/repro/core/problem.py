@@ -284,7 +284,22 @@ class MOOProblem:
         return fn
 
     def evaluate_batch(self, X: Array) -> Array:
-        """(N, D) -> (N, k) objective values."""
+        """(N, D) -> (N, k) objective values.
+
+        Problems carrying a ``(structure, params)`` program (stamped by
+        ``TaskSpec.compile``) evaluate through the shared executor plane:
+        equal-architecture workloads reuse one jitted batch forward
+        instead of compiling one per problem.  Evaluation deliberately
+        uses the process-default executor regardless of which service
+        owns the problem — the eval trace is param-free (params are an
+        untraced argument), so sharing one cache across executors is
+        semantically safe and maximizes reuse; only *solve* dispatch is
+        per-service (mesh sharding, compile-count telemetry)."""
+        prog = getattr(self, "program", None)
+        if prog is not None:
+            from repro.exec import default_executor
+
+            return default_executor().eval_batch(prog, X)
         return self._batch_fn(X)
 
     def decode_batch(self, X: Array) -> list[dict]:

@@ -120,3 +120,47 @@ def make_mixed_problem() -> MOOProblem:
         return jnp.stack([lat, cost])
 
     return MOOProblem(specs=specs, objectives=obj, k=2)
+
+
+def mlp_surrogate_task(
+    seed: int = 0,
+    d: int = 3,
+    arch: tuple = (16, 16),
+    k: int = 2,
+    bound: tuple | None = None,
+    y_offset: float = 0.0,
+    name: str | None = None,
+) -> TaskSpec:
+    """A randomly-initialized MLP-backed workload with the executor
+    plane's ``(structure_key, params)`` split (DESIGN.md §10).
+
+    Tasks built with different ``seed``s are *distinct workloads sharing
+    one model architecture* — the multi-tenant mix the structure-keyed
+    executor exists for — so this is the single source of the
+    heterogeneous-tenant scenario used by ``tests/test_executor.py``,
+    ``tests/test_service.py``, and ``benchmarks/service_throughput.py``.
+    ``bound`` declares a hard value bound on the first objective;
+    ``y_offset`` shifts the output scale to separate workload families.
+    """
+    import jax
+
+    from repro.exec import stack_programs
+    from repro.models.mlp import MLPRegressor, MLPSpec, init_mlp
+
+    regs = []
+    for j in range(k):
+        spec = MLPSpec(d, tuple(arch), 1)
+        regs.append(MLPRegressor(
+            spec=spec,
+            params=init_mlp(jax.random.PRNGKey(1000 * seed + j), spec),
+            x_mean=jnp.zeros(d), x_std=jnp.ones(d),
+            y_mean=jnp.float32(y_offset), y_std=jnp.float32(1.0),
+            dropout=0.0))
+    objectives = tuple(
+        Objective(f"f{j}", bound=bound if j == 0 else None)
+        for j in range(k))
+    return TaskSpec(
+        knobs=tuple(continuous(f"x{t}", 0.0, 1.0) for t in range(d)),
+        objectives=objectives,
+        program=stack_programs([r.as_program() for r in regs]),
+        name=name or f"mlp-wl-{seed}")

@@ -343,14 +343,39 @@ class TaskSpec:
 
     knobs: tuple  # tuple[VariableSpec, ...]
     objectives: tuple  # tuple[Objective, ...]
-    model: Callable
+    model: Callable | None = None
     model_stds: Callable | None = None
     preference: Preference = UtopiaNearest()
     model_id: object = None
     name: str = "task"
+    # Optional (structure, params) split of the model for the probe
+    # executor plane (repro.exec, DESIGN.md §10): tasks sharing a program
+    # structure batch into one compiled MOGD dispatch with this task's
+    # params riding as data.  When given, ``model``/``model_stds`` may be
+    # omitted (derived from the program).
+    program: object = None
 
     def __post_init__(self):
         object.__setattr__(self, "knobs", tuple(self.knobs))
+        # derived-ness flags: signature() skips re-fingerprinting model/
+        # model_stds when they are mere views of the program (the program
+        # part already hashes the same content)
+        object.__setattr__(self, "_derived_model", False)
+        object.__setattr__(self, "_derived_stds", False)
+        if self.model is None:
+            if self.program is None:
+                raise ValueError(
+                    "TaskSpec needs a model (or a repro.exec.ParamProgram "
+                    "via program=)")
+            prog = self.program
+            object.__setattr__(
+                self, "model", lambda x: prog.apply(prog.params, x))
+            object.__setattr__(self, "_derived_model", True)
+            if self.model_stds is None and prog.apply_std is not None:
+                object.__setattr__(
+                    self, "model_stds",
+                    lambda x: prog.apply_std(prog.params, x))
+                object.__setattr__(self, "_derived_stds", True)
         objs = tuple(
             Objective(o) if isinstance(o, str) else o for o in self.objectives)
         object.__setattr__(self, "objectives", objs)
@@ -416,6 +441,22 @@ class TaskSpec:
         """
         if self.model_id is not None:
             model_part = f"model_id:{_fingerprint(self.model_id)}"
+        elif self.program is not None:
+            # params-as-data split: identity is the program structure plus
+            # the parameter *content* (array hashes) — a params swap (new
+            # weights, same architecture) changes the signature while the
+            # executor structure key stays warm.  model/model_stds (either
+            # explicitly supplied alongside the program, or derived from
+            # it) are fingerprinted too: compile() builds
+            # ``problem.objectives`` from self.model, so an explicit model
+            # diverging from the program must never collide signatures.
+            model_part = "program:" + _fingerprint(
+                (self.program.structure, self.program.params,
+                 self.program.apply_std is not None))
+            if self.model is not None and not self._derived_model:
+                model_part += "|model:" + _fingerprint(self.model)
+            if self.model_stds is not None and not self._derived_stds:
+                model_part += "|stds:" + _fingerprint(self.model_stds)
         else:
             model_part = _fingerprint(self.model)
             if self.model_stds is not None:
@@ -456,6 +497,12 @@ class TaskSpec:
             value_constraints=self.bounds_array(),
             alphas=self.alphas(),
         )
+        if self.program is not None:
+            from repro.exec import orient_program
+
+            # oriented program: the executor plane sees minimized
+            # objectives, matching ``problem.objectives`` exactly
+            problem.program = orient_program(self.program, signs)
         problem.task_spec = self
         problem.signature = self.signature()
         return problem

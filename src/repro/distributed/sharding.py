@@ -147,6 +147,22 @@ def named_sharding_tree(rules: ShardingRules, params, axes_tree):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def probe_mesh(n_devices: int | None = None, axis: str = "probe") -> Mesh:
+    """A 1-D device mesh for the MOO probe-executor batch axis
+    (DESIGN.md §10): ``ProbeExecutor(mesh=probe_mesh())`` shards each
+    padded probe batch across devices via ``shard_map`` (rows are
+    independent CO descents — no collectives).  On a single device the
+    executor's fallback makes this a no-op, so the same construction is
+    safe everywhere."""
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"asked for {n_devices} devices, have {len(devices)}")
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), (axis,))
+
+
 def constrain(x, rules: ShardingRules | None, *logical_axes):
     """``with_sharding_constraint`` by logical names (no-op without rules)."""
     if rules is None:

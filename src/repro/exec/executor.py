@@ -1,0 +1,612 @@
+"""The unified probe-executor plane (DESIGN.md §10).
+
+Every MOGD device dispatch in the system goes through one
+:class:`ProbeExecutor`.  Compiled programs are keyed by **structure** —
+the surrogate program's content token (model-family pytree treedef /
+shapes), the encoder's snap structure, the objective count, the
+:class:`~repro.core.mogd.MOGDConfig`, and the padded batch bucket — while
+everything problem-specific rides through the jitted program as batched
+pytree **data**: model parameters (MLP weights, GP factors, stage theta),
+the per-cell constraint boxes, user value bounds, per-objective
+uncertainty weights, and the target-objective index.
+
+Consequences (the reason this module exists):
+
+* Probe cells from tenants with *different* workloads but a shared model
+  architecture batch into ONE dispatch — the compiled program is the
+  same, only the per-box params differ.
+* A model-server promotion (new weights, same architecture) is a pure
+  params swap: the warm re-solve reuses the already-compiled program
+  with zero recompilation.
+* An opt-in mesh path shards the probe batch axis over devices
+  (``shard_map`` over a 1-D mesh; single-device meshes and indivisible
+  buckets fall back to the unsharded program — never fail).
+
+The module is dependency-light by design: it imports only jax/numpy, so
+``repro.core.mogd``, ``repro.core.dag``, ``repro.models`` and
+``repro.service`` can all build on it without cycles.  The Eq. 4 penalty
+loss and the projected-Adam descent kernel live here (re-exported from
+``repro.core.mogd`` for compatibility) because they ARE the dispatch
+plane's compute body.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Math primitives (paper Eq. 4 + §4.2.1 projected descent).  Moved here from
+# core/mogd.py so the executor owns the full compute body; core re-exports.
+# ---------------------------------------------------------------------------
+
+
+def _eq4_loss(
+    f: Array, lo: Array, hi: Array, target: Array, penalty: float,
+    tie_break_eps: float = 0.0,
+) -> Array:
+    """Paper Eq. 4 over one objective vector ``f: (k,)``.
+
+    ``target`` is a *traced* index (one-hot selection) so a single jit
+    serves every CO target — and, in the executor plane, every *box's*
+    target rides as per-row data.
+    """
+    width = jnp.maximum(hi - lo, 1e-12)
+    fhat = (f - lo) / width
+    onehot = jax.nn.one_hot(target, f.shape[-1], dtype=fhat.dtype)
+    ft = jnp.sum(fhat * onehot)
+    inside_t = jnp.logical_and(ft >= 0.0, ft <= 1.0)
+    target_term = jnp.where(inside_t, ft * ft, 0.0)
+    violated = jnp.logical_or(fhat < 0.0, fhat > 1.0)
+    viol_term = jnp.where(violated, (fhat - 0.5) ** 2 + penalty, 0.0).sum()
+    tie_term = tie_break_eps * jnp.sum(
+        jnp.where(violated, 0.0, jnp.clip(fhat, 0.0, 1.0) ** 2)
+    )
+    return target_term + viol_term + tie_term
+
+
+def adam_project_descend(loss_fn: Callable, x0: Array, cfg) -> Array:
+    """Multi-step Adam descent with cosine LR decay and projection onto
+    ``[0,1]^D`` (§4.2.1), from one start.  ``cfg`` is a
+    :class:`~repro.core.mogd.MOGDConfig` (duck-typed)."""
+    grad_fn = jax.grad(loss_fn)
+
+    def step(carry, _):
+        x, m, v, t = carry
+        g = grad_fn(x)
+        g = jnp.where(jnp.isfinite(g), g, 0.0)
+        m = cfg.adam_b1 * m + (1 - cfg.adam_b1) * g
+        v = cfg.adam_b2 * v + (1 - cfg.adam_b2) * g * g
+        mh = m / (1 - cfg.adam_b1 ** t)
+        vh = v / (1 - cfg.adam_b2 ** t)
+        frac = (t - 1.0) / cfg.steps
+        lr = cfg.lr * (
+            cfg.lr_floor
+            + (1 - cfg.lr_floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        )
+        x = x - lr * mh / (jnp.sqrt(vh) + cfg.adam_eps)
+        # Projection: walk back to the boundary of [0,1]^D (§4.2.1).
+        x = jnp.clip(x, 0.0, 1.0)
+        return (x, m, v, t + 1.0), None
+
+    z = jnp.zeros_like(x0)
+    (x, _, _, _), _ = jax.lax.scan(
+        step, (x0, z, z, jnp.float32(1.0)), None, length=cfg.steps
+    )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Bucketing policy — the single source of truth.  MOGDSolver, FamilySolver
+# and the service coalescer all pad through here, so a PF session hits a
+# handful of jit specializations instead of one per grid size.
+# ---------------------------------------------------------------------------
+
+
+def bucket(B: int, base: int = 1) -> int:
+    """Smallest power-of-two-scaled bucket >= B (floor ``base``)."""
+    b = base
+    while b < B:
+        b *= 2
+    return b
+
+
+def pad_rows(tree, n_pad: int, axis: int = 0):
+    """Pad every array leaf's ``axis`` by replicating slice 0 ``n_pad``
+    times.  Pad rows are real (duplicate) problems whose results are
+    sliced off before anyone sees them — they can never enter a frontier."""
+    if n_pad == 0:
+        return tree
+
+    def one(a):
+        a = jnp.asarray(a)
+        first = jax.lax.slice_in_dim(a, 0, 1, axis=axis)
+        shape = list(a.shape)
+        shape[axis] = n_pad
+        return jnp.concatenate(
+            [a, jnp.broadcast_to(first, shape)], axis=axis)
+
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Programs: the (structure, params) split
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamProgram:
+    """A surrogate objective program split into structure and data.
+
+    ``apply(params, x) -> (k,)`` (or a scalar for single-objective
+    building blocks) must be a pure function whose *behavior* is fully
+    determined by ``structure``: the executor compiles one jitted program
+    per structure token and routes every program with an equal token
+    through it, feeding each call's ``params`` pytree as batched data.
+
+    ``params`` is any pytree of arrays (stackable along a new leading
+    axis).  ``apply_std`` optionally returns predictive standard
+    deviations of the same shape (uncertainty-aware MOGD, §4.2.3).
+    """
+
+    apply: Callable
+    params: Any
+    structure: tuple
+    apply_std: Callable | None = None
+
+
+_UIDS = itertools.count()
+
+
+def closure_program(fn: Callable, token) -> ParamProgram:
+    """Wrap an opaque objective closure as a program with empty params.
+
+    The legacy path: each distinct model content is its own structure, so
+    nothing coalesces across tenants — exactly the pre-executor behavior."""
+    return ParamProgram(
+        apply=lambda _p, x: fn(x), params=(), structure=("closure", token))
+
+
+def orient_program(program: ParamProgram, signs) -> ParamProgram:
+    """Flip max-objectives to minimized orientation (TaskSpec.compile).
+    Predictive stds are direction-invariant and pass through unchanged."""
+    signs = tuple(float(s) for s in np.asarray(signs).reshape(-1))
+    if all(s == 1.0 for s in signs):
+        return program
+    sj = jnp.asarray(signs)
+    inner = program.apply
+    return dataclasses.replace(
+        program,
+        apply=lambda p, x: sj * inner(p, x),
+        structure=("orient", signs, program.structure),
+    )
+
+
+def stack_programs(programs) -> ParamProgram:
+    """k single-output programs -> one ``(k,)``-vector program — the Ψ a
+    model-server snapshot exposes (one regressor per objective)."""
+    programs = tuple(programs)
+    applies = tuple(p.apply for p in programs)
+    params = tuple(p.params for p in programs)
+    structure = ("stack", tuple(p.structure for p in programs))
+
+    def apply(ps, x):
+        return jnp.stack([a(p, x) for a, p in zip(applies, ps)])
+
+    apply_std = None
+    if all(p.apply_std is not None for p in programs):
+        stds = tuple(p.apply_std for p in programs)
+
+        def apply_std(ps, x):
+            return jnp.stack([s(p, x) for s, p in zip(stds, ps)])
+
+    return ParamProgram(apply, params, structure, apply_std)
+
+
+def encoder_structure(encoder) -> tuple:
+    """The part of a :class:`~repro.core.problem.SpaceEncoder` that the
+    compiled program's ``snap`` actually depends on: per-knob kind, encoded
+    width, and the integer level count.  Two workloads with equal encoder
+    structure trace identical snap computations."""
+    out = []
+    for s in encoder.specs:
+        if s.kind == "integer":
+            out.append(("integer", float(s.high - s.low)))
+        elif s.kind == "categorical":
+            out.append(("categorical", s.width))
+        else:
+            out.append((s.kind, 1))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+
+# Per-row field count of the rows tuple `_materialize` builds
+# (x0s, los, his, ulo, uhi, uscale, alphas, targets) — concatenation and
+# the mesh row-shard in_specs both derive from this, so adding a field
+# only requires touching `_materialize` and this constant.
+N_ROW_FIELDS = 8
+
+
+@dataclasses.dataclass
+class ProbeRequest:
+    """One caller's span of CO problems, everything-as-data.
+
+    ``x0s: (B, S, D)`` multistart seeds; ``los``/``his: (B, k)`` the PF
+    constraint boxes; ``targets: (B,)`` int32 target-objective indices.
+    ``params_b`` optionally pre-batches per-box params (leading B — the
+    stage-family theta path); None broadcasts ``program.params`` to every
+    box.  ``bounds`` is ``(ulo, uhi, uscale)`` each ``(B, k)`` (None =
+    open edges); ``alphas: (B, k)`` uncertainty weights (used only when
+    ``use_std``)."""
+
+    program: ParamProgram
+    encoder: Any
+    cfg: Any  # MOGDConfig (frozen dataclass — hashable)
+    x0s: Any
+    los: Any
+    his: Any
+    targets: Any
+    params_b: Any = None
+    bounds: Any = None
+    alphas: Any = None
+    use_std: bool = False
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+
+class ProbeExecutor:
+    """Structure-keyed compiler + dispatcher for batched MOGD probes.
+
+    Batches are laid out as ``(G groups, R rows)``: params are per-GROUP
+    data (one group per tenant span — rows inside a group share their
+    model weights, so the surrogate forward stays a shared-weight
+    matmul), rows are the individual CO cells.  A per-row-params caller
+    (the stage-family theta path) simply contributes R=1 groups.
+
+    One instance owns a cache of jitted ``solve`` programs keyed by
+    ``(structure, k, S, D, G-bucket, R-bucket)`` plus compile-count
+    telemetry per bucketless structure key (``compile_counts``).  The
+    service exposes these counters in ``stats()``; benchmarks and CI
+    gate on them.
+
+    ``mesh`` (optional) is a 1-D :class:`jax.sharding.Mesh`; when its
+    size divides the padded group (or, failing that, row) bucket, that
+    batch axis is sharded across devices with ``shard_map`` (rows are
+    independent, no collectives).  Single-device meshes — and buckets a
+    multi-device mesh cannot divide — fall back to the plain program.
+    """
+
+    def __init__(self, mesh=None, mesh_axis: str | None = None,
+                 bucket_fn: Callable[[int], int] = bucket,
+                 max_programs: int = 512):
+        self.mesh = mesh
+        self.mesh_axis = (
+            mesh_axis if mesh_axis is not None
+            else (mesh.axis_names[0] if mesh is not None else None))
+        self.bucket_fn = bucket_fn
+        # LRU bound on compiled programs: a stream of distinct closure
+        # structures (one-shot tasks) must not pin XLA executables — and
+        # their model closures — forever.  Evicted programs recompile on
+        # next use; counters keep counting (they are the PR-5 telemetry).
+        self.max_programs = max_programs
+        self._programs: dict[tuple, Callable] = {}
+        self._built_buckets: dict[tuple, set[tuple]] = {}
+        self._evals: dict[tuple, Callable] = {}
+        self._lock = threading.RLock()
+        self.compile_counts: dict[tuple, int] = {}
+        self.eval_compiles = 0
+        self.dispatches = 0
+        self.probes = 0
+
+    # -- telemetry ---------------------------------------------------------
+    @property
+    def structures_compiled(self) -> int:
+        """Distinct (bucketless) structure keys ever compiled."""
+        return len(self.compile_counts)
+
+    @property
+    def total_compiles(self) -> int:
+        """Total solve-program jit builds (all structures, all buckets)."""
+        return sum(self.compile_counts.values())
+
+    def stats(self) -> dict:
+        return {
+            "structures": self.structures_compiled,
+            "compiles": self.total_compiles,
+            "eval_compiles": self.eval_compiles,
+            "dispatches": self.dispatches,
+            "probes": self.probes,
+        }
+
+    # -- keys --------------------------------------------------------------
+    def structure_key(self, program: ParamProgram, encoder, cfg,
+                      use_std: bool = False) -> tuple:
+        """The coalescing identity: requests with equal structure keys are
+        solved by one compiled program (params ride as data).
+
+        ``cfg.seed`` is host-only (it feeds each solver's own PRNG stream,
+        never the trace), so it is normalized out — tenants differing only
+        in seed still coalesce.  ``cfg.alpha`` stays: closure programs
+        bake it into ``effective_objectives``."""
+        if dataclasses.is_dataclass(cfg):
+            cfg = dataclasses.replace(cfg, seed=0)
+        return (program.structure, encoder_structure(encoder), cfg,
+                bool(use_std))
+
+    def _mesh_div(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.mesh_axis])
+
+    def _choose_buckets(self, base_key: tuple, G: int, R: int) -> tuple:
+        """(G, R) bucketing with reuse: prefer an already-built bucket
+        pair within 4x total padded size of the wanted one over compiling
+        a new program — a warm executor serves shrinking/growing batches
+        (and post-promotion warm re-solves) with zero new builds.
+
+        Multi-row groups floor the row bucket at 4 (the historical
+        MOGDSolver floor: B in 2..4 share one program); single-row groups
+        stay exact so the per-row-params (stage-family) path pays no
+        padding."""
+        want_g = self.bucket_fn(G)
+        want_r = self.bucket_fn(R) if R == 1 else max(4, self.bucket_fn(R))
+        built = self._built_buckets.get(base_key, ())
+        reuse = [
+            (g, r) for (g, r) in built
+            if g >= want_g and r >= want_r
+            and g * r <= 4 * want_g * want_r
+        ]
+        if reuse:
+            return min(reuse, key=lambda t: t[0] * t[1])
+        return want_g, want_r
+
+    # -- compilation -------------------------------------------------------
+    def _build(self, req: ProbeRequest, Gp: int, Rp: int,
+               skey: tuple) -> Callable:
+        """Compile the grouped descend-snap-select program for one
+        structure at one (G, R) bucket pair.  Mirrors the pre-refactor
+        MOGDSolver semantics exactly; user bounds always participate with
+        ±inf open edges (``max(-inf - f, 0) == 0`` — a no-op for
+        unbounded rows).  Params enter once per GROUP, so the surrogate
+        forward inside each group keeps its shared-weight form."""
+        apply = req.program.apply
+        apply_std = req.program.apply_std
+        use_std = req.use_std
+        snap = req.encoder.snap
+        cfg = req.cfg
+        penalty, tie_eps, feas_tol = cfg.penalty, cfg.tie_break_eps, cfg.feas_tol
+
+        def solve_one(params, x0_s, lo, hi, ulo, uhi, uscale, alphas, target):
+            if use_std:
+                def eff(x):
+                    return apply(params, x) + alphas * apply_std(params, x)
+            else:
+                def eff(x):
+                    return apply(params, x)
+
+            def bound_pen(f):
+                # 0 at open (±inf) edges: max(-inf, 0) == 0
+                excess = jnp.maximum(ulo - f, 0.0) + jnp.maximum(f - uhi, 0.0)
+                return jnp.where(
+                    excess > 0.0, (excess / uscale) ** 2 + penalty, 0.0
+                ).sum()
+
+            def loss_fn(x):
+                f = eff(x)
+                return _eq4_loss(f, lo, hi, target, penalty,
+                                 tie_eps) + bound_pen(f)
+
+            finals = jax.vmap(
+                lambda x0: adam_project_descend(loss_fn, x0, cfg))(x0_s)
+            snapped = snap(finals)
+            fvals = jax.vmap(eff)(snapped)  # (S, k)
+            width = jnp.maximum(hi - lo, 1e-12)
+            fhat = (fvals - lo) / width
+            feas = jnp.all(
+                jnp.logical_and(fhat >= -feas_tol, fhat <= 1.0 + feas_tol),
+                axis=-1)
+            tol = feas_tol * uscale
+            feas = jnp.logical_and(feas, jnp.all(
+                jnp.logical_and(fvals >= ulo - tol, fvals <= uhi + tol),
+                axis=-1))
+            onehot = jax.nn.one_hot(target, fvals.shape[-1],
+                                    dtype=fvals.dtype)
+            ft = jnp.sum(fvals * onehot, axis=-1)  # (S,)
+            score = jnp.where(feas, ft, jnp.inf)
+            best = jnp.argmin(score)
+            return snapped[best], fvals[best], jnp.any(feas)
+
+        def solve_group(params, x0s, los, his, ulo, uhi, uscale, alphas,
+                        targets):
+            # rows of one group share params -> shared-weight forwards
+            return jax.vmap(
+                lambda *rows: solve_one(params, *rows)
+            )(x0s, los, his, ulo, uhi, uscale, alphas, targets)
+
+        batched = jax.vmap(solve_group)
+        n = self._mesh_div()
+        if n > 1:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            if Gp % n == 0:
+                # shard the group axis: params and rows partition together
+                spec = P(self.mesh_axis)
+                batched = shard_map(batched, mesh=self.mesh,
+                                    in_specs=spec, out_specs=spec,
+                                    check_rep=False)
+            elif Rp % n == 0:
+                # groups replicated, rows sharded (params fully replicated)
+                row_spec = P(None, self.mesh_axis)
+                batched = shard_map(
+                    batched, mesh=self.mesh,
+                    in_specs=(P(), *([row_spec] * N_ROW_FIELDS)),
+                    out_specs=row_spec, check_rep=False)
+            # else: indivisible bucket — unsharded fallback, never fail
+        self.compile_counts[skey] = self.compile_counts.get(skey, 0) + 1
+        return jax.jit(batched)
+
+    # -- assembly ----------------------------------------------------------
+    @staticmethod
+    def _materialize(req: ProbeRequest) -> tuple:
+        """One request -> its group list ``(params, rows, n_rows)``.
+
+        A shared-params request is ONE group of B rows; a per-row-params
+        request (stage-family thetas) is B groups of one row each."""
+        x0s = jnp.asarray(req.x0s)
+        B = int(x0s.shape[0])
+        los = jnp.asarray(req.los)
+        his = jnp.asarray(req.his)
+        k = los.shape[-1]
+        if req.bounds is not None:
+            ulo, uhi, uscale = (jnp.asarray(b) for b in req.bounds)
+        else:
+            ulo = jnp.full((B, k), -jnp.inf)
+            uhi = jnp.full((B, k), jnp.inf)
+            uscale = jnp.ones((B, k))
+        alphas = (jnp.zeros((B, k)) if req.alphas is None
+                  else jnp.asarray(req.alphas))
+        targets = jnp.asarray(req.targets, dtype=jnp.int32).reshape(B)
+        rows = (x0s, los, his, ulo, uhi, uscale, alphas, targets)
+        if req.params_b is None:
+            # one group: (1, ...) params, (1, B, ...) rows
+            params = jax.tree.map(
+                lambda a: jnp.asarray(a)[None], req.program.params)
+            return params, tuple(r[None] for r in rows), 1, B
+        # per-row params: B groups of one row each
+        params = jax.tree.map(lambda a: jnp.asarray(a), req.params_b)
+        return params, tuple(r[:, None] for r in rows), B, 1
+
+    # -- dispatch ----------------------------------------------------------
+    def solve_requests(self, requests) -> tuple:
+        """Concatenate the requests' spans into one padded (G, R) batch,
+        solve in a single device dispatch, and slice results back per
+        caller.
+
+        Every request must carry the same structure key — that is the
+        coalescing contract the service's grouping upholds.  Returns
+        ``(x: (B, D), f: (B, k), feasible: (B,))`` numpy arrays over the
+        concatenated (unpadded) spans, in request order.
+        """
+        requests = list(requests)
+        if not requests:
+            raise ValueError("solve_requests needs at least one request")
+        r0 = requests[0]
+        skey = self.structure_key(r0.program, r0.encoder, r0.cfg, r0.use_std)
+        for r in requests[1:]:
+            other = self.structure_key(r.program, r.encoder, r.cfg, r.use_std)
+            if other != skey:
+                raise ValueError(
+                    "solve_requests spans mix structure keys — group by "
+                    "ProbeExecutor.structure_key before dispatching")
+        parts = [self._materialize(r) for r in requests]
+        G = sum(p[2] for p in parts)
+        R = max(p[3] for p in parts)
+        S = int(jnp.shape(parts[0][1][0])[-2])
+        D = int(jnp.shape(parts[0][1][0])[-1])
+        k = int(jnp.shape(parts[0][1][1])[-1])
+        base_key = (skey, k, S, D)
+        with self._lock:
+            Gp, Rp = self._choose_buckets(base_key, G, R)
+            key = (*base_key, Gp, Rp)
+            fn = self._programs.pop(key, None)  # re-insert as newest (LRU)
+            if fn is None:
+                fn = self._build(r0, Gp, Rp, skey)
+                self._built_buckets.setdefault(base_key, set()).add((Gp, Rp))
+            self._programs[key] = fn
+            while len(self._programs) > self.max_programs:
+                old = next(iter(self._programs))
+                self._programs.pop(old)
+                built = self._built_buckets.get(old[:-2])
+                if built is not None:
+                    built.discard(old[-2:])
+        # pad each part's rows to Rp, concatenate groups, pad groups to Gp
+        params = jax.tree.map(
+            lambda *ls: jnp.concatenate(ls, axis=0),
+            *[p[0] for p in parts])
+        rows = [
+            jnp.concatenate(
+                [pad_rows(p[1][i], Rp - p[3], axis=1) for p in parts],
+                axis=0)
+            for i in range(N_ROW_FIELDS)
+        ]
+        if Gp != G:
+            params, rows = pad_rows((params, rows), Gp - G)
+        x, f, feas = fn(params, *rows)
+        # slice back: group g contributes its first n_rows rows
+        outs_x, outs_f, outs_feas = [], [], []
+        g0 = 0
+        for _, _, n_groups, n_rows in parts:
+            span_x = x[g0: g0 + n_groups, :n_rows]
+            outs_x.append(np.asarray(span_x).reshape(-1, span_x.shape[-1]))
+            span_f = f[g0: g0 + n_groups, :n_rows]
+            outs_f.append(np.asarray(span_f).reshape(-1, span_f.shape[-1]))
+            outs_feas.append(
+                np.asarray(feas[g0: g0 + n_groups, :n_rows]).reshape(-1))
+            g0 += n_groups
+        with self._lock:  # shared executors: keep telemetry exact
+            self.dispatches += 1
+            self.probes += sum(p[2] * p[3] for p in parts)
+        return (np.concatenate(outs_x), np.concatenate(outs_f),
+                np.concatenate(outs_feas))
+
+    # -- batched evaluation (bounds estimation, frontier re-seeding) -------
+    def eval_batch(self, program: ParamProgram, X) -> Array:
+        """``(N, D) -> (N, k)`` through the program split: one jitted
+        vmapped forward per structure (params unbatched — they are shared
+        across rows here), padded to the shared bucket grid so equal-
+        architecture workloads reuse each other's traces."""
+        X = jnp.asarray(X)
+        N = X.shape[0]
+        key = ("eval", program.structure)
+        with self._lock:
+            fn = self._evals.pop(key, None)  # re-insert as newest (LRU)
+            if fn is None:
+                apply = program.apply
+                fn = jax.jit(jax.vmap(apply, in_axes=(None, 0)))
+                self.eval_compiles += 1
+            self._evals[key] = fn
+            while len(self._evals) > self.max_programs:
+                self._evals.pop(next(iter(self._evals)))
+        if N == 0:
+            # pad_rows cannot replicate a row of an empty batch; evaluate
+            # one dummy row and keep the empty slice (shape/dtype correct)
+            Xp = jnp.zeros((1, *X.shape[1:]), X.dtype)
+            return fn(program.params, Xp)[:0]
+        Np = bucket(N)
+        Xp = pad_rows(X, Np - N) if Np != N else X
+        return fn(program.params, Xp)[:N]
+
+
+# ---------------------------------------------------------------------------
+# The process-default executor: solvers constructed outside a service (the
+# baselines, solve_pf, grid_reference_solve) share one dispatch plane.
+# ---------------------------------------------------------------------------
+
+_DEFAULT: ProbeExecutor | None = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_executor() -> ProbeExecutor:
+    global _DEFAULT
+    if _DEFAULT is None:
+        with _DEFAULT_LOCK:
+            if _DEFAULT is None:
+                _DEFAULT = ProbeExecutor()
+    return _DEFAULT

@@ -29,6 +29,47 @@ def rbf_kernel(a: Array, b: Array, lengthscale: Array, variance: Array) -> Array
     return variance * jnp.exp(-0.5 * _sqdist(a / lengthscale, b / lengthscale))
 
 
+def _gp_program_apply(log_target: bool):
+    """Predictive mean over a padded-factor params pytree.
+
+    Train-set factors are padded to a power-of-two bucket with a validity
+    ``mask`` so the *shape* (and hence the compiled program) is stable
+    across retrains that stay within the bucket: masked columns contribute
+    exactly zero to ``kx @ alpha`` (alpha pad rows are zero too), so the
+    padded mean equals the unpadded one bit-for-bit up to reduction
+    order."""
+
+    def apply(p, x):
+        z = (x - p["x_mean"]) / p["x_std"]
+        kx = rbf_kernel(z[None, :], p["x_train"], p["lengthscale"],
+                        p["variance"])[0] * p["mask"]
+        out = kx @ p["alpha"] * p["y_std"] + p["y_mean"]
+        return jnp.exp(out) if log_target else out
+
+    return apply
+
+
+def _gp_program_std(log_target: bool):
+    """Predictive std over padded factors: ``chol`` is extended block-
+    diagonally with the identity, so the triangular solve's pad rows are
+    exactly zero (masked kx) and the variance reduction is unchanged."""
+
+    def apply_std(p, x):
+        z = (x - p["x_mean"]) / p["x_std"]
+        kx = rbf_kernel(z[None, :], p["x_train"], p["lengthscale"],
+                        p["variance"])[0] * p["mask"]
+        v = jax.scipy.linalg.solve_triangular(
+            p["chol"], kx[:, None], lower=True)[:, 0]
+        var = jnp.clip(p["variance"] - jnp.sum(v * v), 1e-12, None)
+        std = jnp.sqrt(var) * p["y_std"]
+        if log_target:
+            mu = kx @ p["alpha"] * p["y_std"] + p["y_mean"]
+            std = jnp.exp(mu) * std  # delta method
+        return std
+
+    return apply_std
+
+
 @dataclasses.dataclass
 class GPRegressor:
     """Fitted exact GP.  Differentiable predict; predictive std for the
@@ -52,6 +93,51 @@ class GPRegressor:
         mu = kx @ self.alpha
         out = (mu * self.y_std + self.y_mean).reshape(x.shape[:-1])
         return jnp.exp(out) if self.log_target else out
+
+    def structure_key(self, bucket_n: int | None = None) -> tuple:
+        """Compiled-shape identity: the padded train-set bucket plus the
+        static ``log_target`` flag.  GP factors (x_train, alpha, chol)
+        ride as data, so retrains whose train size stays within the same
+        bucket are pure params swaps."""
+        return ("gp", int(self._bucket_n(bucket_n)), bool(self.log_target))
+
+    def _bucket_n(self, bucket_n: int | None) -> int:
+        from repro.exec import bucket
+
+        n = int(self.x_train.shape[0])
+        nb = bucket(n, base=16) if bucket_n is None else int(bucket_n)
+        if nb < n:
+            raise ValueError(f"bucket_n={nb} smaller than train set ({n})")
+        return nb
+
+    def as_program(self, bucket_n: int | None = None):
+        """The ``(structure_key, params)`` split for the probe executor:
+        padded factors + validity mask (see the program builders above for
+        why padding is exact)."""
+        from repro.exec import ParamProgram
+
+        n = int(self.x_train.shape[0])
+        nb = self._bucket_n(bucket_n)
+        pad = nb - n
+        x_train = jnp.pad(self.x_train, ((0, pad), (0, 0)))
+        alpha = jnp.pad(self.alpha, (0, pad))
+        chol = jnp.pad(self.chol, ((0, pad), (0, pad)))
+        if pad:
+            idx = jnp.arange(n, nb)
+            chol = chol.at[idx, idx].set(1.0)
+        mask = (jnp.arange(nb) < n).astype(self.alpha.dtype)
+        params = {
+            "x_train": x_train, "alpha": alpha, "chol": chol, "mask": mask,
+            "lengthscale": self.lengthscale, "variance": self.variance,
+            "x_mean": self.x_mean, "x_std": self.x_std,
+            "y_mean": self.y_mean, "y_std": self.y_std,
+        }
+        return ParamProgram(
+            apply=_gp_program_apply(bool(self.log_target)),
+            params=params,
+            structure=self.structure_key(nb),
+            apply_std=_gp_program_std(bool(self.log_target)),
+        )
 
     def predict_std(self, x: Array) -> Array:
         z = jnp.atleast_2d((x - self.x_mean) / self.x_std)

@@ -77,6 +77,38 @@ def mc_dropout_stats(
     return outs.mean(0), outs.std(0)
 
 
+def _mlp_program_apply(log_target: bool):
+    """Generic standardized-MLP forward over a params pytree — the
+    data half of the ``(structure, params)`` split.  Behavior depends
+    only on the static ``log_target`` flag and the params *shapes*, so
+    every regressor with equal :meth:`MLPRegressor.structure_key` traces
+    one identical program."""
+
+    def apply(p, x):
+        z = (x - p["x_mean"]) / p["x_std"]
+        y = (mlp_forward(p["layers"], z) * p["y_std"] + p["y_mean"])[..., 0]
+        return jnp.exp(y) if log_target else y
+
+    return apply
+
+
+def _mlp_program_std(log_target: bool, dropout: float, n_samples: int):
+    """MC-dropout predictive std as a params-as-data program (mirrors
+    :meth:`MLPRegressor.predict_std` with its deterministic default key)."""
+
+    def apply_std(p, x):
+        z = (x - p["x_mean"]) / p["x_std"]
+        mu, s = mc_dropout_stats(p["layers"], z, jax.random.PRNGKey(0),
+                                 dropout=dropout, n_samples=n_samples)
+        std = (s * p["y_std"])[..., 0]
+        if log_target:
+            mu = (mu * p["y_std"] + p["y_mean"])[..., 0]
+            std = jnp.exp(mu) * std
+        return std
+
+    return apply_std
+
+
 @dataclasses.dataclass
 class MLPRegressor:
     """Standardizing wrapper: stores feature/target moments with params so
@@ -96,6 +128,34 @@ class MLPRegressor:
         z = (x - self.x_mean) / self.x_std
         y = (mlp_forward(self.params, z) * self.y_std + self.y_mean)[..., 0]
         return jnp.exp(y) if self.log_target else y
+
+    def structure_key(self, n_samples: int = 16) -> tuple:
+        """The compiled-shape identity of this regressor: layer dims plus
+        every static flag its forward/std programs branch on.  Two
+        regressors with equal structure keys (different weights) share one
+        executor-compiled program — weights ride as data."""
+        return ("mlp", self.spec.layer_dims, bool(self.log_target),
+                float(self.dropout), int(n_samples))
+
+    def as_program(self, n_samples: int = 16):
+        """The ``(structure_key, params)`` split for the probe executor
+        (DESIGN.md §10): a :class:`~repro.exec.ParamProgram` whose params
+        pytree is THIS regressor's weights and moments.  A retrained
+        model of the same architecture is a pure params swap."""
+        from repro.exec import ParamProgram
+
+        params = {
+            "layers": [dict(layer) for layer in self.params],
+            "x_mean": self.x_mean, "x_std": self.x_std,
+            "y_mean": self.y_mean, "y_std": self.y_std,
+        }
+        return ParamProgram(
+            apply=_mlp_program_apply(bool(self.log_target)),
+            params=params,
+            structure=self.structure_key(n_samples),
+            apply_std=_mlp_program_std(bool(self.log_target),
+                                       float(self.dropout), int(n_samples)),
+        )
 
     def predict_std(self, x: Array, key: Array | None = None,
                     n_samples: int = 16) -> Array:

@@ -127,6 +127,30 @@ class ModelSnapshot:
             return None
         return tuple(m.params for m in self.models)
 
+    def program(self):
+        """The snapshot's ``(structure_key, params)`` split for the probe
+        executor (DESIGN.md §10): one stacked
+        :class:`~repro.exec.ParamProgram` whose params pytree is this
+        version's weights/factors.  Promoting a new version of the same
+        architecture is a pure params swap — downstream solvers reuse the
+        already-compiled executor program (warm re-solve, zero
+        recompilation).  None when any per-objective regressor lacks a
+        split (exotic backends fall back to the closure path)."""
+        cached = getattr(self, "_program", None)
+        if cached is not None:
+            return cached
+        from repro.exec import stack_programs
+
+        progs = []
+        for m in self.models:
+            as_program = getattr(m, "as_program", None)
+            if as_program is None:
+                return None
+            progs.append(as_program())
+        prog = stack_programs(progs)
+        self._program = prog
+        return prog
+
 
 @dataclasses.dataclass
 class WorkloadRecord:
@@ -442,6 +466,11 @@ class ModelRegistry:
                             else UtopiaNearest()),
                 model_id=("modelserver", sig, snap.version),
                 name=rec.name,
+                # params-as-data split: sessions over different workloads
+                # sharing this snapshot's architecture coalesce into one
+                # executor dispatch, and a version bump reuses the
+                # compiled program with the new weights as data
+                program=snap.program(),
             )
 
     def snapshot(self, sig: str) -> ModelSnapshot | None:

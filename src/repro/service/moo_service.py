@@ -37,9 +37,10 @@ import numpy as np
 
 from repro.core import MOGDConfig, MOOProblem, ProgressiveFrontier
 from repro.core.dag import ComposedFrontier, JobDAG
-from repro.core.mogd import MOGDSolver
+from repro.core.mogd import MOGDSolver, solve_grouped
 from repro.core.progressive_frontier import PFResult, PFState, coalesce_step
 from repro.core.task import Preference, TaskSpec, preference_from_legacy
+from repro.exec import ProbeExecutor
 
 
 @dataclasses.dataclass
@@ -125,6 +126,9 @@ class MOOService:
         max_cached_tasks: int = 512,
         use_kernel: bool = False,
         kernel_interpret: bool = True,
+        executor: ProbeExecutor | None = None,
+        mesh=None,
+        structure_coalescing: bool = True,
     ):
         self.default_mogd = mogd
         self.default_mode = mode
@@ -134,6 +138,17 @@ class MOOService:
         self.max_cached_tasks = max_cached_tasks
         self.use_kernel = use_kernel
         self.kernel_interpret = kernel_interpret
+        # The service's dispatch plane (DESIGN.md §10): ALL MOGD work of
+        # every session goes through this one executor, so compiled
+        # programs — and their compile-count telemetry — are shared
+        # service-wide.  ``mesh`` opts the probe batch axis into device
+        # sharding (see repro.distributed.sharding.probe_mesh).
+        self.executor = (executor if executor is not None
+                         else ProbeExecutor(mesh=mesh))
+        # structure_coalescing=False restores the legacy per-tenant
+        # dispatch (group by exact solver identity, opaque closures) —
+        # kept as the benchmark baseline.
+        self.structure_coalescing = structure_coalescing
         self._sessions: dict[str, _Session] = {}
         self._dags: dict[str, _DagSession] = {}
         # (signature, mogd) -> compiled solver; keeps the problem that built
@@ -162,7 +177,11 @@ class MOOService:
         if key in self._solvers:
             self.solver_cache_hits += 1
             return self._solvers[key][0]
-        solver = problem.solver_for(mogd)
+        # solvers are thin frontends over the service executor: a new
+        # solver whose problem shares a program structure with earlier
+        # work reuses the already-compiled executor program
+        solver = MOGDSolver(problem, mogd, executor=self.executor,
+                            split_params=self.structure_coalescing)
         self._solvers[key] = (solver, problem)
         return solver
 
@@ -599,9 +618,16 @@ class MOOService:
                     if not len(sess.state.queue):
                         continue  # exhausted — frontier is final
                     if sess.engine.mode == "AP":
-                        # group by the content-addressed solver-cache key
-                        # (signature + MOGD config) — never id()
-                        key = (*sess.solver_key, sess.engine.target)
+                        # group by the executor structure key: sessions
+                        # over DIFFERENT workloads batch into one dispatch
+                        # when their programs share a compiled structure
+                        # (params ride as data; target/bounds per box).
+                        # Legacy mode groups by the content-addressed
+                        # solver-cache key instead — never id()
+                        if self.structure_coalescing:
+                            key = sess.engine.solver.dispatch_key()
+                        else:
+                            key = (*sess.solver_key, sess.engine.target)
                         groups.setdefault(key, []).append(sess)
                     else:
                         singles.append(sess)
@@ -624,14 +650,17 @@ class MOOService:
         return stats
 
     def _coalesced_step(self, sessions: list[_Session]) -> int:
-        """One shared MOGD dispatch over every session's pending cells
-        (``core.progressive_frontier.coalesce_step`` with the sessions'
-        shared solver)."""
-        engine = sessions[0].engine
+        """One shared executor dispatch over every session's pending cells
+        (``core.progressive_frontier.coalesce_step`` +
+        ``core.mogd.solve_grouped``): each session's solver contributes
+        its own params/bounds/target as per-box data, so sessions over
+        different workloads — same model architecture — still share the
+        single compiled program and the single device dispatch."""
         total = coalesce_step(
             [(s.engine, s.state) for s in sessions],
-            lambda boxes, _prepared: engine.solver.solve(
-                boxes, target=engine.target),
+            lambda _boxes, prepared: solve_grouped(
+                [(engine.solver, boxes, engine.target)
+                 for engine, _state, _cells, boxes in prepared]),
         )
         if total:
             self.coalesced_batches += 1
@@ -743,6 +772,11 @@ class MOOService:
                 "problem_cache_hits": self.problem_cache_hits,
                 "coalesced_batches": self.coalesced_batches,
                 "coalesced_probes": self.coalesced_probes,
+                # executor plane telemetry (DESIGN.md §10): distinct
+                # compiled structures, total jit builds, dispatches
+                "executor_structures": self.executor.structures_compiled,
+                "executor_compiles": self.executor.total_compiles,
+                "executor_dispatches": self.executor.dispatches,
                 "watched_workloads": len(self._watch),
                 "stale_sessions": sum(
                     1 for s in self._sessions.values() if s.stale),

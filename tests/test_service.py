@@ -96,12 +96,84 @@ class TestSessions:
         def boom(*a, **k):
             raise RuntimeError("device lost")
 
-        monkeypatch.setattr(sess.engine.solver, "solve", boom)
+        # every coalesced dispatch goes through the service executor
+        monkeypatch.setattr(svc.executor, "solve_requests", boom)
         with pytest.raises(RuntimeError):
             svc.step_all()
         # no uncertain space leaked, no probes charged
         assert sess.state.queue.total_volume == pytest.approx(vol, rel=1e-9)
         assert sess.state.probes == probes
+
+
+class TestEviction:
+    """Audit of ``_evict_cold_tasks`` (PR 5 satellite): eviction walks the
+    problem cache in LRU order but explicitly skips every signature with
+    an open session (``live``), so cache pressure from one-shot tasks can
+    never evict a live tenant's compiled problem or solver.  The audit
+    found the pin already present; these tests pin the pin."""
+
+    def test_open_session_survives_cache_pressure(self):
+        svc = MOOService(mogd=FAST, batch_rects=2, max_cached_tasks=3)
+        sid = svc.create_session(zdt1_task())
+        svc.probe(sid, n_probes=6)
+        sess = svc._sessions[sid]
+        live_sig, live_solver_key = sess.signature, sess.solver_key
+        # a stream of distinct one-shot tasks churns the LRU cache
+        for d in range(3, 12):
+            one_shot = svc.create_session(zdt1_task(d=d))
+            svc.close_session(one_shot)
+        assert len(svc._problems) <= svc.max_cached_tasks
+        # the open session's compiled problem and solver are pinned ...
+        assert live_sig in svc._problems
+        assert live_solver_key in svc._solvers
+        assert svc._sessions[sid].problem is svc._problems[live_sig]
+        # ... and the session still probes fine under pressure
+        before = svc.session_info(sid).probes
+        svc.probe(sid, n_probes=4)
+        assert svc.session_info(sid).probes > before
+
+    def test_closed_sessions_do_get_evicted(self):
+        svc = MOOService(mogd=FAST, max_cached_tasks=2)
+        sigs = []
+        for d in range(3, 8):
+            sid = svc.create_session(zdt1_task(d=d))
+            sigs.append(svc._sessions[sid].signature)
+            svc.close_session(sid)
+        assert len(svc._problems) <= 2
+        # oldest cold signatures are gone, with their solvers
+        assert sigs[0] not in svc._problems
+        assert all(k[0] != sigs[0] for k in svc._solvers)
+
+
+class TestStructureCoalescing:
+    """Sessions over DIFFERENT workloads sharing a model architecture
+    batch into one executor dispatch (DESIGN.md §10)."""
+
+    def _mlp_spec(self, i, d=3, arch=(8, 8)):
+        from repro.core.synthetic import mlp_surrogate_task
+
+        return mlp_surrogate_task(seed=i, d=d, arch=arch, name=f"wl-{i}")
+
+    def test_distinct_workloads_one_structure_one_batch(self):
+        svc = MOOService(mogd=FAST, batch_rects=2)
+        specs = [self._mlp_spec(i) for i in range(4)]
+        assert len({s.signature() for s in specs}) == 4
+        for s in specs:
+            svc.create_session(s)
+        out = svc.step_all()
+        st = svc.stats()
+        # 4 tenants, ONE coalesced batch, ONE compiled structure
+        assert out["sessions"] == 4 and out["batches"] == 1
+        assert st["executor_structures"] == 1
+
+    def test_legacy_mode_dispatches_per_tenant(self):
+        svc = MOOService(mogd=FAST, batch_rects=2,
+                         structure_coalescing=False)
+        for i in range(4):
+            svc.create_session(self._mlp_spec(i))
+        out = svc.step_all()
+        assert out["sessions"] == 4 and out["batches"] == 4
+        assert svc.stats()["executor_structures"] == 4
 
 
 class TestResume:
