@@ -1,0 +1,219 @@
+"""expt7: device-scaling of probes/sec for the grouped (G, R) probe batch.
+
+Strong and weak scaling of the probe-executor mesh path from 1 to 8
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), with
+the partitioning policy — not the caller — choosing the sharded axis:
+
+* **strong** — a fixed 8-tenant mix (G=8 groups x R rows): the policy
+  shards the *group* axis, keeping each tenant's surrogate weights
+  device-local;
+* **weak** — one tenant whose probe grid grows with the device count
+  (G=1, R = base x n): the policy shards the *row* axis;
+* **default-on** — a ``ProbeExecutor()`` constructed with no mesh
+  argument must shard by itself in the 8-device process, and its
+  frontier hypervolume must match the unsharded executor to ±0.5%.
+
+Honesty note on emulated devices: the 1→8 "devices" of this benchmark
+time-share one host CPU, so aggregate wall-clock cannot show parallel
+speedup — what the emulation *does* measure is everything sharding adds
+on top of the compute: ``shard_map`` dispatch, policy bucket padding,
+and result gathering.  We report ``overhead_eff = t_unsharded /
+t_sharded`` at equal total work (ideal 1.0) and project the n-device
+rate as ``n x rate_1 x overhead_eff`` — near-linear iff the overhead
+efficiency stays high.  CI gates the overhead efficiency, the policy's
+axis choices, and hypervolume parity.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import emit, write_json
+
+CHILD = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import json, time
+    import numpy as np
+    import jax
+
+    from repro.core.mogd import (MOGDConfig, MOGDSolver,
+                                 estimate_objective_bounds, solve_grouped)
+    from repro.core.pareto import hypervolume
+    from repro.core.synthetic import mlp_surrogate_task
+    from repro.distributed.sharding import probe_mesh
+    from repro.exec import ProbeExecutor
+
+    quick = bool(int(sys.argv[1]))
+    assert len(jax.devices()) == 8
+    cfg = MOGDConfig(steps=40 if quick else 80,
+                     multistart=4 if quick else 8)
+    R_STRONG = 8 if quick else 32       # rows per tenant, fixed mix
+    B_WEAK = 32 if quick else 128       # per-device rows, weak scaling
+    REPS = 3
+    NS = [1, 2, 4, 8]
+
+    tasks = [mlp_surrogate_task(seed=i, d=3, arch=(16, 16), k=2)
+             for i in range(8)]
+    problems = [t.compile() for t in tasks]
+
+    def boxes_for(problem, n, seed):
+        b = estimate_objective_bounds(problem, n=128, seed=seed)
+        rng = np.random.default_rng(seed)
+        lo = b[0] + rng.random((n, 2)) * 0.3 * (b[1] - b[0])
+        return np.stack([lo, lo + 0.5 * (b[1] - b[0])], axis=1)
+
+    def timed(fn):
+        fn()  # warm: compile + first dispatch
+        best = float("inf")  # best-of-N: emulated devices time-share one
+        for _ in range(REPS):  # core, so mean timing is jitter-dominated
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    def strong_run(ex):
+        items = [(MOGDSolver(p, cfg, executor=ex),
+                  boxes_for(p, R_STRONG, seed=i), 0)
+                 for i, p in enumerate(problems)]
+        return timed(lambda: solve_grouped(items))
+
+    def weak_run(ex, B):
+        solver = MOGDSolver(problems[0], cfg, executor=ex)
+        bx = boxes_for(problems[0], B, seed=0)
+        return timed(lambda: solver.solve(bx))
+
+    out = {"strong": [], "weak": [], "cfg_steps": cfg.steps}
+
+    t_ns, _ = strong_run(ProbeExecutor(mesh=None))
+    for n in NS:
+        ex = ProbeExecutor(mesh=probe_mesh(n))
+        t, _ = strong_run(ex)
+        out["strong"].append({
+            "n": n, "t_s": t, "t_nomesh_s": t_ns,
+            "probes": 8 * R_STRONG,
+            "axis": ex.last_shard_axis,
+            "sharded": ex.sharded_dispatches > 0,
+            "overhead_eff": t_ns / t,
+        })
+
+    for n in NS:
+        B = B_WEAK * n
+        t_n, _ = weak_run(ProbeExecutor(mesh=None), B)
+        ex = ProbeExecutor(mesh=probe_mesh(n))
+        t, _ = weak_run(ex, B)
+        out["weak"].append({
+            "n": n, "t_s": t, "t_nomesh_s": t_n, "probes": B,
+            "axis": ex.last_shard_axis,
+            "sharded": ex.sharded_dispatches > 0,
+            "overhead_eff": t_n / t,
+        })
+
+    # default-on + hypervolume parity: no mesh argument anywhere
+    def frontier(ex):
+        items = [(MOGDSolver(p, cfg, executor=ex),
+                  boxes_for(p, R_STRONG, seed=100 + i), 0)
+                 for i, p in enumerate(problems)]
+        r = solve_grouped(items)
+        return [r.f[i * R_STRONG:(i + 1) * R_STRONG][
+                    r.feasible[i * R_STRONG:(i + 1) * R_STRONG]]
+                for i in range(8)]
+
+    ex_auto = ProbeExecutor()          # the promoted default: auto mesh
+    ex_off = ProbeExecutor(mesh=None)
+    fa, fo = frontier(ex_auto), frontier(ex_off)
+    hv_diffs = []
+    for pa, po in zip(fa, fo):
+        if len(pa) == 0 and len(po) == 0:
+            continue
+        allp = np.concatenate([p for p in (pa, po) if len(p)])
+        ref = allp.max(axis=0) * 1.1 + 0.1
+        ha, ho = hypervolume(pa, ref), hypervolume(po, ref)
+        if max(ha, ho) > 0:
+            hv_diffs.append(abs(ha - ho) / max(ha, ho))
+    out["auto"] = {
+        "mesh_devices": 0 if ex_auto.mesh is None
+        else int(ex_auto.mesh.devices.size),
+        "sharded_dispatches": ex_auto.sharded_dispatches,
+        "axis": ex_auto.last_shard_axis,
+        "fused_dispatches": ex_auto.stats()["fused_dispatches"],
+        "hv_rel_diff": max(hv_diffs) if hv_diffs else 0.0,
+        "tenants_scored": len(hv_diffs),
+    }
+    print("EXPT7=" + json.dumps(out))
+""")
+
+
+def run(quick: bool = True) -> dict:
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu"}
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.pathsep.join([src] + sys.path)
+    proc = subprocess.run(
+        [sys.executable, "-c", CHILD, str(int(quick))],
+        capture_output=True, text=True, env=env,
+        timeout=1800 if quick else 5400)
+    if proc.returncode != 0:
+        raise RuntimeError(f"expt7 child failed:\n{proc.stderr[-4000:]}")
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("EXPT7="))
+    out = json.loads(line[len("EXPT7="):])
+
+    rows = []
+    for mode in ("strong", "weak"):
+        rate_1 = out[mode][0]["probes"] / out[mode][0]["t_nomesh_s"]
+        for r in out[mode]:
+            projected = r["n"] * rate_1 * min(1.0, r["overhead_eff"])
+            rows.append({
+                "mode": mode, "devices": r["n"], "probes": r["probes"],
+                "axis": r["axis"], "t_s": r["t_s"],
+                "measured_probes_per_s": r["probes"] / r["t_s"],
+                "overhead_eff": r["overhead_eff"],
+                "projected_probes_per_s": projected,
+                "projected_scaling": projected / rate_1,
+            })
+            r["projected_scaling"] = projected / rate_1
+    emit(rows, "expt7_scaling")
+
+    auto = out["auto"]
+    weak8 = next(r for r in out["weak"] if r["n"] == 8)
+    summary = {
+        "auto_mesh_devices": auto["mesh_devices"],
+        "auto_sharded_dispatches": auto["sharded_dispatches"],
+        "auto_axis": auto["axis"],
+        "auto_fused_dispatches": auto["fused_dispatches"],
+        "hv_rel_diff": auto["hv_rel_diff"],
+        "tenants_scored": auto["tenants_scored"],
+        "min_overhead_eff": min(
+            r["overhead_eff"] for m in ("strong", "weak") for r in out[m]
+            if r["n"] > 1),
+        "weak_projected_scaling_8dev": weak8["projected_scaling"],
+        "rows": rows,
+    }
+    # gates (bench-smoke CI): the policy picks the right axis per mix with
+    # no caller opt-in, sharding overhead stays small enough for
+    # near-linear projected weak scaling, and frontiers agree on HV
+    assert auto["mesh_devices"] == 8 and auto["sharded_dispatches"] > 0, auto
+    assert auto["axis"] == "group", auto  # 8-tenant mix -> group axis
+    assert auto["fused_dispatches"] > 0, auto  # MLP mix rides the kernel
+    assert auto["hv_rel_diff"] <= 0.005, auto  # +-0.5% hypervolume
+    for r in out["strong"]:
+        if r["n"] > 1:
+            assert r["sharded"] and r["axis"] == "group", r
+    for r in out["weak"]:
+        if r["n"] > 1:
+            assert r["sharded"] and r["axis"] == "row", r
+    assert summary["min_overhead_eff"] >= 0.5, summary
+    assert summary["weak_projected_scaling_8dev"] >= 8 * 0.5, summary
+    write_json("expt7_scaling", summary, quick)
+    return summary
+
+
+if __name__ == "__main__":
+    run()

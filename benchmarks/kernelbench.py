@@ -1,7 +1,22 @@
 """Kernel layer benchmark: correctness deltas vs oracles at realistic
 shapes + static VMEM working-set accounting per BlockSpec (the quantity
 the TPU tiling is designed around — wall-clock on this CPU container would
-measure the interpreter, not the kernel)."""
+measure the interpreter, not the kernel).
+
+The fused MOGD descend loop additionally reports, at the paper's
+production shape (B = cells x starts, 4x128 MLP, k=2):
+
+* parity of the fused tiers against the autodiff oracle;
+* the *measured* CPU ratio of the hand-written-backward XLA tier vs the
+  ``adam_project_descend`` scan path (CPU XLA already fuses the small
+  matmul chain, so this ratio is ~1 — reported for honesty, not gated);
+* the *modeled* compiled-backend (TPU-class) speedup from a roofline
+  memory-traffic model: the scan path round-trips activations, gradient,
+  and Adam state through HBM every step, while the fused kernel keeps
+  them VMEM-resident, leaving only the compute floor.  CI gates this
+  model at >= 2x — it is the quantity the kernel's VMEM plan is designed
+  around (DESIGN.md §11), where CPU wall-clock would measure nothing.
+"""
 
 from __future__ import annotations
 
@@ -9,9 +24,71 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.mogd import MOGDConfig
+from repro.exec.executor import _eq4_loss, adam_project_descend
 from repro.kernels import ops, ref
+from repro.kernels.mogd_descend import DescendPlan, descend_batch, fold_affine
 
-from .common import Timer, emit
+from .common import Timer, emit, write_json
+
+# Roofline constants for the modeled compiled-backend speedup: fp32 MXU
+# throughput and *achievable* HBM bandwidth (~75% of peak) for a TPU-v4
+# class part.  The model only needs their ratio to be representative.
+_FLOPS = 68.5e12
+_HBM_BPS = 0.9e12
+
+
+def _descend_roofline(dims, k: int, steps: int) -> dict:
+    """Per-row-step roofline for the MOGD inner loop at one MLP shape.
+
+    FLOPs: forward + input-gradient backward are each one matmul chain
+    (2 * sum(Din*Dout)); no weight gradients exist in the loop.  Bytes,
+    scan path: every activation is written in the forward and re-read in
+    the backward, the gradient is materialized, and x/m/v round-trip per
+    step.  Bytes, fused: x0 in and x out once per *descent* plus the
+    per-tile weight load — amortized over steps, negligible."""
+    edges = sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+    acts = sum(dims[1:])
+    D = dims[0]
+    flops = 4.0 * edges * k  # fwd 2*edges + bwd 2*edges, per objective
+    bytes_scan = (3 * acts * 4) * k + 7 * D * 4  # acts w+r, grad, x/m/v rw
+    bytes_fused_per_descent = 2 * D * 4 + (edges + acts) * 4 / 256.0
+    t_flop = flops / _FLOPS
+    t_scan = max(t_flop, bytes_scan / _HBM_BPS)
+    t_fused = max(t_flop, bytes_fused_per_descent / steps / _HBM_BPS)
+    return {
+        "flops_per_row_step": flops,
+        "bytes_per_row_step_scan": bytes_scan,
+        "modeled_speedup": t_scan / t_fused,
+    }
+
+
+def _descend_inputs(key, dims, k, G, R, S):
+    """Random stacked-MLP params (leading G) + a grouped probe batch."""
+    params = []
+    for _ in range(k):
+        layers = []
+        for i in range(len(dims) - 1):
+            key, kw = jax.random.split(key)
+            layers.append({
+                "w": jax.random.normal(kw, (G, dims[i], dims[i + 1]))
+                * jnp.sqrt(2.0 / dims[i]),
+                "b": jnp.zeros((G, dims[i + 1])),
+            })
+        params.append({
+            "layers": layers,
+            "x_mean": jnp.zeros((G, dims[0])),
+            "x_std": jnp.ones((G, dims[0])),
+            "y_mean": jnp.zeros((G,)), "y_std": jnp.ones((G,)),
+        })
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    x0s = jax.random.uniform(k1, (G, R, S, dims[0]))
+    los = jax.random.normal(k2, (G, R, k)) - 1.0
+    his = los + 3.0
+    targets = jax.random.randint(k3, (G, R), 0, k)
+    ulos, uhis = los - 1.0, his + 1.0
+    uscales = jnp.ones((G, R, k))
+    return tuple(params), (x0s, los, his, ulos, uhis, uscales, targets), key
 
 
 def _vmem_bytes(*tiles):
@@ -37,6 +114,87 @@ def run(quick: bool = True) -> dict:
         "max_err": float(np.abs(got - want).max()),
         "ref_jnp_s": t_ref.s,
         "vmem_tile_KB": _vmem_bytes((256, 128), (128, 128)) // 1024,
+    })
+
+    # mogd_descend: the fused inner loop, parity + throughput + roofline.
+    # The scan path below is the executor's jnp semantics verbatim
+    # (autodiff Eq.4 gradient inside adam_project_descend), so the
+    # parity row checks the hand-written backward against autodiff.
+    def scan_path(cfg, wbs_g, x0s, los, his, ulos, uhis, uscales, targets):
+        pen, tie = cfg.penalty, cfg.tie_break_eps
+
+        def group(wbs, x0s_g, lo, hi, ulo, uhi, us, tg):
+            def row(x0_s, lo_r, hi_r, ulo_r, uhi_r, us_r, t_r):
+                def loss_fn(xx):
+                    f = jnp.stack([
+                        ref.mlp_forward(xx[None], w_, b_)[0, 0]
+                        for w_, b_ in wbs])
+                    excess = (jnp.maximum(ulo_r - f, 0.0)
+                              + jnp.maximum(f - uhi_r, 0.0))
+                    bound = jnp.where(
+                        excess > 0.0, (excess / us_r) ** 2 + pen, 0.0).sum()
+                    return _eq4_loss(f, lo_r, hi_r, t_r, pen, tie) + bound
+
+                return jax.vmap(
+                    lambda x0: adam_project_descend(loss_fn, x0, cfg))(x0_s)
+
+            return jax.vmap(row)(x0s_g, lo, hi, ulo, uhi, us, tg)
+
+        return jax.vmap(group)(wbs_g, x0s, los, his, ulos, uhis, uscales,
+                               targets)
+
+    # parity at a small shape (the Pallas interpreter is the bottleneck)
+    sdims = (8, 32, 32, 1)
+    scfg = MOGDConfig(steps=30, multistart=2)
+    splan = DescendPlan((sdims,) * 2, (False, False), (1.0, 1.0))
+    sparams, sbatch, _ = _descend_inputs(
+        jax.random.PRNGKey(7), sdims, k=2, G=2, R=8, S=2)
+    sfolded = fold_affine(splan, sparams)
+    with Timer() as t_ref:
+        want_d = np.asarray(scan_path(scfg, sfolded, *sbatch))
+    got_d = np.asarray(descend_batch(
+        splan, scfg, sparams, *sbatch, impl="pallas", interpret=True)
+    ).reshape(want_d.shape)
+    rows.append({
+        "kernel": "mogd_descend", "shape": "G=2,R=8,S=2,2x32",
+        "max_err": float(np.abs(got_d - want_d).max()),
+        "ref_jnp_s": t_ref.s,
+        "vmem_tile_KB": _vmem_bytes(
+            *[(a, b) for a, b in zip(sdims[:-1], sdims[1:])] * 2,
+            (256, sdims[0]), (256, sdims[0]), (256, sdims[0]),
+            (256, max(sdims))) // 1024,
+    })
+
+    # throughput at the paper shape: B = cells x starts, 4x128 MLP, k=2
+    pdims = (12, 128, 128, 128, 128, 1)
+    pcfg = MOGDConfig(steps=40 if quick else 120, multistart=16)
+    pplan = DescendPlan((pdims,) * 2, (False, False), (1.0, 1.0))
+    R_cells = 64 if quick else 256
+    pparams, pbatch, _ = _descend_inputs(
+        jax.random.PRNGKey(8), pdims, k=2, G=1, R=R_cells, S=16)
+    B = R_cells * 16
+    pfolded = fold_affine(pplan, pparams)
+    scan_fn = jax.jit(lambda wbs, *b: scan_path(pcfg, wbs, *b))
+    fused_fn = jax.jit(
+        lambda ps, *b: descend_batch(pplan, pcfg, ps, *b, impl="xla"))
+    scan_fn(pfolded, *pbatch)[0].block_until_ready()  # warm
+    fused_fn(pparams, *pbatch)[0].block_until_ready()
+    with Timer() as t_scan:
+        scan_fn(pfolded, *pbatch)[0].block_until_ready()
+    with Timer() as t_fused:
+        fused_fn(pparams, *pbatch)[0].block_until_ready()
+    roof = _descend_roofline(pdims, k=2, steps=pcfg.steps)
+    rows.append({
+        "kernel": "mogd_descend_tput", "shape": f"B={B},4x128,k=2",
+        "max_err": 0.0,
+        "scan_s": t_scan.s, "fused_xla_s": t_fused.s,
+        "cpu_probes_per_s_scan": B / t_scan.s,
+        "cpu_probes_per_s_fused": B / t_fused.s,
+        "modeled_tpu_speedup": roof["modeled_speedup"],
+        "vmem_tile_KB": _vmem_bytes(
+            *[(a, b) for a, b in zip(pdims[:-1], pdims[1:])] * 2,
+            *[(256, d) for d in pdims[:1] * 4],
+            (256, 128), (256, 128)) // 1024,
     })
 
     # pareto_filter at frontier-trace scale
@@ -101,8 +259,23 @@ def run(quick: bool = True) -> dict:
         "vmem_tile_KB": _vmem_bytes((512, 16), (128, 512)) // 1024,
     })
     emit(rows, "kernels")
-    return {"kernels": len(rows),
-            "all_close": all(r["max_err"] < 0.05 for r in rows)}
+    descend = next(r for r in rows if r["kernel"] == "mogd_descend")
+    tput = next(r for r in rows if r["kernel"] == "mogd_descend_tput")
+    summary = {
+        "kernels": len(rows),
+        "all_close": all(r.get("max_err", 0.0) < 0.05 for r in rows),
+        "descend_max_err": descend["max_err"],
+        "descend_cpu_ratio": tput["scan_s"] / tput["fused_xla_s"],
+        "modeled_tpu_speedup": tput["modeled_tpu_speedup"],
+        "rows": rows,
+    }
+    # bench-smoke gates: hand-written backward == autodiff end states, and
+    # the compiled-backend roofline model clears the 2x bar
+    assert summary["all_close"], rows
+    assert descend["max_err"] < 5e-4, descend
+    assert tput["modeled_tpu_speedup"] >= 2.0, tput
+    write_json("kernelbench", summary, quick)
+    return summary
 
 
 if __name__ == "__main__":

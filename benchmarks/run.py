@@ -27,6 +27,7 @@ SUITES = [
     "expt5_multistage",  # composed per-stage vs flattened tuning (DAG)
     "expt6_adaptive",    # online model server: drift -> warm re-solve
     "kernelbench",       # kernel vs oracle + VMEM accounting
+    "expt7_scaling",     # device-scaling: mesh probe sharding 1->8 devices
 ]
 
 

@@ -26,7 +26,8 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 RESULTS = REPO / "results"
 
 # benchmarks with a smoke mode cheap enough for per-PR CI
-DEFAULT = ["service_throughput", "expt5_multistage", "expt6_adaptive"]
+DEFAULT = ["service_throughput", "expt5_multistage", "expt6_adaptive",
+           "kernelbench", "expt7_scaling"]
 
 
 def validate_artifact(name: str) -> dict:

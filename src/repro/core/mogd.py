@@ -295,9 +295,9 @@ def _problem_token(problem: MOOProblem):
                  None if problem.alphas is None
                  else np.asarray(problem.alphas))))
         except TypeError:
-            from repro.exec.executor import _UIDS
-
-            tok = ("uid", next(_UIDS))
+            # a fresh object() is unique and hashable, and the token is
+            # kept alive on the problem itself, so it can never collide
+            tok = ("uid", object())
     problem._structure_token = tok
     return tok
 

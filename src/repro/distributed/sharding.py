@@ -163,6 +163,34 @@ def probe_mesh(n_devices: int | None = None, axis: str = "probe") -> Mesh:
     return Mesh(np.asarray(devices), (axis,))
 
 
+def choose_probe_partition(n_devices: int, G: int, R: int) -> tuple:
+    """Partitioning policy for the probe-executor batch (DESIGN.md §11).
+
+    Given the tenant mix's wanted ``(G groups, R rows-per-group)`` bucket,
+    pick which axis to shard over ``n_devices`` and the device-divisible
+    bucket sizes — the executor calls this instead of requiring callers
+    to lay out device-friendly batches themselves.  Returns
+    ``(axis, Gp, Rp)`` with ``axis`` in ``{"group", "row", None}``.
+
+    The choice minimizes padded batch cells (``Gp * Rp``): a many-tenant
+    mix (G >= devices) shards groups, a few-tenants/many-cells mix (a
+    single PF session's grid) shards rows.  Ties prefer the group axis —
+    sharded groups keep each tenant's surrogate weights device-local,
+    while row sharding replicates every group's params on all devices.
+    On one device there is nothing to shard (``axis=None``).
+    """
+    if n_devices <= 1:
+        return None, G, R
+
+    def up(x: int) -> int:
+        return -(-x // n_devices) * n_devices
+
+    axis, Gp, Rp = min(
+        (("group", up(G), R), ("row", G, up(R))),
+        key=lambda c: (c[1] * c[2], c[0] != "group"))
+    return axis, Gp, Rp
+
+
 def constrain(x, rules: ShardingRules | None, *logical_axes):
     """``with_sharding_constraint`` by logical names (no-op without rules)."""
     if rules is None:

@@ -18,9 +18,17 @@ Consequences (the reason this module exists):
 * A model-server promotion (new weights, same architecture) is a pure
   params swap: the warm re-solve reuses the already-compiled program
   with zero recompilation.
-* An opt-in mesh path shards the probe batch axis over devices
-  (``shard_map`` over a 1-D mesh; single-device meshes and indivisible
-  buckets fall back to the unsharded program — never fail).
+* The mesh path is default-on (``mesh="auto"``): with more than one
+  device the probe batch axis is sharded with ``shard_map`` over a 1-D
+  mesh, the axis (groups vs rows) and device-divisible bucket sizes
+  chosen by ``repro.distributed.sharding.choose_probe_partition`` from
+  the tenant mix.  Single devices — and buckets a mesh cannot divide —
+  fall back to the unsharded program; never fail.
+* A ``backend`` seam routes fusable programs (stacked standardizing-MLP
+  surrogates — the paper's workload models) through the fused Pallas
+  descend kernel (``repro.kernels.mogd_descend``), parity-gated per
+  structure against the ``lax.scan`` path; GP/closure/uncertainty
+  programs keep the scan path.  Zero caller API change.
 
 The module is dependency-light by design: it imports only jax/numpy, so
 ``repro.core.mogd``, ``repro.core.dag``, ``repro.models`` and
@@ -33,7 +41,6 @@ plane's compute body.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import threading
 from typing import Any, Callable
 
@@ -164,9 +171,6 @@ class ParamProgram:
     apply_std: Callable | None = None
 
 
-_UIDS = itertools.count()
-
-
 def closure_program(fn: Callable, token) -> ParamProgram:
     """Wrap an opaque objective closure as a program with empty params.
 
@@ -285,16 +289,39 @@ class ProbeExecutor:
     service exposes these counters in ``stats()``; benchmarks and CI
     gate on them.
 
-    ``mesh`` (optional) is a 1-D :class:`jax.sharding.Mesh`; when its
-    size divides the padded group (or, failing that, row) bucket, that
-    batch axis is sharded across devices with ``shard_map`` (rows are
-    independent, no collectives).  Single-device meshes — and buckets a
-    multi-device mesh cannot divide — fall back to the plain program.
+    ``mesh="auto"`` (the default) builds a 1-D probe mesh over all local
+    devices when there is more than one, else stays unsharded — callers
+    never opt in.  An explicit :class:`jax.sharding.Mesh` pins the
+    device set; ``mesh=None`` disables sharding.  The sharded batch axis
+    (groups vs rows) and device-divisible bucket sizes come from the
+    partitioning policy (``distributed.sharding.choose_probe_partition``)
+    applied to the tenant mix; rows are independent, no collectives.
+    Buckets a mesh cannot divide fall back to the plain program.
+
+    ``backend`` selects the descend implementation: ``"auto"`` routes
+    stacked-MLP structures through the fused Pallas/XLA kernel after a
+    one-time per-structure parity check against the scan path (and
+    everything else — GP, closures, ``use_std`` — through ``lax.scan``);
+    ``"jnp"`` forces the scan path; ``"fused"`` requires a fusable
+    structure and skips the parity gate (benchmarks, kernel tests).
     """
 
-    def __init__(self, mesh=None, mesh_axis: str | None = None,
+    def __init__(self, mesh="auto", mesh_axis: str | None = None,
                  bucket_fn: Callable[[int], int] = bucket,
-                 max_programs: int = 512):
+                 max_programs: int = 512, backend: str = "auto"):
+        if isinstance(mesh, str):
+            if mesh != "auto":
+                raise ValueError(f"mesh must be 'auto', None or a Mesh, "
+                                 f"got {mesh!r}")
+            mesh = None
+            if len(jax.devices()) > 1:
+                from repro.distributed.sharding import probe_mesh
+
+                mesh = probe_mesh()
+        if backend not in ("auto", "jnp", "fused"):
+            raise ValueError(f"backend must be auto|jnp|fused, got "
+                             f"{backend!r}")
+        self.backend = backend
         self.mesh = mesh
         self.mesh_axis = (
             mesh_axis if mesh_axis is not None
@@ -310,9 +337,16 @@ class ProbeExecutor:
         self._evals: dict[tuple, Callable] = {}
         self._lock = threading.RLock()
         self.compile_counts: dict[tuple, int] = {}
+        # structure key -> DescendPlan (fused backend) or None (scan path);
+        # populated once per structure by _descend_plan's parity gate
+        self._descend_plans: dict[tuple, Any] = {}
         self.eval_compiles = 0
         self.dispatches = 0
         self.probes = 0
+        self.fused_dispatches = 0
+        self.fused_fallbacks = 0
+        self.sharded_dispatches = 0
+        self.last_shard_axis: str | None = None
 
     # -- telemetry ---------------------------------------------------------
     @property
@@ -332,6 +366,11 @@ class ProbeExecutor:
             "eval_compiles": self.eval_compiles,
             "dispatches": self.dispatches,
             "probes": self.probes,
+            "fused_structures": sum(
+                1 for p in self._descend_plans.values() if p is not None),
+            "fused_dispatches": self.fused_dispatches,
+            "fused_fallbacks": self.fused_fallbacks,
+            "sharded_dispatches": self.sharded_dispatches,
         }
 
     # -- keys --------------------------------------------------------------
@@ -363,28 +402,136 @@ class ProbeExecutor:
         Multi-row groups floor the row bucket at 4 (the historical
         MOGDSolver floor: B in 2..4 share one program); single-row groups
         stay exact so the per-row-params (stage-family) path pays no
-        padding."""
+        padding.
+
+        On a multi-device mesh the wanted buckets then pass through the
+        partitioning policy (``choose_probe_partition``), which picks the
+        sharded axis from the tenant mix and rounds that axis's bucket up
+        to device-divisible.  Returns ``(Gp, Rp, axis)``."""
         want_g = self.bucket_fn(G)
         want_r = self.bucket_fn(R) if R == 1 else max(4, self.bucket_fn(R))
+        n = self._mesh_div()
+        if n > 1:
+            from repro.distributed.sharding import choose_probe_partition
+
+            _, want_g, want_r = choose_probe_partition(n, want_g, want_r)
         built = self._built_buckets.get(base_key, ())
         reuse = [
             (g, r) for (g, r) in built
             if g >= want_g and r >= want_r
             and g * r <= 4 * want_g * want_r
         ]
-        if reuse:
-            return min(reuse, key=lambda t: t[0] * t[1])
-        return want_g, want_r
+        Gp, Rp = (min(reuse, key=lambda t: t[0] * t[1]) if reuse
+                  else (want_g, want_r))
+        axis = None
+        if n > 1:
+            from repro.distributed.sharding import choose_probe_partition
+
+            # the policy is idempotent on its own output, so the axis a
+            # reused bucket was built with is re-derived, never stored
+            axis, _, _ = choose_probe_partition(n, Gp, Rp)
+            if (axis == "group" and Gp % n) or (axis == "row" and Rp % n):
+                axis = None  # reused pre-policy bucket: unsharded fallback
+        return Gp, Rp, axis
+
+    # -- fused backend (kernels/mogd_descend) ------------------------------
+    def _descend_plan(self, req: ProbeRequest, skey: tuple):
+        """Resolve (and cache) the fused-backend plan for one structure.
+
+        ``backend="auto"``: structural selection first (stacked
+        standardizing-MLP programs only), then a one-time numeric parity
+        gate against the scan path — a structure that fails either check
+        falls back to ``lax.scan`` forever (``fused_fallbacks`` counts
+        the numeric rejections).  ``backend="fused"`` skips the gate and
+        raises on non-fusable structures."""
+        if self.backend == "jnp":
+            return None
+        if skey in self._descend_plans:
+            return self._descend_plans[skey]
+        from repro.kernels.mogd_descend import plan_from_structure
+
+        plan = plan_from_structure(req.program.structure,
+                                   use_std=req.use_std)
+        if plan is None:
+            if self.backend == "fused":
+                raise ValueError(
+                    "backend='fused' requires a stacked-MLP program "
+                    f"structure; got {req.program.structure[0]!r}")
+        elif self.backend == "auto" and not self._parity_check(req, plan):
+            self.fused_fallbacks += 1
+            plan = None
+        self._descend_plans[skey] = plan
+        return plan
+
+    def _parity_check(self, req: ProbeRequest, plan) -> bool:
+        """One-time per-structure numeric gate: fused descend must match
+        the scan path's end state on a tiny slice of the real request
+        before the structure commits to the fused backend."""
+        from repro.kernels.mogd_descend import descend_batch
+
+        try:
+            cfg = req.cfg
+            x0 = jnp.asarray(req.x0s, jnp.float32)[:1, :2]  # (1, S', D)
+            lo = jnp.asarray(req.los, jnp.float32)[:1]
+            hi = jnp.asarray(req.his, jnp.float32)[:1]
+            k = lo.shape[-1]
+            if req.bounds is not None:
+                ulo, uhi, uscale = (jnp.asarray(b, jnp.float32)[:1]
+                                    for b in req.bounds)
+            else:
+                ulo = jnp.full((1, k), -jnp.inf)
+                uhi = jnp.full((1, k), jnp.inf)
+                uscale = jnp.ones((1, k))
+            target = jnp.asarray(req.targets, jnp.int32).reshape(-1)[:1]
+            if req.params_b is None:
+                params = req.program.params
+                params_g = jax.tree.map(
+                    lambda a: jnp.asarray(a)[None], params)
+            else:
+                params_g = jax.tree.map(
+                    lambda a: jnp.asarray(a)[:1], req.params_b)
+                params = jax.tree.map(lambda a: a[0], params_g)
+
+            apply = req.program.apply
+            penalty, tie_eps = cfg.penalty, cfg.tie_break_eps
+
+            def loss_fn(x):
+                f = apply(params, x)
+                excess = (jnp.maximum(ulo[0] - f, 0.0)
+                          + jnp.maximum(f - uhi[0], 0.0))
+                bound = jnp.where(
+                    excess > 0.0, (excess / uscale[0]) ** 2 + penalty, 0.0
+                ).sum()
+                return _eq4_loss(f, lo[0], hi[0], target[0], penalty,
+                                 tie_eps) + bound
+
+            want = jax.vmap(
+                lambda x0_: adam_project_descend(loss_fn, x0_, cfg))(x0[0])
+            got = descend_batch(
+                plan, cfg, params_g, x0[:, None], lo[:, None], hi[:, None],
+                ulo[:, None], uhi[:, None], uscale[:, None], target[:, None],
+            )[0, 0]
+            return bool(jnp.max(jnp.abs(got - want)) <= 1e-3)
+        except Exception:  # noqa: BLE001 — any failure means "not fusable"
+            return False
 
     # -- compilation -------------------------------------------------------
-    def _build(self, req: ProbeRequest, Gp: int, Rp: int,
-               skey: tuple) -> Callable:
+    def _build(self, req: ProbeRequest, Gp: int, Rp: int, skey: tuple,
+               axis: str | None, plan) -> Callable:
         """Compile the grouped descend-snap-select program for one
         structure at one (G, R) bucket pair.  Mirrors the pre-refactor
         MOGDSolver semantics exactly; user bounds always participate with
         ±inf open edges (``max(-inf - f, 0) == 0`` — a no-op for
         unbounded rows).  Params enter once per GROUP, so the surrogate
-        forward inside each group keeps its shared-weight form."""
+        forward inside each group keeps its shared-weight form.
+
+        ``plan`` (a :class:`~repro.kernels.mogd_descend.DescendPlan`, or
+        None) selects the descend body: the fused kernel computes the
+        whole batch's finals in one call, the scan path descends inside
+        the per-row vmap.  Snap/score/select are shared — the fused
+        backend changes *where* the descent runs, never the semantics.
+        ``axis`` is the partitioning policy's shard axis for this bucket.
+        """
         apply = req.program.apply
         apply_std = req.program.apply_std
         use_std = req.use_std
@@ -392,28 +539,18 @@ class ProbeExecutor:
         cfg = req.cfg
         penalty, tie_eps, feas_tol = cfg.penalty, cfg.tie_break_eps, cfg.feas_tol
 
-        def solve_one(params, x0_s, lo, hi, ulo, uhi, uscale, alphas, target):
+        def make_eff(params, alphas):
             if use_std:
                 def eff(x):
                     return apply(params, x) + alphas * apply_std(params, x)
             else:
                 def eff(x):
                     return apply(params, x)
+            return eff
 
-            def bound_pen(f):
-                # 0 at open (±inf) edges: max(-inf, 0) == 0
-                excess = jnp.maximum(ulo - f, 0.0) + jnp.maximum(f - uhi, 0.0)
-                return jnp.where(
-                    excess > 0.0, (excess / uscale) ** 2 + penalty, 0.0
-                ).sum()
-
-            def loss_fn(x):
-                f = eff(x)
-                return _eq4_loss(f, lo, hi, target, penalty,
-                                 tie_eps) + bound_pen(f)
-
-            finals = jax.vmap(
-                lambda x0: adam_project_descend(loss_fn, x0, cfg))(x0_s)
+        def score_one(params, finals, lo, hi, ulo, uhi, uscale, alphas,
+                      target):
+            eff = make_eff(params, alphas)
             snapped = snap(finals)
             fvals = jax.vmap(eff)(snapped)  # (S, k)
             width = jnp.maximum(hi - lo, 1e-12)
@@ -432,26 +569,66 @@ class ProbeExecutor:
             best = jnp.argmin(score)
             return snapped[best], fvals[best], jnp.any(feas)
 
-        def solve_group(params, x0s, los, his, ulo, uhi, uscale, alphas,
-                        targets):
-            # rows of one group share params -> shared-weight forwards
-            return jax.vmap(
-                lambda *rows: solve_one(params, *rows)
-            )(x0s, los, his, ulo, uhi, uscale, alphas, targets)
+        def solve_one(params, x0_s, lo, hi, ulo, uhi, uscale, alphas, target):
+            eff = make_eff(params, alphas)
 
-        batched = jax.vmap(solve_group)
+            def bound_pen(f):
+                # 0 at open (±inf) edges: max(-inf, 0) == 0
+                excess = jnp.maximum(ulo - f, 0.0) + jnp.maximum(f - uhi, 0.0)
+                return jnp.where(
+                    excess > 0.0, (excess / uscale) ** 2 + penalty, 0.0
+                ).sum()
+
+            def loss_fn(x):
+                f = eff(x)
+                return _eq4_loss(f, lo, hi, target, penalty,
+                                 tie_eps) + bound_pen(f)
+
+            finals = jax.vmap(
+                lambda x0: adam_project_descend(loss_fn, x0, cfg))(x0_s)
+            return score_one(params, finals, lo, hi, ulo, uhi, uscale,
+                             alphas, target)
+
+        if plan is None:
+            def solve_group(params, x0s, los, his, ulo, uhi, uscale, alphas,
+                            targets):
+                # rows of one group share params -> shared-weight forwards
+                return jax.vmap(
+                    lambda *rows: solve_one(params, *rows)
+                )(x0s, los, his, ulo, uhi, uscale, alphas, targets)
+
+            batched = jax.vmap(solve_group)
+        else:
+            from repro.kernels.mogd_descend import descend_batch
+
+            def score_group(params, finals, los, his, ulo, uhi, uscale,
+                            alphas, targets):
+                return jax.vmap(
+                    lambda *rows: score_one(params, *rows)
+                )(finals, los, his, ulo, uhi, uscale, alphas, targets)
+
+            def batched(params, x0s, los, his, ulo, uhi, uscale, alphas,
+                        targets):
+                # one fused descend over the whole (G, R, S) batch; the
+                # shared snap/score stays in jnp (encoder logic is cheap
+                # and runs once, not cfg.steps times)
+                finals = descend_batch(plan, cfg, params, x0s, los, his,
+                                       ulo, uhi, uscale, targets)
+                return jax.vmap(score_group)(params, finals, los, his, ulo,
+                                             uhi, uscale, alphas, targets)
+
         n = self._mesh_div()
         if n > 1:
             from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
 
-            if Gp % n == 0:
+            if axis == "group" and Gp % n == 0:
                 # shard the group axis: params and rows partition together
                 spec = P(self.mesh_axis)
                 batched = shard_map(batched, mesh=self.mesh,
                                     in_specs=spec, out_specs=spec,
                                     check_rep=False)
-            elif Rp % n == 0:
+            elif axis == "row" and Rp % n == 0:
                 # groups replicated, rows sharded (params fully replicated)
                 row_spec = P(None, self.mesh_axis)
                 batched = shard_map(
@@ -523,11 +700,12 @@ class ProbeExecutor:
         k = int(jnp.shape(parts[0][1][1])[-1])
         base_key = (skey, k, S, D)
         with self._lock:
-            Gp, Rp = self._choose_buckets(base_key, G, R)
+            plan = self._descend_plan(r0, skey)
+            Gp, Rp, axis = self._choose_buckets(base_key, G, R)
             key = (*base_key, Gp, Rp)
             fn = self._programs.pop(key, None)  # re-insert as newest (LRU)
             if fn is None:
-                fn = self._build(r0, Gp, Rp, skey)
+                fn = self._build(r0, Gp, Rp, skey, axis, plan)
                 self._built_buckets.setdefault(base_key, set()).add((Gp, Rp))
             self._programs[key] = fn
             while len(self._programs) > self.max_programs:
@@ -563,6 +741,11 @@ class ProbeExecutor:
         with self._lock:  # shared executors: keep telemetry exact
             self.dispatches += 1
             self.probes += sum(p[2] * p[3] for p in parts)
+            if plan is not None:
+                self.fused_dispatches += 1
+            if axis is not None:
+                self.sharded_dispatches += 1
+                self.last_shard_axis = axis
         return (np.concatenate(outs_x), np.concatenate(outs_f),
                 np.concatenate(outs_feas))
 

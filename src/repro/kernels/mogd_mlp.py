@@ -10,6 +10,11 @@ Weights for the paper's model are tiny (4 x 128 x 128 fp32 ~ 262 KB), far
 under the ~16 MB VMEM budget; batch tiles of 256 rows keep the activation
 footprint at 256 x 128 x 4 = 131 KB.  Hidden width is padded to the 128
 lane width — MXU-aligned by construction.
+
+``interpret`` defaults to the platform policy (``kernels.platform``):
+compiled on TPU/GPU, interpreter on CPU.  The forward carries a custom
+VJP (recompute-activations backprop) so ``jax.grad`` through the fused
+kernel matches autodiff through ``ref.mlp_forward``.
 """
 
 from __future__ import annotations
@@ -19,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .platform import resolve_interpret
 
 BLOCK_B = 256
 
@@ -37,13 +44,7 @@ def _kernel(x_ref, *refs):
     out_ref[...] = h
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def mlp_forward_fused(x, ws, bs, interpret: bool = True):
-    """x: (B, D_in); ws/bs: lists of weight/bias arrays (fp32).
-
-    Returns (B, D_out). Batch is tiled over a 1-D grid; each grid step
-    loads one (BLOCK_B, D_in) tile and runs the whole network in VMEM.
-    """
+def _forward(x, ws, bs, interpret: bool):
     B, D_in = x.shape
     D_out = ws[-1].shape[1]
     pad = (-B) % BLOCK_B
@@ -68,3 +69,51 @@ def mlp_forward_fused(x, ws, bs, interpret: bool = True):
         interpret=interpret,
     )(*args)
     return out[:B]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fused(x, ws, bs, interpret):
+    return _forward(x, ws, bs, interpret)
+
+
+def _fused_fwd(x, ws, bs, interpret):
+    return _forward(x, ws, bs, interpret), (x, ws, bs)
+
+
+def _fused_bwd(interpret, res, gy):
+    # Recompute the (cheap, VMEM-sized) activations and run standard
+    # backprop; the ReLU mask is pre-activation > 0, matching
+    # jax.nn.relu's derivative-at-zero convention in the jnp oracle.
+    x, ws, bs = res
+    n = len(ws)
+    hs, pres = [x], []
+    h = x
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        a = h @ w + b
+        pres.append(a)
+        h = jnp.maximum(a, 0.0) if i < n - 1 else a
+        hs.append(h)
+    g = gy
+    dws, dbs = [None] * n, [None] * n
+    for i in range(n - 1, -1, -1):
+        dws[i] = hs[i].T @ g
+        dbs[i] = g.sum(axis=0)
+        g = g @ ws[i].T
+        if i > 0:
+            g = g * (pres[i - 1] > 0.0)
+    return g, tuple(dws), tuple(dbs)
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlp_forward_fused(x, ws, bs, interpret: bool | None = None):
+    """x: (B, D_in); ws/bs: lists of weight/bias arrays (fp32).
+
+    Returns (B, D_out). Batch is tiled over a 1-D grid; each grid step
+    loads one (BLOCK_B, D_in) tile and runs the whole network in VMEM.
+    ``interpret=None`` resolves via the platform policy (compiled on
+    TPU/GPU, interpreter on CPU).
+    """
+    return _fused(x, tuple(ws), tuple(bs), resolve_interpret(interpret))

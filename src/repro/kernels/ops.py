@@ -1,8 +1,10 @@
 """jit'd public wrappers around the Pallas kernels.
 
 These adapt model-layout tensors to kernel layouts (GQA head repeat,
-(B, H) folding, per-head broadcast) and expose an ``interpret`` flag —
-True on this CPU container (Pallas interpret mode), False on real TPU.
+(B, H) folding, per-head broadcast) and expose an ``interpret`` flag.
+``interpret=None`` (the default) resolves through the platform policy in
+``kernels.platform``: compiled on TPU/GPU, interpret mode on CPU — so the
+same call sites run fused kernels wherever the hardware can.
 """
 
 from __future__ import annotations
@@ -12,31 +14,34 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention_bhsd
 from .mamba_scan import selective_scan
 from .mogd_mlp import mlp_forward_fused
+from .platform import resolve_interpret
 from .pareto_filter import cross_dominator_counts, pareto_counts_blocked
 from .rwkv6_wkv import wkv_chunked
 
 
-def mlp_forward(x, ws, bs, interpret: bool = True):
+def mlp_forward(x, ws, bs, interpret: bool | None = None):
     """Fused surrogate-MLP forward; drop-in for ref.mlp_forward."""
     return mlp_forward_fused(x, tuple(ws), tuple(bs), interpret=interpret)
 
 
-def pareto_mask(F, interpret: bool = True):
+def pareto_mask(F, interpret: bool | None = None):
     """(N, k) -> (N,) bool Pareto mask via the blocked domination kernel."""
+    interpret = resolve_interpret(interpret)
     return pareto_counts_blocked(
         jnp.asarray(F, jnp.float32), interpret=interpret) == 0
 
 
-def cross_dominated(FA, FB, interpret: bool = True):
+def cross_dominated(FA, FB, interpret: bool | None = None):
     """(N, k) x (M, k) -> (N,) bool: row of FA dominated by any row of FB
     (the frontier store's incremental-update primitive)."""
+    interpret = resolve_interpret(interpret)
     return cross_dominator_counts(
         jnp.asarray(FA, jnp.float32), jnp.asarray(FB, jnp.float32),
         interpret=interpret) > 0
 
 
 def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
-                    bk: int = 128, interpret: bool = True):
+                    bk: int = 128, interpret: bool | None = None):
     """q: (B, S, H, dh); k/v: (B, S, Hk, dh) — GQA repeat + fold + unfold."""
     B, S, H, dh = q.shape
     Hk = k.shape[2]
@@ -44,6 +49,7 @@ def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
         rep = H // Hk
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
+    interpret = resolve_interpret(interpret)
     fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
     o = flash_attention_bhsd(fold(q), fold(k), fold(v), causal=causal,
                              bq=min(bq, S), bk=min(bk, S),
@@ -51,9 +57,10 @@ def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
     return o.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
 
 
-def rwkv_wkv(r, k, v, w, u, chunk: int = 128, interpret: bool = True):
+def rwkv_wkv(r, k, v, w, u, chunk: int = 128, interpret: bool | None = None):
     """r/k/v/w: (B, T, H, dh); u: (H, dh). Returns y (B, T, H, dh)."""
     B, T, H, dh = r.shape
+    interpret = resolve_interpret(interpret)
     fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
     uu = jnp.broadcast_to(u[None], (B, H, dh)).reshape(B * H, dh)
     y = wkv_chunked(fold(r).astype(jnp.float32), fold(k).astype(jnp.float32),
@@ -64,8 +71,9 @@ def rwkv_wkv(r, k, v, w, u, chunk: int = 128, interpret: bool = True):
 
 
 def mamba_selective_scan(dt, Bt, Ct, xs, A, chunk: int = 128,
-                         block_d: int = 512, interpret: bool = True):
+                         block_d: int = 512, interpret: bool | None = None):
     """Layouts as in ref.mamba_scan. Returns y (B, T, d)."""
+    interpret = resolve_interpret(interpret)
     return selective_scan(
         dt.astype(jnp.float32), Bt.astype(jnp.float32),
         Ct.astype(jnp.float32), xs.astype(jnp.float32),

@@ -1,0 +1,26 @@
+"""One platform policy for every Pallas kernel entry point.
+
+Pallas kernels compile only on TPU/GPU backends; on CPU (this container,
+most CI) the lowering path is the interpreter.  Every public kernel wrapper
+takes ``interpret: bool | None = None`` and resolves ``None`` through
+:func:`default_interpret`, so the *default* behavior is "compile where the
+hardware can, interpret where it can't" — callers only pass an explicit
+flag to force a mode (tests pin ``interpret=True`` for determinism on any
+host; TPU perf runs may pin ``False`` to fail loudly on a bad lowering).
+"""
+
+from __future__ import annotations
+
+import jax
+
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def default_interpret() -> bool:
+    """True when the active JAX backend cannot compile Pallas kernels."""
+    return jax.default_backend() not in _COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> platform default; concrete flags pass through."""
+    return default_interpret() if interpret is None else bool(interpret)

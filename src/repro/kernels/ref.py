@@ -15,6 +15,78 @@ def mlp_forward(x, ws, bs):
     return h @ ws[-1] + bs[-1]
 
 
+def mogd_descend(x0, mlps, lo, hi, ulo, uhi, uscale, target, signs,
+                 log_targets, *, steps, lr, lr_floor=0.05, b1=0.9, b2=0.999,
+                 adam_eps=1e-8, penalty=100.0, tie_eps=1e-4):
+    """Autodiff oracle for the fused MOGD descend-project kernel.
+
+    One *group* (shared surrogate weights) of ``N`` independent descents:
+    ``x0: (N, D)`` starts in ``[0,1]^D``; ``mlps`` is a tuple over the k
+    objectives of ``(ws, bs, x_mean, x_std, y_mean, y_std)`` standardizing
+    ReLU-MLP regressors; ``lo``/``hi``/``ulo``/``uhi``/``uscale``:
+    ``(N, k)`` constraint boxes and user bounds; ``target: (N,)`` int32.
+    ``signs`` (±1 orientation) and ``log_targets`` (exp-inverted targets)
+    are static per-objective tuples.
+
+    The loss is paper Eq. 4 (one-hot target term, violation penalty,
+    tie-break) plus the user-bound penalty; the descent is projected Adam
+    with cosine LR decay — the exact math of the executor's jnp path, but
+    differentiated with ``jax.grad`` so the kernel's hand-written backward
+    is checked against autodiff, not against itself.
+    """
+    k = len(mlps)
+
+    def fvec(x):  # (D,) -> (k,)
+        outs = []
+        for (ws, bs, xm, xs, ym, ys), s, lt in zip(mlps, signs, log_targets):
+            z = (x - xm) / xs
+            y = mlp_forward(z[None], ws, bs)[0, 0] * ys + ym
+            outs.append(s * (jnp.exp(y) if lt else y))
+        return jnp.stack(outs)
+
+    def loss(x, lo_r, hi_r, ulo_r, uhi_r, us_r, t_r):
+        f = fvec(x)
+        width = jnp.maximum(hi_r - lo_r, 1e-12)
+        fhat = (f - lo_r) / width
+        onehot = jax.nn.one_hot(t_r, k, dtype=fhat.dtype)
+        ft = jnp.sum(fhat * onehot)
+        inside_t = jnp.logical_and(ft >= 0.0, ft <= 1.0)
+        target_term = jnp.where(inside_t, ft * ft, 0.0)
+        violated = jnp.logical_or(fhat < 0.0, fhat > 1.0)
+        viol = jnp.where(violated, (fhat - 0.5) ** 2 + penalty, 0.0).sum()
+        tie = tie_eps * jnp.sum(
+            jnp.where(violated, 0.0, jnp.clip(fhat, 0.0, 1.0) ** 2))
+        excess = jnp.maximum(ulo_r - f, 0.0) + jnp.maximum(f - uhi_r, 0.0)
+        bound = jnp.where(
+            excess > 0.0, (excess / us_r) ** 2 + penalty, 0.0).sum()
+        return target_term + viol + tie + bound
+
+    grad_fn = jax.grad(loss)
+
+    def descend_one(x, lo_r, hi_r, ulo_r, uhi_r, us_r, t_r):
+        def step(carry, _):
+            x, m, v, t = carry
+            g = grad_fn(x, lo_r, hi_r, ulo_r, uhi_r, us_r, t_r)
+            g = jnp.where(jnp.isfinite(g), g, 0.0)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            frac = (t - 1.0) / steps
+            lr_t = lr * (lr_floor
+                         + (1 - lr_floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+            x = jnp.clip(x - lr_t * mh / (jnp.sqrt(vh) + adam_eps), 0.0, 1.0)
+            return (x, m, v, t + 1.0), None
+
+        z = jnp.zeros_like(x)
+        (x, _, _, _), _ = jax.lax.scan(
+            step, (x, z, z, jnp.float32(1.0)), None, length=steps)
+        return x
+
+    return jax.vmap(descend_one)(x0, lo, hi, ulo, uhi, uscale,
+                                 jnp.asarray(target, jnp.int32))
+
+
 def pareto_counts(F):
     """F: (N, k) minimization points -> (N,) number of dominators."""
     le = jnp.all(F[:, None, :] <= F[None, :, :], axis=-1)

@@ -127,7 +127,7 @@ class MOOService:
         use_kernel: bool = False,
         kernel_interpret: bool = True,
         executor: ProbeExecutor | None = None,
-        mesh=None,
+        mesh="auto",
         structure_coalescing: bool = True,
     ):
         self.default_mogd = mogd
@@ -141,8 +141,9 @@ class MOOService:
         # The service's dispatch plane (DESIGN.md §10): ALL MOGD work of
         # every session goes through this one executor, so compiled
         # programs — and their compile-count telemetry — are shared
-        # service-wide.  ``mesh`` opts the probe batch axis into device
-        # sharding (see repro.distributed.sharding.probe_mesh).
+        # service-wide.  ``mesh="auto"`` (default) shards the probe batch
+        # axis whenever more than one device exists — no opt-in; pass
+        # mesh=None to disable (see repro.distributed.sharding).
         self.executor = (executor if executor is not None
                          else ProbeExecutor(mesh=mesh))
         # structure_coalescing=False restores the legacy per-tenant

@@ -390,7 +390,7 @@ MESH_SCRIPT = textwrap.dedent("""
     rng = np.random.default_rng(0)
     lo = b[0] + rng.random((6, 2)) * 0.3 * (b[1] - b[0])
     boxes = np.stack([lo, lo + 0.5 * (b[1] - b[0])], axis=1)
-    plain = MOGDSolver(problem, cfg, executor=ProbeExecutor())
+    plain = MOGDSolver(problem, cfg, executor=ProbeExecutor(mesh=None))
     mesh = probe_mesh()
     sharded = MOGDSolver(problem, cfg,
                          executor=ProbeExecutor(mesh=mesh))
