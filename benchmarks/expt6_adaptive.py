@@ -51,7 +51,7 @@ from repro.core import (
 from repro.modelserver import DriftConfig, ModelRegistry, TrainerConfig
 from repro.service import MOOService
 
-from .common import Timer, emit, write_json
+from .common import LatencyRecorder, Timer, emit, write_json
 
 MOGD = MOGDConfig(steps=60, multistart=6)
 
@@ -167,7 +167,8 @@ def run(quick: bool = True) -> dict:
     })
 
     # -- the shift + streaming event loop ---------------------------------
-    rec_lat, train_walls, drift_step, bump_step = [], [], None, None
+    rec_lat = LatencyRecorder("recommend")
+    train_walls, drift_step, bump_step = [], None, None
     for step in range(n_steps):
         Xs, Ys = sample_traces(THETA_POST, step_traces, rng)
         n_ev = len(events)
@@ -184,7 +185,7 @@ def run(quick: bool = True) -> dict:
         # or re-solves (stale sessions keep serving the last frontier)
         t0 = time.perf_counter()
         svc.recommend(sid_adapt)
-        rec_lat.append(time.perf_counter() - t0)
+        rec_lat.observe(t0, time.perf_counter())
         # equal post-shift probe budget for both arms (warm re-solve of the
         # adaptive arm happens inside run_until, off the recommend path)
         svc.run_until(min_probes=probe_budget + 8 * (step + 1))
@@ -201,7 +202,7 @@ def run(quick: bool = True) -> dict:
     }
 
     recovery = {k: post[k] / max(pre[k], 1e-12) for k in post}
-    rec_p95 = float(np.quantile(rec_lat, 0.95))
+    rec_p95 = rec_lat.p95
     train_max = float(max(train_walls)) if train_walls else 0.0
     stats = svc.stats()
     summary = {
@@ -221,6 +222,7 @@ def run(quick: bool = True) -> dict:
         "frontier_invalidations": stats["frontier_invalidations"],
         "warm_resolves": stats["warm_resolves"],
         "recommend_p95_s": rec_p95,
+        "recommend_latency": rec_lat.summary(),
         "train_wall_max_s": train_max,
         "warmup_train_s": float(t_train0.s),
         "warmup_solve_s": float(t_solve0.s),

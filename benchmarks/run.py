@@ -28,6 +28,7 @@ SUITES = [
     "expt6_adaptive",    # online model server: drift -> warm re-solve
     "kernelbench",       # kernel vs oracle + VMEM accounting
     "expt7_scaling",     # device-scaling: mesh probe sharding 1->8 devices
+    "expt8_serving",     # frontdesk admission plane: open-loop QPS/SLO
 ]
 
 

@@ -23,6 +23,8 @@ Three claims from the refactors, measured:
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core import (
@@ -35,7 +37,7 @@ from repro.core import (
 )
 from repro.service import MOOService
 
-from .common import Timer, emit, write_json
+from .common import LatencyRecorder, Timer, emit, write_json
 
 MOGD = MOGDConfig(steps=80, multistart=8)
 HV_REF = np.array([1.5, 1.5])
@@ -102,6 +104,13 @@ def _hetero_arm(specs: list, probes: int,
     with Timer() as t_steady:
         steady = svc.run_until(min_probes=2 * probes)
     st = svc.stats()
+    # the serving path reads the live frontier — it must stay cheap no
+    # matter which coalescing mode drives the probe plane
+    rec = LatencyRecorder("recommend")
+    for sid in sids:
+        t0 = time.perf_counter()
+        svc.recommend(sid)
+        rec.observe(t0, time.perf_counter())
     fronts = [np.asarray(svc.frontier(sid)[0]) for sid in sids]
     row = {
         "mode": ("structure" if structure_coalescing else "per-tenant"),
@@ -115,6 +124,8 @@ def _hetero_arm(specs: list, probes: int,
         "dispatches": st["executor_dispatches"],
         "structures": st["executor_structures"],
         "compiles": st["executor_compiles"],
+        "recommend_p50_s": rec.p50,
+        "recommend_p95_s": rec.p95,
     }
     return row, fronts
 

@@ -35,6 +35,7 @@ WEIGHTS = {
     "test_kernels.py": 300,
     "test_serving_sharded.py": 120,
     "test_executor.py": 100,
+    "test_frontdesk.py": 45,
     "test_mogd_descend.py": 60,
     "test_launch.py": 90,
     "test_modelserver.py": 70,

@@ -241,7 +241,7 @@ class MOGDSolver:
         return self.solve(single_objective_box(bounds)[None], target=target)
 
 
-def solve_grouped(items) -> COResult:
+def solve_grouped(items, origin: str | None = None) -> COResult:
     """One shared executor dispatch over many solvers' box spans.
 
     ``items`` is a list of ``(solver: MOGDSolver, boxes: (B, 2, k),
@@ -250,7 +250,9 @@ def solve_grouped(items) -> COResult:
     own RNG stream — per-session determinism is preserved — and its
     problem's params/bounds/targets ride as per-box data in the single
     concatenated batch.  This is the multi-tenant coalescing primitive
-    ``MOOService._coalesced_step`` dispatches through (DESIGN.md §10).
+    the service's coalesced step dispatches through (DESIGN.md §10);
+    ``origin`` tags the dispatch in executor telemetry (``"frontdesk"``
+    for admission-plane traffic).
     """
     executor = items[0][0].executor
     requests = []
@@ -269,7 +271,7 @@ def solve_grouped(items) -> COResult:
                                  solver.problem.dim))
         requests.append(
             solver._request(x0s, boxes[:, 0], boxes[:, 1], target))
-    x, f, feas = executor.solve_requests(requests)
+    x, f, feas = executor.solve_requests(requests, origin=origin)
     return COResult(np.asarray(x), np.asarray(f), np.asarray(feas))
 
 

@@ -130,17 +130,24 @@ def bucket(B: int, base: int = 1) -> int:
 def pad_rows(tree, n_pad: int, axis: int = 0):
     """Pad every array leaf's ``axis`` by replicating slice 0 ``n_pad``
     times.  Pad rows are real (duplicate) problems whose results are
-    sliced off before anyone sees them — they can never enter a frontier."""
+    sliced off before anyone sees them — they can never enter a frontier.
+
+    Padding runs host-side in numpy: done with jnp ops, every new
+    (unpadded, padded) shape pair jit-builds its own slice/broadcast/
+    concatenate kernels — under a serving plane the tenant mix shifts
+    constantly, and those ~1s micro-build bursts stall the dispatcher.
+    The padded batch crosses to the device once, at the program call."""
     if n_pad == 0:
         return tree
 
     def one(a):
-        a = jnp.asarray(a)
-        first = jax.lax.slice_in_dim(a, 0, 1, axis=axis)
+        a = np.asarray(a)
+        idx = [slice(None)] * a.ndim
+        idx[axis] = slice(0, 1)
         shape = list(a.shape)
         shape[axis] = n_pad
-        return jnp.concatenate(
-            [a, jnp.broadcast_to(first, shape)], axis=axis)
+        return np.concatenate(
+            [a, np.broadcast_to(a[tuple(idx)], shape)], axis=axis)
 
     return jax.tree.map(one, tree)
 
@@ -347,6 +354,16 @@ class ProbeExecutor:
         self.fused_fallbacks = 0
         self.sharded_dispatches = 0
         self.last_shard_axis: str | None = None
+        # batcher seam telemetry (DESIGN.md §12): how full the padded
+        # (G, R) buckets actually run — the signal the frontdesk's
+        # adaptive micro-batching window exists to maximize — plus a
+        # per-origin dispatch count so serving-plane traffic is
+        # distinguishable from direct solver calls.
+        self.useful_rows = 0
+        self.padded_rows = 0
+        self.last_bucket: tuple | None = None
+        self.last_fill: float = 1.0
+        self.dispatch_origins: dict[str, int] = {}
 
     # -- telemetry ---------------------------------------------------------
     @property
@@ -371,7 +388,33 @@ class ProbeExecutor:
             "fused_dispatches": self.fused_dispatches,
             "fused_fallbacks": self.fused_fallbacks,
             "sharded_dispatches": self.sharded_dispatches,
+            "useful_rows": self.useful_rows,
+            "padded_rows": self.padded_rows,
+            "fill_ratio": (self.useful_rows / self.padded_rows
+                           if self.padded_rows else 1.0),
+            "last_bucket": self.last_bucket,
+            "dispatch_origins": dict(self.dispatch_origins),
         }
+
+    # -- batcher seam ------------------------------------------------------
+    def plan_buckets(self, G: int, R: int) -> tuple[int, int]:
+        """The padded ``(G, R)`` bucket a dispatch of this size would run
+        at (bucket policy + mesh divisibility; the per-structure reuse
+        window is intentionally ignored — it needs the compiled history).
+
+        This is the frontdesk batcher's fill target: holding arrivals
+        until the pending group count reaches ``plan_buckets(G, R)[0]``
+        fills the padded bucket instead of paying for replicated pad
+        rows (DESIGN.md §12)."""
+        want_g = self.bucket_fn(max(1, int(G)))
+        R = max(1, int(R))
+        want_r = self.bucket_fn(R) if R == 1 else max(4, self.bucket_fn(R))
+        n = self._mesh_div()
+        if n > 1:
+            from repro.distributed.sharding import choose_probe_partition
+
+            _, want_g, want_r = choose_probe_partition(n, want_g, want_r)
+        return want_g, want_r
 
     # -- keys --------------------------------------------------------------
     def structure_key(self, program: ParamProgram, encoder, cfg,
@@ -671,7 +714,7 @@ class ProbeExecutor:
         return params, tuple(r[:, None] for r in rows), B, 1
 
     # -- dispatch ----------------------------------------------------------
-    def solve_requests(self, requests) -> tuple:
+    def solve_requests(self, requests, origin: str | None = None) -> tuple:
         """Concatenate the requests' spans into one padded (G, R) batch,
         solve in a single device dispatch, and slice results back per
         caller.
@@ -679,7 +722,9 @@ class ProbeExecutor:
         Every request must carry the same structure key — that is the
         coalescing contract the service's grouping upholds.  Returns
         ``(x: (B, D), f: (B, k), feasible: (B,))`` numpy arrays over the
-        concatenated (unpadded) spans, in request order.
+        concatenated (unpadded) spans, in request order.  ``origin``
+        optionally tags the dispatch source (``"frontdesk"`` for the
+        async admission plane) in ``dispatch_origins`` telemetry.
         """
         requests = list(requests)
         if not requests:
@@ -714,13 +759,16 @@ class ProbeExecutor:
                 built = self._built_buckets.get(old[:-2])
                 if built is not None:
                     built.discard(old[-2:])
-        # pad each part's rows to Rp, concatenate groups, pad groups to Gp
+        # pad each part's rows to Rp, concatenate groups, pad groups to
+        # Gp — all host-side numpy (see pad_rows): no per-shape jit ops
         params = jax.tree.map(
-            lambda *ls: jnp.concatenate(ls, axis=0),
+            lambda *ls: np.concatenate([np.asarray(a) for a in ls],
+                                       axis=0),
             *[p[0] for p in parts])
         rows = [
-            jnp.concatenate(
-                [pad_rows(p[1][i], Rp - p[3], axis=1) for p in parts],
+            np.concatenate(
+                [np.asarray(pad_rows(p[1][i], Rp - p[3], axis=1))
+                 for p in parts],
                 axis=0)
             for i in range(N_ROW_FIELDS)
         ]
@@ -741,6 +789,13 @@ class ProbeExecutor:
         with self._lock:  # shared executors: keep telemetry exact
             self.dispatches += 1
             self.probes += sum(p[2] * p[3] for p in parts)
+            self.useful_rows += sum(p[2] * p[3] for p in parts)
+            self.padded_rows += Gp * Rp
+            self.last_bucket = (Gp, Rp)
+            self.last_fill = sum(p[2] * p[3] for p in parts) / (Gp * Rp)
+            if origin is not None:
+                self.dispatch_origins[origin] = (
+                    self.dispatch_origins.get(origin, 0) + 1)
             if plan is not None:
                 self.fused_dispatches += 1
             if axis is not None:

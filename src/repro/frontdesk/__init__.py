@@ -1,0 +1,38 @@
+"""Async admission plane for MOOService (DESIGN.md §12).
+
+admission → adaptive micro-batching window → EDF scheduler → executor:
+bounded-queue backpressure at the front door, arrivals held just long
+enough to fill the executor's (G, R) structure buckets, deadline-aware
+dispatch with load-shedding of already-missed work, and a dispatcher
+thread so ``recommend`` stays non-blocking throughout.
+"""
+
+from repro.frontdesk.admission import (
+    DONE,
+    ERROR,
+    PENDING,
+    REJECTED,
+    SHED,
+    SLO_CLASSES,
+    AdmissionQueue,
+    SLOClass,
+    Ticket,
+)
+from repro.frontdesk.batcher import AdaptiveBatcher
+from repro.frontdesk.plane import FrontDesk
+from repro.frontdesk.scheduler import EDFScheduler
+
+__all__ = [
+    "AdaptiveBatcher",
+    "AdmissionQueue",
+    "EDFScheduler",
+    "FrontDesk",
+    "SLOClass",
+    "SLO_CLASSES",
+    "Ticket",
+    "PENDING",
+    "DONE",
+    "REJECTED",
+    "SHED",
+    "ERROR",
+]

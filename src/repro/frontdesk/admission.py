@@ -1,0 +1,154 @@
+"""Admission control for the async serving plane (DESIGN.md §12).
+
+A :class:`Ticket` is the future handed back by ``FrontDesk.submit``: the
+caller waits on it (or polls) while probe work drains asynchronously.
+The :class:`AdmissionQueue` is the bounded front door — when it is full,
+``submit`` returns a ticket already in the ``rejected`` state instead of
+blocking, which is the backpressure contract: the *client* decides
+whether to retry, degrade, or give up; the plane never queues unbounded
+work.
+
+All mutation happens under the owning ``FrontDesk``'s plane lock; these
+classes hold no locks of their own.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+
+# terminal ticket states (the event fires exactly once, on entry)
+PENDING = "pending"
+DONE = "done"
+REJECTED = "rejected"  # bounded queue full at submit — never queued
+SHED = "shed"  # deadline expired before completion — never re-dispatched
+ERROR = "error"  # a dispatch covering this ticket raised
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A named service class: its default deadline and shed policy.
+
+    ``sheddable=False`` marks work that is *never* load-shed once
+    admitted (batch analytics with no interactive caller): its deadline
+    still orders it in EDF, but expiry does not cancel it.
+    """
+
+    name: str
+    deadline_s: float
+    sheddable: bool = True
+
+
+#: The default tenant mix (expt8 uses the same three classes).
+SLO_CLASSES = {
+    "interactive": SLOClass("interactive", deadline_s=0.5),
+    "standard": SLOClass("standard", deadline_s=5.0),
+    "batch": SLOClass("batch", deadline_s=60.0, sheddable=False),
+}
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One admitted (or rejected) probe request — the caller's future.
+
+    Completion semantics: the ticket is ``done`` once its session has
+    accumulated ``n_probes`` additional probes since submission, or the
+    session's rectangle queue is exhausted (its frontier is final, so no
+    further probing can help).  ``recommend`` is *not* part of the
+    ticket — it stays a synchronous, non-blocking read on the service.
+    """
+
+    session_id: str
+    group_key: tuple
+    slo: SLOClass
+    deadline: float  # absolute, on the plane's clock
+    n_probes: int
+    submitted_at: float
+    ticket_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    state: str = PENDING
+    credited: int = 0  # probes landed on the session since submit
+    finished_at: float | None = None
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    def finish(self, state: str, now: float) -> None:
+        """Move to a terminal state and release waiters (idempotent)."""
+        if self.state != PENDING:
+            return
+        self.state = state
+        self.finished_at = now
+        self._event.set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until the ticket reaches a terminal state."""
+        return self._event.wait(timeout)
+
+    @property
+    def done(self) -> bool:
+        return self.state != PENDING
+
+    @property
+    def ok(self) -> bool:
+        return self.state == DONE
+
+    def latency(self) -> float | None:
+        """Submit→terminal wall time (None while pending)."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class AdmissionQueue:
+    """Bounded admission with explicit rejection (no silent queueing).
+
+    ``capacity`` bounds the number of *live* tickets (queued or mid
+    dispatch).  ``try_admit`` either claims a slot or refuses; the
+    caller marks the ticket accordingly.  Counters are cumulative and
+    monotone — ``FrontDesk.stats`` exports them.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("admission capacity must be >= 1")
+        self.capacity = capacity
+        self.live = 0
+        self.submitted = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.shed = 0
+        self.completed = 0
+        self.errors = 0
+
+    def try_admit(self) -> bool:
+        self.submitted += 1
+        if self.live >= self.capacity:
+            self.rejected += 1
+            return False
+        self.live += 1
+        self.admitted += 1
+        return True
+
+    def release(self, state: str) -> None:
+        """A live ticket reached a terminal state — free its slot."""
+        self.live -= 1
+        if state == DONE:
+            self.completed += 1
+        elif state == SHED:
+            self.shed += 1
+        elif state == ERROR:
+            self.errors += 1
+
+    def snapshot(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "live": self.live,
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "completed": self.completed,
+            "errors": self.errors,
+        }

@@ -1,0 +1,271 @@
+"""FrontDesk: the async admission plane in front of MOOService (§12).
+
+One object ties the plane together::
+
+    desk = FrontDesk(service)
+    desk.start()                          # dispatcher thread
+    t = desk.submit(spec, deadline_s=1.0, slo="interactive")
+    t.wait()                              # future semantics
+    rec = service.recommend(t.session_id)  # non-blocking, never solves
+
+``submit`` is admission control: a bounded queue with explicit rejection
+(backpressure), plus shed-at-admission for deadlines that are already
+unmeetable.  Admitted tickets flow admission → adaptive batching window
+→ EDF scheduler → ``MOOService.step_sessions`` (one executor dispatch
+per structure group), with the dispatcher thread draining probe work so
+``recommend`` stays non-blocking throughout — it reads the live
+frontier under the service lock, which coalesced stepping releases
+around device dispatches.
+
+Lock order is strictly plane lock → service lock → executor lock; the
+plane lock is never held across a device dispatch.
+
+The ``clock`` is injectable (tests drive deadlines deterministically
+with a fake clock and call :meth:`FrontDesk.poll` manually instead of
+starting the thread).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.frontdesk.admission import (
+    DONE,
+    ERROR,
+    REJECTED,
+    SHED,
+    SLO_CLASSES,
+    AdmissionQueue,
+    SLOClass,
+    Ticket,
+)
+from repro.frontdesk.batcher import AdaptiveBatcher
+from repro.frontdesk.scheduler import EDFScheduler
+
+
+class FrontDesk:
+    """Async serving plane: admission, micro-batching, EDF dispatch."""
+
+    def __init__(
+        self,
+        service,
+        capacity: int = 256,
+        batcher: AdaptiveBatcher | None = None,
+        session_kwargs: dict | None = None,
+        clock=time.monotonic,
+        poll_floor_s: float = 0.25,
+    ):
+        self.service = service
+        self.queue = AdmissionQueue(capacity)
+        self.batcher = batcher if batcher is not None else AdaptiveBatcher()
+        self.scheduler = EDFScheduler()
+        self.session_kwargs = dict(session_kwargs or {})
+        self.clock = clock
+        self.poll_floor_s = poll_floor_s
+        self.dispatches = 0
+        self.dispatched_probes = 0
+        self.dispatch_errors = 0
+        self._spec_sessions: dict[str, str] = {}
+        self._cond = threading.Condition()  # the plane lock
+        self._thread: threading.Thread | None = None
+        self._stop = False
+
+    # -- admission -----------------------------------------------------
+    def submit(
+        self,
+        spec=None,
+        session_id: str | None = None,
+        deadline_s: float | None = None,
+        slo: SLOClass | str = "standard",
+        n_probes: int = 16,
+    ) -> Ticket:
+        """Admit (or reject) one probe request; returns immediately.
+
+        Exactly one of ``spec`` / ``session_id`` selects the tenant:
+        recurring specs reuse one plane-owned session per task
+        signature.  A full queue yields a ``rejected`` ticket — the
+        backpressure signal; a deadline that is already unmeetable
+        (``deadline_s <= 0``) yields a ``shed`` ticket that is never
+        enqueued, let alone dispatched.
+        """
+        if (spec is None) == (session_id is None):
+            raise ValueError("pass exactly one of spec / session_id")
+        if isinstance(slo, str):
+            slo = SLO_CLASSES[slo]
+        if deadline_s is None:
+            deadline_s = slo.deadline_s
+        now = self.clock()
+        with self._cond:
+            admitted = self.queue.try_admit()
+        if not admitted:
+            t = Ticket(session_id=session_id or "", group_key=(),
+                       slo=slo, deadline=now + deadline_s,
+                       n_probes=n_probes, submitted_at=now)
+            t.finish(REJECTED, now)
+            return t
+        try:
+            sid = (session_id if session_id is not None
+                   else self._resolve_session(spec))
+            key = self.service.session_dispatch_key(sid)
+        except Exception:
+            with self._cond:
+                self.queue.release(ERROR)
+            raise
+        t = Ticket(session_id=sid, group_key=key, slo=slo,
+                   deadline=now + deadline_s, n_probes=n_probes,
+                   submitted_at=now)
+        if slo.sheddable and deadline_s <= 0:
+            with self._cond:
+                t.finish(SHED, now)
+                self.queue.release(SHED)
+            return t
+        with self._cond:
+            self.scheduler.add(t)
+            self.batcher.note_arrival(key, now)
+            self._cond.notify_all()
+        return t
+
+    def _resolve_session(self, spec) -> str:
+        """One plane-owned session per task signature (recurring jobs
+        re-attach).  Creation runs outside the plane lock — it may
+        compile — with a race-safe publish."""
+        sig = spec.signature()
+        with self._cond:
+            sid = self._spec_sessions.get(sig)
+        if sid is not None:
+            return sid
+        sid = self.service.create_session(spec, **self.session_kwargs)
+        with self._cond:
+            cur = self._spec_sessions.setdefault(sig, sid)
+        if cur != sid:  # lost the race — keep the winner's session
+            self.service.close_session(sid)
+        return cur
+
+    # -- dispatch ------------------------------------------------------
+    def poll(self) -> dict:
+        """One dispatcher iteration: shed expired work, pick ready
+        groups in EDF order, run each group as one coalesced
+        ``step_sessions`` round (plane lock released), settle tickets.
+        Tests call this directly with a fake clock; the dispatcher
+        thread calls it in a loop."""
+        now = self.clock()
+        claims: list[tuple[tuple, list[Ticket], bool]] = []
+        shed_n = 0
+        with self._cond:
+            for t in self.scheduler.shed_expired(now):
+                t.finish(SHED, now)
+                self.queue.release(SHED)
+                shed_n += 1
+            sizes = self.scheduler.group_sizes()
+            for key in self.scheduler.group_order():
+                edl = self.scheduler.earliest_deadline(key)
+                if self.batcher.ready(key, sizes[key], edl, now):
+                    expired = self.batcher.window_expired(key, now)
+                    claims.append(
+                        (key, self.scheduler.claim_group(key), expired))
+        probes = 0
+        for key, tickets, expired in claims:
+            sids = list(dict.fromkeys(t.session_id for t in tickets))
+            t0 = self.clock()
+            try:
+                out = self.service.step_sessions(sids, origin="frontdesk")
+            except Exception:
+                with self._cond:
+                    end = self.clock()
+                    for t in tickets:
+                        t.finish(ERROR, end)
+                        self.queue.release(ERROR)
+                    self.dispatch_errors += 1
+                continue
+            wall = self.clock() - t0
+            with self._cond:
+                end = self.clock()
+                self.batcher.on_dispatch(key, len(tickets), wall,
+                                         expired, end)
+                exhausted = set(out["exhausted"])
+                for t in tickets:
+                    t.credited += out["per_session"].get(t.session_id, 0)
+                    if t.credited >= t.n_probes or t.session_id in exhausted:
+                        t.finish(DONE, end)
+                        self.queue.release(DONE)
+                    elif t.slo.sheddable and t.deadline <= end:
+                        t.finish(SHED, end)
+                        self.queue.release(SHED)
+                        shed_n += 1
+                    else:  # partial progress — back in the queue
+                        self.scheduler.add(t)
+                        self.batcher.note_arrival(key, end)
+                self.dispatches += 1
+                self.dispatched_probes += out["probes"]
+                probes += out["probes"]
+        return {"groups": len(claims), "probes": probes, "shed": shed_n}
+
+    # -- dispatcher thread ---------------------------------------------
+    def start(self) -> "FrontDesk":
+        if self._thread is not None:
+            return self
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._run, name="frontdesk-dispatcher", daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                if self._stop:
+                    return
+                if not len(self.scheduler):
+                    self._cond.wait(timeout=self.poll_floor_s)
+                    if self._stop:
+                        return
+                hint = self.batcher.wait_hint(
+                    self.scheduler.group_sizes(), self.clock())
+            if hint is not None and hint > 1e-4:
+                with self._cond:
+                    if self._stop:
+                        return
+                    self._cond.wait(timeout=min(hint, self.poll_floor_s))
+            self.poll()
+
+    def stop(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        """Wait until no live tickets remain (benchmark teardown)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._cond:
+                if self.queue.live == 0:
+                    return True
+            time.sleep(0.005)
+        return False
+
+    def __enter__(self) -> "FrontDesk":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- telemetry -----------------------------------------------------
+    def stats(self) -> dict:
+        """Consistent plane snapshot (admission counters, pending depth,
+        dispatch totals, batcher windows)."""
+        with self._cond:
+            out = self.queue.snapshot()
+            out.update(
+                pending=len(self.scheduler),
+                groups=len(self.scheduler.group_sizes()),
+                dispatches=self.dispatches,
+                dispatched_probes=self.dispatched_probes,
+                dispatch_errors=self.dispatch_errors,
+                sessions=len(self._spec_sessions),
+                batcher=self.batcher.snapshot(),
+            )
+            return out

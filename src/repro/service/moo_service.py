@@ -20,9 +20,14 @@ and are implemented here:
   generalization of PF-AP's cross-rectangle batch).
 
 The service is thread-safe at the granularity of its public methods (one
-re-entrant lock); heavy math runs inside jit'd JAX calls which release the
-GIL poorly anyway, so callers scale by batching, not threads — exactly the
-paper's SIMD-over-threads argument (DESIGN.md §2).
+re-entrant lock), and the coalesced stepping path releases that lock
+around the actual device dispatch: ``step_all``/``step_sessions`` pop
+probe cells under the lock, solve them with the lock *released*, then
+re-acquire to absorb results — so ``recommend`` and ``stats`` stay
+responsive while a multi-second MOGD batch is in flight (the frontdesk's
+non-blocking-recommend invariant, DESIGN.md §12).  Heavy math still runs
+inside jit'd JAX calls, so callers scale by batching, not threads —
+exactly the paper's SIMD-over-threads argument (DESIGN.md §2).
 """
 
 from __future__ import annotations
@@ -38,7 +43,7 @@ import numpy as np
 from repro.core import MOGDConfig, MOOProblem, ProgressiveFrontier
 from repro.core.dag import ComposedFrontier, JobDAG
 from repro.core.mogd import MOGDSolver, solve_grouped
-from repro.core.progressive_frontier import PFResult, PFState, coalesce_step
+from repro.core.progressive_frontier import PFResult, PFState
 from repro.core.task import Preference, TaskSpec, preference_from_legacy
 from repro.exec import ProbeExecutor
 
@@ -170,6 +175,11 @@ class MOOService:
         self.coalesced_probes = 0
         self.frontier_invalidations = 0
         self.warm_resolves = 0
+        # in-flight telemetry for the async admission plane (DESIGN.md
+        # §12): probe rows currently being solved with the service lock
+        # RELEASED — a concurrent stats() call observes them directly.
+        self.in_flight_probes = 0
+        self.in_flight_dispatches = 0
 
     # ------------------------------------------------------------------
     def _solver_for(self, problem: MOOProblem, signature: tuple,
@@ -601,72 +611,177 @@ class MOOService:
             sess.state = res.state
             return res
 
+    def _group_key(self, sess: _Session) -> tuple:
+        """The coalescing identity ``step_all``/``step_sessions`` group
+        by: the executor structure key, so sessions over DIFFERENT
+        workloads batch into one dispatch when their programs share a
+        compiled structure (params ride as data; target/bounds per box).
+        Legacy mode (``structure_coalescing=False``) groups by the
+        content-addressed solver-cache key instead — never ``id()``."""
+        if self.structure_coalescing:
+            return sess.engine.solver.dispatch_key()
+        return (*sess.solver_key, sess.engine.target)
+
+    def session_dispatch_key(self, session_id: str) -> tuple:
+        """The hashable coalescing key of one session — the frontdesk
+        batcher groups pending probe work by it so each micro-batch maps
+        onto ONE executor dispatch (DESIGN.md §12)."""
+        with self._lock:
+            sess = self._get(session_id)
+            if sess.engine.mode != "AP":
+                return ("sequential", *sess.solver_key)
+            return self._group_key(sess)
+
     def step_all(self, rounds: int = 1) -> dict:
-        """Coalesced scheduling: for each group of active sessions sharing a
-        compiled solver (same signature/config/target), pop every session's
-        top rectangles and solve *all* their probe cells in one MOGD batch.
+        """Coalesced scheduling: for each group of active sessions sharing
+        a compiled program structure, pop every session's top rectangles
+        and solve *all* their probe cells in one MOGD batch.  The device
+        dispatch itself runs with the service lock released (see
+        :meth:`_step_round`).
 
         Returns aggregate stats for the performed rounds."""
         stats = {"rounds": 0, "batches": 0, "probes": 0, "sessions": 0}
+        for _ in range(rounds):
+            with self._lock:
+                sessions = list(self._sessions.values())
+            out = self._step_round(sessions)
+            if out["probes"] == 0:
+                break
+            stats["rounds"] += 1
+            for k in ("batches", "probes", "sessions"):
+                stats[k] += out[k]
+        return stats
+
+    def step_sessions(self, session_ids,
+                      origin: str | None = "frontdesk") -> dict:
+        """One coalesced probe round over exactly the named sessions —
+        the frontdesk scheduler's dispatch seam (DESIGN.md §12): EDF
+        decides *which* sessions' work drains next, this method turns the
+        chosen set into (at most one per structure group) executor
+        dispatches.  Unknown or closed ids are skipped silently — a
+        tenant leaving between schedule and dispatch is normal traffic.
+
+        Returns ``{"batches", "probes", "sessions", "per_session":
+        {sid: probes}, "exhausted": [sid, ...]}`` where ``exhausted``
+        names sessions whose rectangle queue is now empty (their frontier
+        is final — pending tickets can complete immediately)."""
+        with self._lock:
+            sessions = [self._sessions[s] for s in session_ids
+                        if s in self._sessions]
+        return self._step_round(sessions, origin=origin)
+
+    def _step_round(self, sessions: list[_Session],
+                    origin: str | None = None) -> dict:
+        """One probe round over ``sessions``: prepare (pop probe cells)
+        under the service lock, solve each structure group's batch with
+        the lock RELEASED, re-acquire to absorb results.  ``recommend``
+        and ``stats`` therefore never wait on a device dispatch — the
+        non-blocking serving invariant the frontdesk builds on.  A failed
+        dispatch restores every popped-but-unsolved cell (no uncertain
+        space leaks) before re-raising.
+
+        Must be called WITHOUT the service lock held (the lock is
+        re-entrant, so a holder would silently serialize the dispatch)."""
+        out = {"batches": 0, "probes": 0, "sessions": 0,
+               "per_session": {}, "exhausted": []}
         with self._lock:
             self._refresh_stale_locked()
-            for _ in range(rounds):
-                groups: dict[tuple, list[_Session]] = {}
-                singles: list[_Session] = []
-                for sess in self._sessions.values():
-                    if sess.state is None:
-                        sess.state = sess.engine.initialize()
-                    if not len(sess.state.queue):
-                        continue  # exhausted — frontier is final
-                    if sess.engine.mode == "AP":
-                        # group by the executor structure key: sessions
-                        # over DIFFERENT workloads batch into one dispatch
-                        # when their programs share a compiled structure
-                        # (params ride as data; target/bounds per box).
-                        # Legacy mode groups by the content-addressed
-                        # solver-cache key instead — never id()
-                        if self.structure_coalescing:
-                            key = sess.engine.solver.dispatch_key()
-                        else:
-                            key = (*sess.solver_key, sess.engine.target)
-                        groups.setdefault(key, []).append(sess)
-                    else:
-                        singles.append(sess)
-                if not groups and not singles:
-                    break
-                stats["rounds"] += 1
-                for sessions in groups.values():
-                    n = self._coalesced_step(sessions)
-                    stats["batches"] += 1
-                    stats["probes"] += n
-                    stats["sessions"] += len(sessions)
+            groups: dict[tuple, list[_Session]] = {}
+            singles: list[_Session] = []
+            for sess in sessions:
+                if self._sessions.get(sess.session_id) is not sess:
+                    continue  # closed (or warm-replaced) since snapshot
+                if sess.state is None:
+                    sess.state = sess.engine.initialize()
+                if not len(sess.state.queue):
+                    out["exhausted"].append(sess.session_id)
+                    continue  # exhausted — frontier is final
+                if sess.engine.mode == "AP":
+                    groups.setdefault(self._group_key(sess), []).append(sess)
+                else:
+                    singles.append(sess)
+            prepared_groups = []
+            for sess_list in groups.values():
+                prepared = []
+                for s in sess_list:
+                    cells, boxes = s.engine.prepare_parallel(s.state)
+                    if boxes is not None:
+                        prepared.append((s, cells, boxes))
+                    elif not len(s.state.queue):
+                        out["exhausted"].append(s.session_id)
+                if prepared:
+                    prepared_groups.append(prepared)
+            n_rows = sum(b.shape[0] for g in prepared_groups for *_, b in g)
+            self.in_flight_probes += n_rows
+            self.in_flight_dispatches += len(prepared_groups)
+        # -- device dispatches: service lock RELEASED -----------------
+        pending = list(prepared_groups)
+        try:
+            while pending:
+                prepared = pending.pop(0)
+                total = sum(b.shape[0] for *_, b in prepared)
+                t0 = time.perf_counter()
+                try:
+                    res = solve_grouped(
+                        [(s.engine.solver, boxes, s.engine.target)
+                         for s, _, boxes in prepared], origin=origin)
+                except Exception:
+                    pending.insert(0, prepared)  # restore this group too
+                    raise
+                wall = time.perf_counter() - t0
+                with self._lock:
+                    off = 0
+                    for s, cells, boxes in prepared:
+                        n = boxes.shape[0]
+                        sub = dataclasses.replace(
+                            res, x=res.x[off: off + n], f=res.f[off: off + n],
+                            feasible=res.feasible[off: off + n])
+                        s.engine.absorb(s.state, cells, sub)
+                        # charge each session its share of the dispatch
+                        s.state.elapsed += wall * (n / total)
+                        s.state.record()
+                        out["per_session"][s.session_id] = (
+                            out["per_session"].get(s.session_id, 0) + n)
+                        if not len(s.state.queue):
+                            out["exhausted"].append(s.session_id)
+                        off += n
+                    self.in_flight_probes -= total
+                    self.in_flight_dispatches -= 1
+                    self.coalesced_batches += 1
+                    self.coalesced_probes += total
+                    out["batches"] += 1
+                    out["probes"] += total
+                    out["sessions"] += len(prepared)
+        except Exception:
+            # a failed shared dispatch must not leak any tenant's popped
+            # uncertain space — return every unsolved cell to its queue
+            with self._lock:
+                for prepared in pending:
+                    for s, cells, boxes in prepared:
+                        s.engine.restore(s.state, cells)
+                    self.in_flight_probes -= sum(
+                        b.shape[0] for *_, b in prepared)
+                    self.in_flight_dispatches -= 1
+            raise
+        # -- sequential (PF-S / PF-AS) sessions stay under the lock ----
+        if singles:
+            with self._lock:
                 for sess in singles:
+                    if (self._sessions.get(sess.session_id) is not sess
+                            or sess.state is None
+                            or not len(sess.state.queue)):
+                        continue
                     t0 = time.perf_counter()
                     before = sess.state.probes
                     sess.engine._step_sequential(sess.state)
                     sess.state.elapsed += time.perf_counter() - t0
                     sess.state.record()
-                    stats["probes"] += sess.state.probes - before
-                    stats["sessions"] += 1
-        return stats
-
-    def _coalesced_step(self, sessions: list[_Session]) -> int:
-        """One shared executor dispatch over every session's pending cells
-        (``core.progressive_frontier.coalesce_step`` +
-        ``core.mogd.solve_grouped``): each session's solver contributes
-        its own params/bounds/target as per-box data, so sessions over
-        different workloads — same model architecture — still share the
-        single compiled program and the single device dispatch."""
-        total = coalesce_step(
-            [(s.engine, s.state) for s in sessions],
-            lambda _boxes, prepared: solve_grouped(
-                [(engine.solver, boxes, engine.target)
-                 for engine, _state, _cells, boxes in prepared]),
-        )
-        if total:
-            self.coalesced_batches += 1
-            self.coalesced_probes += total
-        return total
+                    n = sess.state.probes - before
+                    out["probes"] += n
+                    out["sessions"] += 1
+                    out["per_session"][sess.session_id] = (
+                        out["per_session"].get(sess.session_id, 0) + n)
+        return out
 
     def run_until(self, min_probes: int, max_rounds: int = 10_000) -> dict:
         """Drive ``step_all`` until every active session has spent at least
@@ -677,11 +792,12 @@ class MOOService:
             # restarts its probe budget, so it must count as pending below
             self._refresh_stale_locked()
         for _ in range(max_rounds):
-            pending = [
-                s for s in self._sessions.values()
-                if s.state is None
-                or (s.state.probes < min_probes and len(s.state.queue))
-            ]
+            with self._lock:
+                pending = [
+                    s for s in self._sessions.values()
+                    if s.state is None
+                    or (s.state.probes < min_probes and len(s.state.queue))
+                ]
             if not pending:
                 break
             st = self.step_all(rounds=1)
@@ -763,6 +879,9 @@ class MOOService:
             )
 
     def stats(self) -> dict:
+        """One consistent snapshot of service counters, taken atomically
+        under the service lock — every value describes the same instant
+        (the frontdesk's admission decisions read this)."""
         with self._lock:
             return {
                 "sessions": len(self._sessions),
@@ -786,4 +905,16 @@ class MOOService:
                 "total_probes": sum(
                     s.state.probes for s in self._sessions.values()
                     if s.state is not None),
+                # serving-plane telemetry (DESIGN.md §12): rectangles
+                # still queued across sessions, sessions with pending
+                # work, and probe rows currently solving with the
+                # service lock released
+                "queue_depth": sum(
+                    len(s.state.queue) for s in self._sessions.values()
+                    if s.state is not None),
+                "active_sessions": sum(
+                    1 for s in self._sessions.values()
+                    if s.state is None or len(s.state.queue)),
+                "in_flight_probes": self.in_flight_probes,
+                "in_flight_dispatches": self.in_flight_dispatches,
             }

@@ -37,6 +37,7 @@ class ServeEngine:
         self.cache, _ = init_cache(cfg, 1, max_seq)
         # one per-slot cache (B=1 each) so prefill/evict are per-slot
         self.slots: list = [None] * batch
+        self.pending: list[Request] = []  # admitted, awaiting a slot
         self.slot_cache = [jax.tree.map(lambda a: a.copy(), self.cache)
                            for _ in range(batch)]
         self.slot_pos = np.zeros(batch, np.int32)
@@ -53,21 +54,37 @@ class ServeEngine:
         self.key, k = jax.random.split(self.key)
         return int(jax.random.categorical(k, logits / self.temperature))
 
+    def _place(self, req: Request, slot: int) -> None:
+        logits, cache = self._prefill(
+            self.params, {"tokens": req.prompt[None, :]})
+        self.slot_cache[slot] = cache
+        self.slot_pos[slot] = len(req.prompt)
+        req.out.append(self._sample(logits[0]))
+        self.slots[slot] = req
+
+    def _drain_pending(self) -> None:
+        """Prefill queued requests into free slots — called at the end
+        of every ``step()`` so a request admitted while the table was
+        full starts decoding the step a slot frees, not one step late."""
+        for i in range(self.batch):
+            if not self.pending:
+                return
+            if self.slots[i] is None:
+                self._place(self.pending.pop(0), i)
+
     def submit(self, req: Request) -> bool:
+        """Place into a free slot, else queue. Returns True when the
+        request started prefill immediately (False — it is pending)."""
         for i in range(self.batch):
             if self.slots[i] is None:
-                logits, cache = self._prefill(
-                    self.params, {"tokens": req.prompt[None, :]})
-                self.slot_cache[i] = cache
-                self.slot_pos[i] = len(req.prompt)
-                tok = self._sample(logits[0])
-                req.out.append(tok)
-                self.slots[i] = req
+                self._place(req, i)
                 return True
-        return False  # no free slot
+        self.pending.append(req)
+        return False  # queued; drained into the next freed slot
 
     def step(self) -> int:
-        """Decode one token for every active slot. Returns #active."""
+        """Decode one token for every active slot, then drain pending
+        requests into any slots this step freed. Returns #active."""
         active = 0
         for i, req in enumerate(self.slots):
             if req is None:
@@ -83,13 +100,13 @@ class ServeEngine:
                     or self.slot_pos[i] >= self.max_seq - 1):
                 req.done = True
                 self.slots[i] = None
+        self._drain_pending()
         return active
 
     def run(self, requests: list[Request]) -> list[Request]:
-        pending = list(requests)
-        while pending or any(s is not None for s in self.slots):
-            while pending and self.submit(pending[0]):
-                pending.pop(0)
-            if not self.step() and pending:
+        for req in requests:
+            self.submit(req)
+        while self.pending or any(s is not None for s in self.slots):
+            if not self.step() and self.pending:
                 raise RuntimeError("engine stalled")
         return requests

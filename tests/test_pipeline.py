@@ -73,6 +73,34 @@ class TestServeEngine:
         assert all(len(r.out) >= 6 for r in reqs)
         assert all(0 <= t < cfg.vocab for r in reqs for t in r.out)
 
+    def test_pending_drains_into_freed_slot_same_step(self):
+        """A queued request must start decoding the step a slot frees
+        (admission staleness fix): submit 2 into a 1-slot table, drive
+        the first to completion — the pending one is prefil led by the
+        same step() that freed the slot, not a step later."""
+        from repro.configs import get_smoke
+        from repro.nn import init_params
+        from repro.serving import Request, ServeEngine
+
+        cfg = get_smoke("qwen3-4b")
+        params, _ = init_params(jax.random.PRNGKey(0), cfg)
+        engine = ServeEngine(params, cfg, batch=1, max_seq=48)
+        rng = np.random.default_rng(1)
+        first = Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab, 8).astype(np.int32), max_new=2)
+        second = Request(rid=1, prompt=rng.integers(
+            0, cfg.vocab, 8).astype(np.int32), max_new=2)
+        assert engine.submit(first) is True
+        assert engine.submit(second) is False  # table full -> queued
+        assert engine.pending == [second]
+        engine.step()  # first reaches max_new=2 and frees its slot
+        assert first.done
+        assert engine.pending == []  # drained by the SAME step
+        assert engine.slots[0] is second  # already prefil led
+        assert len(second.out) == 1
+        engine.step()
+        assert second.done
+
     def test_greedy_deterministic(self):
         from repro.configs import get_smoke
         from repro.nn import init_params

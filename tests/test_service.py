@@ -233,3 +233,83 @@ class TestRecommend:
         svc.probe(sid, n_probes=6)
         with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
             svc.recommend(sid, strategy="nope")
+
+
+class TestConcurrentServing:
+    """The lock-release dispatch contract (DESIGN.md §12): while a
+    coalesced step is mid-solve, ``recommend`` and ``stats`` answer from
+    other threads, in-flight counters expose the dispatch, and nothing
+    torn is ever observed."""
+
+    def test_recommend_and_stats_during_inflight_dispatch(self, svc):
+        import threading
+
+        sid = svc.create_session(zdt1_task())
+        svc.probe(sid, n_probes=6)  # seed a frontier to recommend from
+        in_solve, release = threading.Event(), threading.Event()
+        orig = svc.executor.solve_requests
+
+        def slow(requests, origin=None):
+            in_solve.set()
+            release.wait(timeout=30.0)
+            return orig(requests, origin=origin)
+
+        svc.executor.solve_requests = slow
+        try:
+            stepper = threading.Thread(target=svc.step_all, daemon=True)
+            stepper.start()
+            assert in_solve.wait(timeout=30.0)
+            got: list = []
+
+            def read():
+                got.append(svc.stats())
+                got.append(svc.recommend(sid))
+
+            reader = threading.Thread(target=read, daemon=True)
+            reader.start()
+            reader.join(timeout=10.0)
+            assert len(got) == 2, "stats/recommend blocked behind dispatch"
+            st = got[0]
+            assert st["in_flight_dispatches"] == 1
+            assert st["in_flight_probes"] > 0
+        finally:
+            release.set()
+        stepper.join(timeout=60.0)
+        assert not stepper.is_alive()
+        st = svc.stats()
+        assert st["in_flight_dispatches"] == 0
+        assert st["in_flight_probes"] == 0
+
+    def test_recommend_hammer_while_step_all_runs(self, svc):
+        import threading
+
+        sids = [svc.create_session(zdt1_task()),
+                svc.create_session(sphere2_task())]
+        for sid in sids:
+            svc.probe(sid, n_probes=6)
+        stop = threading.Event()
+        errors: list = []
+        counts = [0]
+
+        def hammer():
+            while not stop.is_set():
+                try:
+                    for sid in sids:
+                        rec = svc.recommend(sid)
+                        assert rec.frontier_size >= 1
+                        st = svc.stats()
+                        assert st["in_flight_dispatches"] >= 0
+                    counts[0] += 1
+                except Exception as e:  # surfaced after the join
+                    errors.append(e)
+                    return
+
+        t = threading.Thread(target=hammer, daemon=True)
+        t.start()
+        try:
+            svc.run_until(min_probes=40)
+        finally:
+            stop.set()
+            t.join(timeout=10.0)
+        assert not errors, f"reader thread failed: {errors[:1]}"
+        assert counts[0] > 0  # the hammer actually overlapped stepping
