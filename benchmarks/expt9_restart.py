@@ -1,0 +1,212 @@
+"""Expt 9 — durable frontier plane: warm restarts from the vault.
+
+The claim (DESIGN.md §13): frontiers are expensive to compute and cheap
+to store, so a content-addressed vault snapshotting PF state lets a
+cold-restarted service serve its first recommendation from durable state
+— no re-solve, no probe dispatches — while drift tombstones guarantee a
+frontier from a dead regime is never warm-started into the new one.
+
+Scenario: a registry-served analytics workload is tuned to a probe
+budget and the service process "dies" (new vault handle, new registry,
+new MOOService — nothing shared but the directory).  Three arms:
+
+* **scratch** — cold restart with no vault: pays the full solve before
+  its first recommendation (the baseline every restart used to pay);
+* **warm** — cold restart with the vault: registry rehydrates its model
+  snapshots, the session's exact task signature hits the vault, and the
+  full PF state (frontier, pareto mask, rectangle queue, probe ledger)
+  is imported;
+* **post-drift** — the true surface shifts, the drift event tombstones
+  the workload's vault entries, and a third restart must come up cold
+  (no restore, no seed) rather than serve the stale frontier.
+
+Acceptance gates:
+
+* warm restart reaches >= 95% of the pre-restart hypervolume with ZERO
+  executor dispatches at recommend time;
+* first-recommend latency after the warm restart is >= 10x lower than
+  the solve-from-scratch path;
+* after drift, no vault entry for the workload survives and the restart
+  performs neither a restore nor a seed.
+
+    PYTHONPATH=src python -m benchmarks.expt9_restart
+    PYTHONPATH=src python scripts/run_benchmarks.py --smoke   # CI path
+
+Writes ``results/BENCH_expt9_restart.json``.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.core import MOGDConfig, Objective, continuous, hypervolume_2d
+from repro.modelserver import DriftConfig, ModelRegistry, TrainerConfig
+from repro.persist import FrontierVault
+from repro.service import MOOService
+
+from .common import Timer, emit, write_json
+
+MOGD = MOGDConfig(steps=60, multistart=6)
+
+KNOBS = (
+    continuous("scale", 0.0, 1.0),
+    continuous("locality", 0.0, 1.0),
+    continuous("mem_fraction", 0.0, 1.0),
+    continuous("compress", 0.0, 1.0),
+)
+THETA_PRE = np.array([0.20, 0.80, 0.30])
+THETA_POST = np.array([0.85, 0.15, 0.70])
+PENALTY = 1.5
+
+
+def true_objectives(X: np.ndarray, theta: np.ndarray) -> np.ndarray:
+    """Ground-truth (latency, cost): one tradeoff knob + three knobs with
+    an efficient operating point θ that the drift regime moves."""
+    X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+    pen = PENALTY * np.sum((X[:, 1:] - theta) ** 2, axis=1)
+    lat = 0.3 + X[:, 0] + pen
+    cost = 0.3 + (1.1 - X[:, 0]) + pen
+    return np.stack([lat, cost], axis=1)
+
+
+def sample_traces(theta: np.ndarray, n: int, rng, noise: float = 0.02):
+    X = rng.random((n, len(KNOBS)))
+    Y = true_objectives(X, theta)
+    return X, Y * np.exp(rng.normal(0.0, noise, Y.shape))
+
+
+def _registry(vault, quick: bool) -> ModelRegistry:
+    return ModelRegistry(
+        TrainerConfig(hidden=(48, 48), max_epochs=60 if quick else 120,
+                      seed=0),
+        DriftConfig(window=24, min_obs=12, mult=2.5, floor=0.12),
+        trim_on_drift=32,
+        retrain_on_drift=True,
+        retrain_every=24,
+        vault=vault,
+    )
+
+
+def _hv(F: np.ndarray, ref: np.ndarray) -> float:
+    return float(hypervolume_2d(F, ref)) if len(F) else 0.0
+
+
+def run(quick: bool = True) -> dict:
+    n_warm = 240 if quick else 480
+    probe_budget = 48 if quick else 96
+    root = tempfile.mkdtemp(prefix="expt9_vault_")
+    rng = np.random.default_rng(7)
+
+    # -- generation 1: train, tune, persist, die -------------------------
+    vault1 = FrontierVault(root)
+    reg1 = _registry(vault1, quick)
+    w = reg1.register_workload(
+        ("expt9", "analytics"), KNOBS,
+        (Objective("latency"), Objective("cost")))
+    X0, Y0 = sample_traces(THETA_PRE, n_warm, rng)
+    reg1.observe_batch(w, X0, Y0)
+    rep = reg1.retrain(w)
+    assert rep.improved, "warmup training must promote v1"
+
+    svc1 = MOOService(mogd=MOGD, batch_rects=4, grid_l=2, vault=vault1)
+    with Timer() as t_scratch:
+        sid1 = svc1.create_workload_session(reg1, w)
+        svc1.run_until(min_probes=probe_budget)
+        svc1.recommend(sid1)
+    F_pre, _ = svc1.frontier(sid1)
+    probes_pre = svc1.session_info(sid1).probes
+    svc1.close_session(sid1)  # last-chance snapshot rides here
+    vault1.flush()
+    snapshots = svc1.stats()["vault_snapshots"]
+    vault1.close()
+    assert snapshots >= 1, "generation 1 never persisted its frontier"
+
+    # the HV reference is anchored to the pre-restart frontier: both
+    # generations are scored inside the same box
+    span = np.maximum(F_pre.max(axis=0) - F_pre.min(axis=0), 1e-9)
+    ref = F_pre.max(axis=0) + 0.5 * span
+    hv_pre = _hv(F_pre, ref)
+
+    # -- generation 2: cold process, warm state --------------------------
+    vault2 = FrontierVault(root)
+    reg2 = _registry(vault2, quick)
+    rehydrated = reg2.rehydrate()
+    svc2 = MOOService(mogd=MOGD, batch_rects=4, grid_l=2, vault=vault2)
+    with Timer() as t_warm:
+        sid2 = svc2.create_workload_session(reg2, w)
+        rec = svc2.recommend(sid2)
+    stats2 = svc2.stats()
+    F_warm, _ = svc2.frontier(sid2)
+    hv_warm = _hv(F_warm, ref)
+    hv_ratio = hv_warm / max(hv_pre, 1e-12)
+    speedup = t_scratch.s / max(t_warm.s, 1e-12)
+
+    # -- generation 3: drift kills the durable frontier ------------------
+    Xd = rng.random((120, 2 + 2))
+    drifted = False
+    for i in range(len(Xd)):
+        evs = reg2.observe(w, Xd[i],
+                           true_objectives(Xd[i:i + 1], THETA_POST)[0])
+        if any(e.kind == "drift" for e in evs):
+            drifted = True
+            break
+    assert drifted, "shifted traces never crossed the drift watermark"
+    tombstones = svc2.stats()["vault_tombstones"]
+    surviving = vault2.latest_for_workload(w)
+    vault2.flush()
+    vault2.close()
+
+    vault3 = FrontierVault(root)
+    reg3 = _registry(vault3, quick)
+    reg3.rehydrate()
+    svc3 = MOOService(mogd=MOGD, batch_rects=4, grid_l=2, vault=vault3)
+    svc3.create_workload_session(reg3, w)
+    stats3 = svc3.stats()
+    vault3.close()
+
+    summary = {
+        "probes_pre_restart": int(probes_pre),
+        "snapshots_gen1": int(snapshots),
+        "rehydrated_workloads": len(rehydrated),
+        "hv_pre": hv_pre,
+        "hv_warm": hv_warm,
+        "hv_ratio": float(hv_ratio),
+        "hv_ratio_ok": bool(hv_ratio >= 0.95),
+        "scratch_first_recommend_s": float(t_scratch.s),
+        "warm_first_recommend_s": float(t_warm.s),
+        "restart_speedup": float(speedup),
+        "restart_speedup_ok": bool(speedup >= 10.0),
+        "warm_restores": stats2["vault_restores"],
+        "warm_executor_dispatches": stats2["executor_dispatches"],
+        "warm_zero_dispatch": bool(stats2["executor_dispatches"] == 0),
+        "recommend_frontier_size": int(rec.frontier_size),
+        "drift_tombstones": int(tombstones),
+        "vault_empty_after_drift": bool(surviving is None),
+        "post_drift_restores": stats3["vault_restores"],
+        "post_drift_seeds": stats3["vault_seeds"],
+        "post_drift_cold": bool(stats3["vault_restores"] == 0
+                                and stats3["vault_seeds"] == 0),
+        "probe_budget": probe_budget,
+    }
+    emit([{k: v for k, v in summary.items()
+           if not isinstance(v, (dict, list))}], "expt9_restart")
+    write_json("expt9_restart", summary, quick=quick)
+    assert summary["warm_restores"] == 1, "exact-signature restore missed"
+    assert summary["hv_ratio_ok"], (
+        f"warm restart recovered only {hv_ratio:.3f} of pre-restart HV")
+    assert summary["warm_zero_dispatch"], (
+        f"warm restart dispatched {stats2['executor_dispatches']} probe "
+        f"batches before its first recommendation")
+    assert summary["restart_speedup_ok"], (
+        f"warm restart only {speedup:.1f}x faster than scratch")
+    assert summary["vault_empty_after_drift"], (
+        "drift left a stale durable frontier behind")
+    assert summary["post_drift_cold"], (
+        "a drift-invalidated frontier was warm-started after restart")
+    return summary
+
+
+if __name__ == "__main__":
+    print({k: v for k, v in run().items()})

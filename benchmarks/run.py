@@ -29,6 +29,7 @@ SUITES = [
     "kernelbench",       # kernel vs oracle + VMEM accounting
     "expt7_scaling",     # device-scaling: mesh probe sharding 1->8 devices
     "expt8_serving",     # frontdesk admission plane: open-loop QPS/SLO
+    "expt9_restart",     # durable frontier plane: warm restart from vault
 ]
 
 

@@ -1,0 +1,122 @@
+"""Durable frontier plane: warm restarts from the vault (DESIGN.md §13).
+
+A registry-served workload is tuned, its Progressive Frontier state is
+snapshotted into a content-addressed ``FrontierVault``, and the process
+"dies".  A brand-new process — fresh registry, fresh service, nothing
+shared but the vault directory — rehydrates the trained model, hits the
+vault under the *same task signature*, and serves its first
+recommendation from the imported frontier with zero probe dispatches.
+Then the true surface drifts: the drift event tombstones the durable
+frontier, and a third restart correctly comes up cold instead of
+serving a frontier from the dead regime.
+
+    PYTHONPATH=src python examples/warm_restart.py
+"""
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import MOGDConfig, Objective, continuous
+from repro.modelserver import DriftConfig, ModelRegistry, TrainerConfig
+from repro.persist import FrontierVault
+from repro.service import MOOService
+
+KNOBS = (continuous("scale", 0.0, 1.0),
+         continuous("locality", 0.0, 1.0),
+         continuous("mem_fraction", 0.0, 1.0))
+MOGD = MOGDConfig(steps=50, multistart=4)
+
+
+def measure(X, theta):
+    """The 'real system': latency/cost with an efficient point at theta."""
+    X = np.atleast_2d(X)
+    pen = 2.0 * np.sum((X[:, 1:] - theta) ** 2, axis=1)
+    return np.stack([0.3 + X[:, 0] + pen,
+                     0.3 + (1.1 - X[:, 0]) + pen], axis=1)
+
+
+def make_registry(vault):
+    return ModelRegistry(
+        TrainerConfig(hidden=(32, 32), max_epochs=60, seed=0),
+        DriftConfig(window=16, min_obs=8, mult=2.5, floor=0.12),
+        trim_on_drift=24,
+        retrain_on_drift=True,
+        vault=vault,  # promoted snapshots persist automatically
+    )
+
+
+def main():
+    root = tempfile.mkdtemp(prefix="vault_demo_")
+    rng = np.random.default_rng(0)
+    theta = np.array([0.2, 0.7])
+
+    # -- generation 1: train, tune, persist, die -----------------------
+    print("== generation 1: cold solve ==")
+    vault = FrontierVault(root)
+    reg = make_registry(vault)
+    w = reg.register_workload(
+        ("demo", "analytics-q7"), KNOBS,
+        (Objective("latency_s"), Objective("cost_usd")))
+    X = rng.random((320, 3))
+    reg.observe_batch(w, X, measure(X, theta))
+    reg.retrain(w)
+
+    svc = MOOService(mogd=MOGD, batch_rects=4, grid_l=2, vault=vault)
+    t0 = time.perf_counter()
+    sid = svc.create_session(reg.task_spec(w))
+    svc.watch_workload(sid, reg, w)
+    svc.run_until(min_probes=48)
+    rec = svc.recommend(sid)
+    print(f"  first recommend after {time.perf_counter() - t0:.2f}s "
+          f"({svc.session_info(sid).probes} probes): {rec.objectives}")
+    svc.close_session(sid)  # last-chance vault snapshot
+    vault.flush()
+    print(f"  vault snapshots: {svc.stats()['vault_snapshots']}")
+    vault.close()
+
+    # -- generation 2: cold process, warm state ------------------------
+    print("== generation 2: warm restart ==")
+    vault = FrontierVault(root)
+    reg2 = make_registry(vault)
+    print(f"  rehydrated workloads: {reg2.rehydrate()}")
+    svc2 = MOOService(mogd=MOGD, batch_rects=4, grid_l=2, vault=vault)
+    t0 = time.perf_counter()
+    sid2 = svc2.create_workload_session(reg2, w)
+    rec2 = svc2.recommend(sid2)
+    st = svc2.stats()
+    print(f"  first recommend after {time.perf_counter() - t0:.4f}s: "
+          f"{rec2.objectives}")
+    print(f"  restores={st['vault_restores']} "
+          f"executor_dispatches={st['executor_dispatches']} "
+          f"(zero: the frontier came from disk)")
+
+    # -- drift: the durable frontier dies with its regime --------------
+    print("== drift -> tombstone ==")
+    theta_post = np.array([0.9, 0.1])
+    Xd = rng.random((80, 3))
+    for i in range(len(Xd)):
+        evs = reg2.observe(w, Xd[i], measure(Xd[i:i + 1], theta_post)[0])
+        if any(e.kind == "drift" for e in evs):
+            print(f"  drift detected after {i + 1} shifted traces")
+            break
+    print(f"  tombstones: {svc2.stats()['vault_tombstones']}, "
+          f"surviving entry: {vault.latest_for_workload(w)}")
+    vault.close()
+
+    # -- generation 3: post-drift restart must come up cold ------------
+    print("== generation 3: post-drift restart ==")
+    vault = FrontierVault(root)
+    reg3 = make_registry(vault)
+    reg3.rehydrate()
+    svc3 = MOOService(mogd=MOGD, batch_rects=4, grid_l=2, vault=vault)
+    svc3.create_workload_session(reg3, w)
+    st3 = svc3.stats()
+    print(f"  restores={st3['vault_restores']} seeds={st3['vault_seeds']} "
+          f"(cold: the stale frontier was never served)")
+    vault.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,7 @@ WEIGHTS = {
     "test_modelserver.py": 70,
     "test_models.py": 60,
     "test_properties.py": 45,
+    "test_persist.py": 40,
     "test_dag.py": 30,
 }
 

@@ -27,7 +27,8 @@ RESULTS = REPO / "results"
 
 # benchmarks with a smoke mode cheap enough for per-PR CI
 DEFAULT = ["service_throughput", "expt5_multistage", "expt6_adaptive",
-           "kernelbench", "expt7_scaling", "expt8_serving"]
+           "kernelbench", "expt7_scaling", "expt8_serving",
+           "expt9_restart"]
 
 
 def validate_artifact(name: str) -> dict:

@@ -68,6 +68,9 @@ from .progressive_frontier import (
     PFState,
     ProgressiveFrontier,
     coalesce_step,
+    export_pf_state,
+    import_pf_state,
+    live_seed_points,
     solve_pf,
 )
 from .dag import (

@@ -101,6 +101,67 @@ class FrontierStore:
         self.total_infeasible = 0  # offers excluded by the value constraints
 
     # ------------------------------------------------------------------
+    # Durable export/import (repro.persist, DESIGN.md §13): the state
+    # dict is the exact row history [0, n) — live AND dead rows with the
+    # alive mask — so a restored store reproduces the frontier, the
+    # pareto mask, the dedup keys, and every counter bit-for-bit.
+    def state_dict(self) -> tuple[dict, dict]:
+        """Export as ``(arrays, meta)`` for :mod:`repro.persist`.
+
+        ``arrays`` holds the appended rows ``F/X`` with their ``alive``
+        mask (dead rows included: the mask IS the pareto mask) and the
+        value-constraint box when declared; ``meta`` holds shapes,
+        tolerances, and the offered/accepted/infeasible counters.
+        """
+        arrays = {
+            "F": self._F[: self._n].copy(),
+            "X": self._X[: self._n].copy(),
+            "alive": self._alive[: self._n].copy(),
+        }
+        if self._bounds is not None:
+            arrays["bounds"] = self._bounds.copy()
+        meta = {
+            "k": self.k,
+            "dim": self.dim,
+            "bounds_tol": self._bounds_tol,
+            "total_offered": self.total_offered,
+            "total_accepted": self.total_accepted,
+            "total_infeasible": self.total_infeasible,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays: dict, meta: dict, use_kernel: bool = False,
+                   kernel_interpret: bool = True) -> "FrontierStore":
+        """Rebuild a store from :meth:`state_dict` output.
+
+        Kernel routing (``use_kernel``) follows the *restoring* process's
+        configuration, not the saved one — the stored values already
+        carry any fp32 cast applied at add time, so continued adds keep
+        the Pareto invariant either way.
+        """
+        F = np.asarray(arrays["F"], dtype=np.float64)
+        n = F.shape[0]
+        store = cls(
+            k=int(meta["k"]), dim=int(meta["dim"]), capacity=max(n, 1),
+            use_kernel=use_kernel, kernel_interpret=kernel_interpret,
+            bounds=arrays.get("bounds"),
+            bounds_tol=float(meta["bounds_tol"]))
+        store._F[:n] = F
+        store._X[:n] = np.asarray(arrays["X"], dtype=np.float64)
+        store._alive[:n] = np.asarray(arrays["alive"], dtype=bool)
+        store._n = n
+        for row, live in zip(np.round(F, 9), store._alive[:n]):
+            key = row.tobytes()
+            store._row_keys.append(key)
+            if live:
+                store._keys.add(key)
+        store.total_offered = int(meta["total_offered"])
+        store.total_accepted = int(meta["total_accepted"])
+        store.total_infeasible = int(meta["total_infeasible"])
+        return store
+
+    # ------------------------------------------------------------------
     @property
     def capacity(self) -> int:
         return self._F.shape[0]

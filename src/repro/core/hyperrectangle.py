@@ -92,6 +92,24 @@ class RectangleQueue:
         self.total_volume = 0.0
         self.push(initial)
 
+    @classmethod
+    def from_rects(cls, rects, initial_volume: float) -> "RectangleQueue":
+        """Rebuild a queue from an explicit rectangle set — the durable
+        restore path (repro.persist): ``initial_volume`` must be the
+        ORIGINAL queue's initial volume so the uncertain-space fraction
+        (Def 3.7) resumes where it left off instead of resetting to 1."""
+        q = cls.__new__(cls)
+        q._heap = []
+        q.initial_volume = max(float(initial_volume), 1e-300)
+        q.total_volume = 0.0
+        for r in rects:
+            q.push(r)
+        return q
+
+    def rects(self) -> list[Rectangle]:
+        """The queued rectangles (no order guarantee beyond heap layout)."""
+        return list(self._heap)
+
     def push(self, rect: Rectangle) -> None:
         if rect.volume <= 0.0:
             return

@@ -64,6 +64,75 @@ class PFState:
         )
 
 
+def export_pf_state(state: PFState) -> tuple[dict, dict]:
+    """Flatten a :class:`PFState` into ``(arrays, meta)`` for the durable
+    vault (repro.persist, DESIGN.md §13).
+
+    Everything a warm restart needs rides along: the frontier store's
+    full row history (see ``FrontierStore.state_dict``), the stacked
+    uncertain-rectangle corners plus the queue's original initial volume
+    (so the Def-3.7 uncertain fraction resumes, not resets), the global
+    utopia/nadir/objective-bounds, and the probe/elapsed/trace telemetry.
+    """
+    s_arrays, s_meta = state.store.state_dict()
+    arrays = {f"store/{k}": v for k, v in s_arrays.items()}
+    rects = state.queue.rects()
+    k = len(state.utopia)
+    arrays["queue_utopia"] = (
+        np.stack([r.utopia for r in rects]) if rects
+        else np.zeros((0, k), dtype=np.float64))
+    arrays["queue_nadir"] = (
+        np.stack([r.nadir for r in rects]) if rects
+        else np.zeros((0, k), dtype=np.float64))
+    arrays["utopia"] = np.asarray(state.utopia, dtype=np.float64)
+    arrays["nadir"] = np.asarray(state.nadir, dtype=np.float64)
+    arrays["bounds"] = np.asarray(state.bounds, dtype=np.float64)
+    arrays["trace"] = np.asarray(state.trace, dtype=np.float64).reshape(-1, 3)
+    meta = {
+        "store": s_meta,
+        "probes": state.probes,
+        "elapsed": state.elapsed,
+        "initial_volume": state.queue.initial_volume,
+    }
+    return arrays, meta
+
+
+def import_pf_state(arrays: dict, meta: dict, use_kernel: bool = False,
+                    kernel_interpret: bool = True) -> PFState:
+    """Inverse of :func:`export_pf_state` — rebuild a resumable state.
+
+    Kernel flags follow the restoring engine's configuration (see
+    ``FrontierStore.from_state``); everything else round-trips exactly.
+    """
+    store = FrontierStore.from_state(
+        {k[len("store/"):]: v for k, v in arrays.items()
+         if k.startswith("store/")},
+        meta["store"], use_kernel=use_kernel,
+        kernel_interpret=kernel_interpret)
+    rects = [make_rectangle(u, n)
+             for u, n in zip(arrays["queue_utopia"], arrays["queue_nadir"])]
+    queue = RectangleQueue.from_rects(
+        rects, initial_volume=float(meta["initial_volume"]))
+    return PFState(
+        queue=queue,
+        store=store,
+        utopia=np.asarray(arrays["utopia"], dtype=np.float64),
+        nadir=np.asarray(arrays["nadir"], dtype=np.float64),
+        bounds=np.asarray(arrays["bounds"], dtype=np.float64),
+        probes=int(meta["probes"]),
+        elapsed=float(meta["elapsed"]),
+        trace=[tuple(row) for row in np.asarray(arrays["trace"])],
+    )
+
+
+def live_seed_points(arrays: dict) -> np.ndarray:
+    """The live (pareto-mask) configurations of an exported state — the
+    ``X`` rows a version-mismatched restart feeds to
+    :meth:`ProgressiveFrontier.seed` as warm-start seeds."""
+    alive = np.asarray(arrays["store/alive"], dtype=bool)
+    return np.asarray(arrays["store/X"], dtype=np.float64)[alive]
+
+
 @dataclasses.dataclass
 class PFResult:
     F: np.ndarray  # (N, k) Pareto objective values (live frontier)
@@ -353,6 +422,13 @@ class ProgressiveFrontier:
         state.elapsed += time.perf_counter() - t0
         state.record()
         return state
+
+    def import_state(self, arrays: dict, meta: dict) -> PFState:
+        """Rebuild a persisted :class:`PFState` under THIS engine's kernel
+        configuration — the exact-signature warm-restart path: the
+        restored state resumes (or finalizes) with zero new probes."""
+        return import_pf_state(arrays, meta, use_kernel=self.use_kernel,
+                               kernel_interpret=self.kernel_interpret)
 
     def finalize(self, state: PFState) -> PFResult:
         """Alg. 1 line 25 is already maintained incrementally per probe —

@@ -66,6 +66,8 @@ class FrontDesk:
         self.dispatches = 0
         self.dispatched_probes = 0
         self.dispatch_errors = 0
+        self.fast_completions = 0  # tickets settled at submit time
+        # because the session's frontier was already final (vault restore)
         self._spec_sessions: dict[str, str] = {}
         self._cond = threading.Condition()  # the plane lock
         self._thread: threading.Thread | None = None
@@ -119,6 +121,19 @@ class FrontDesk:
             with self._cond:
                 t.finish(SHED, now)
                 self.queue.release(SHED)
+            return t
+        # warm-restart fast path (DESIGN.md §13): a session whose frontier
+        # is already final — e.g. vault-restored at create_session — has
+        # nothing to dispatch; complete the ticket at admission instead of
+        # making it ride a probe round.  Optional protocol: services
+        # without session_exhausted() keep the legacy dispatch-then-settle
+        # behavior.
+        probe_done = getattr(self.service, "session_exhausted", None)
+        if probe_done is not None and probe_done(sid):
+            with self._cond:
+                t.finish(DONE, now)
+                self.queue.release(DONE)
+                self.fast_completions += 1
             return t
         with self._cond:
             self.scheduler.add(t)
@@ -265,6 +280,7 @@ class FrontDesk:
                 dispatches=self.dispatches,
                 dispatched_probes=self.dispatched_probes,
                 dispatch_errors=self.dispatch_errors,
+                fast_completions=self.fast_completions,
                 sessions=len(self._spec_sessions),
                 batcher=self.batcher.snapshot(),
             )

@@ -1,0 +1,38 @@
+"""Durable frontier plane: content-addressed persistence (DESIGN.md §13).
+
+Three layers, bottom-up:
+
+* :mod:`repro.persist.store` — atomic directory entries (tmp-dir write,
+  manifest-last, rename commit, per-file sha256) shared with the
+  training checkpointer in ``repro.runtime.checkpoint``.
+* :mod:`repro.persist.codecs` — exact round-trip serialization of model
+  snapshots, regressors, and workload records (signature-stable: a
+  rehydrated registry reproduces the pre-restart task signatures).
+* :mod:`repro.persist.vault` — :class:`FrontierVault`, the store the
+  service layer talks to: write-behind frontier/model snapshots keyed by
+  task signature, tombstone ledger for drift invalidation, warm-restart
+  reads.
+
+``MOOService(vault=...)`` and ``ModelRegistry(vault=...)`` wire it in;
+``examples/warm_restart.py`` is the end-to-end restart walkthrough.
+"""
+
+from repro.persist.store import (
+    commit_dir,
+    entry_id,
+    read_entry,
+    sha256_file,
+    sweep_tmp,
+    write_entry,
+)
+from repro.persist.vault import FrontierVault
+
+__all__ = [
+    "FrontierVault",
+    "commit_dir",
+    "entry_id",
+    "read_entry",
+    "sha256_file",
+    "sweep_tmp",
+    "write_entry",
+]

@@ -10,12 +10,20 @@ Layout:
 Guarantees:
 * **Atomic commit** — data files are written into ``step_x.tmp-<nonce>``;
   the manifest is written last and the directory is os.rename'd into
-  place.  A crash mid-write never yields a directory that
-  ``latest_step`` will pick up.
+  place (the protocol shared with :mod:`repro.persist.store`, which the
+  frontier vault layers on too).  A crash mid-write never yields a
+  directory that ``latest_step`` will pick up.
+* **Re-save policy** — ``save_checkpoint`` on an existing step raises
+  ``FileExistsError`` *before* writing anything (no wasted tmp dir);
+  ``overwrite=True`` replaces the step atomically (the old data survives
+  until the new commit lands).
 * **Async** — ``CheckpointManager.save_async`` snapshots device arrays to
   host (blocking only for the device->host copy) and writes on a
   background thread; training continues.  ``wait()`` joins before the
-  next save so at most one write is in flight.
+  next save so at most one write is in flight, and raises a
+  :class:`CheckpointError` naming every step whose background write
+  failed — interleaved ``save_async`` calls never silently swallow an
+  earlier failure.
 * **Restore-with-resharding** — ``load_checkpoint`` takes the *target*
   sharding tree: each host reads only the byte ranges overlapping its
   addressable shards (here: per-leaf npz entries), so a checkpoint saved
@@ -26,7 +34,6 @@ Guarantees:
 
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import pathlib
@@ -36,6 +43,23 @@ import time
 
 import jax
 import numpy as np
+
+from repro.persist.store import commit_dir, sha256_file, sweep_tmp
+
+
+class CheckpointError(RuntimeError):
+    """A background checkpoint write failed.
+
+    ``steps`` lists every step whose write failed since the last
+    successful :meth:`CheckpointManager.wait`; the first failure is the
+    ``__cause__``.
+    """
+
+    def __init__(self, failures: list):
+        self.steps = [step for step, _ in failures]
+        super().__init__(
+            f"checkpoint write failed for step(s) {self.steps}: "
+            f"{failures[0][1]!r}")
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -47,20 +71,23 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return flat
 
 
-def _sha256(path: pathlib.Path) -> str:
-    h = hashlib.sha256()
-    with open(path, "rb") as f:
-        for chunk in iter(lambda: f.read(1 << 20), b""):
-            h.update(chunk)
-    return h.hexdigest()
-
-
 def save_checkpoint(directory: str | os.PathLike, step: int, tree,
-                    extra: dict | None = None) -> pathlib.Path:
-    """Synchronous atomic save. Returns the committed directory."""
+                    extra: dict | None = None,
+                    overwrite: bool = False) -> pathlib.Path:
+    """Synchronous atomic save; returns the committed directory.
+
+    An existing step raises ``FileExistsError`` up front — before any
+    tmp-dir write — unless ``overwrite=True``, which replaces the step
+    via the atomic rename-aside/rename-in/delete dance (a crash mid-swap
+    keeps the old step loadable).
+    """
     base = pathlib.Path(directory)
     base.mkdir(parents=True, exist_ok=True)
     final = base / f"step_{step:08d}"
+    if final.exists() and not overwrite:
+        # short-circuit BEFORE writing the tmp dir: a refused re-save
+        # must not cost a full serialization pass (or leak tmp data)
+        raise FileExistsError(final)
     tmp = pathlib.Path(tempfile.mkdtemp(prefix=final.name + ".tmp-",
                                         dir=base))
     try:
@@ -72,16 +99,13 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree,
             "time": time.time(),
             "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in flat.items()},
-            "shards": {"shard_00000.npz": _sha256(shard_file)},
+            "shards": {"shard_00000.npz": sha256_file(shard_file)},
             "treedef": jax.tree_util.tree_structure(tree).__repr__(),
             "extra": extra or {},
         }
         # manifest last => a readable manifest implies complete data
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-        if final.exists():
-            raise FileExistsError(final)
-        os.rename(tmp, final)
-        return final
+        return commit_dir(tmp, final, overwrite=overwrite)
     except BaseException:
         import shutil
 
@@ -90,6 +114,7 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree,
 
 
 def latest_step(directory: str | os.PathLike) -> int | None:
+    """The newest committed (manifest-bearing) step, or None."""
     base = pathlib.Path(directory)
     if not base.exists():
         return None
@@ -116,7 +141,7 @@ def load_checkpoint(directory: str | os.PathLike, like_tree,
     manifest = json.loads((d / "manifest.json").read_text())
     if verify:
         for fname, digest in manifest["shards"].items():
-            actual = _sha256(d / fname)
+            actual = sha256_file(d / fname)
             if actual != digest:
                 raise IOError(f"checksum mismatch in {d / fname}")
     with np.load(d / "shard_00000.npz") as z:
@@ -148,34 +173,55 @@ class CheckpointManager:
     At most one background write in flight; ``save_async`` first snapshots
     to host memory (device->host copy is the only blocking part), then the
     writer thread does the npz+manifest+rename dance.
+
+    Failure semantics: a failed background write is recorded with its
+    step and raised — as :class:`CheckpointError` — by the next
+    ``wait()`` (which ``save_async`` calls first).  Multiple failures
+    across interleaved ``save_async`` calls accumulate rather than
+    overwrite, so no failure is ever silently swallowed; after the raise
+    the manager is clean and usable again.
     """
 
     def __init__(self, directory: str | os.PathLike, keep: int = 3):
         self.dir = pathlib.Path(directory)
         self.keep = keep
         self._thread: threading.Thread | None = None
-        self._error: BaseException | None = None
+        self._errors: list[tuple[int, BaseException]] = []
+        self._elock = threading.Lock()
 
     def wait(self) -> None:
+        """Join the in-flight write; raise :class:`CheckpointError` if any
+        background save failed since the last successful wait."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        with self._elock:
+            failures, self._errors = self._errors, []
+        if failures:
+            raise CheckpointError(failures) from failures[0][1]
 
-    def save_async(self, step: int, tree, extra: dict | None = None) -> None:
+    def save_async(self, step: int, tree, extra: dict | None = None,
+                   overwrite: bool = False) -> None:
+        """Snapshot ``tree`` to host and write it on a background thread.
+
+        Calls :meth:`wait` first, so an earlier failed write raises HERE
+        (with its own step attributed) before this save starts — the
+        caller always learns about a failure no later than its next
+        checkpoint attempt.
+        """
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot now
 
-        def work():
+        def _work():
             try:
-                save_checkpoint(self.dir, step, host_tree, extra)
+                save_checkpoint(self.dir, step, host_tree, extra,
+                                overwrite=overwrite)
                 self._gc()
             except BaseException as e:  # noqa: BLE001
-                self._error = e
+                with self._elock:
+                    self._errors.append((step, e))
 
-        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread = threading.Thread(target=_work, daemon=True)
         self._thread.start()
 
     def _gc(self) -> None:
@@ -187,10 +233,9 @@ class CheckpointManager:
             and (d / "manifest.json").exists())
         for s in steps[: -self.keep]:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
-        # sweep orphaned tmp dirs from crashed writers
-        for d in self.dir.iterdir():
-            if d.is_dir() and ".tmp-" in d.name:
-                shutil.rmtree(d, ignore_errors=True)
+        # sweep orphaned tmp/old dirs from crashed writers
+        sweep_tmp(self.dir)
 
     def restore_latest(self, like_tree, shardings=None):
+        """Load the newest step into ``like_tree``'s structure."""
         return load_checkpoint(self.dir, like_tree, shardings=shardings)

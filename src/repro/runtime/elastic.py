@@ -25,6 +25,8 @@ import numpy as np
 
 @dataclasses.dataclass
 class FailureEvent:
+    """One capacity-change event on the simulated failure timeline."""
+
     step: int
     kind: str          # "node_loss" | "node_join" | "preemption"
     chips_delta: int

@@ -21,6 +21,8 @@ import numpy as np
 
 @dataclasses.dataclass
 class StragglerVerdict:
+    """One flagged host: its robust z-score and the proposed action."""
+
     host: int
     z_score: float
     action: str  # "none" | "warn" | "evict"
@@ -46,6 +48,9 @@ class StragglerMonitor:
         self._bad_streak = np.zeros(n_hosts, np.int32)
 
     def observe(self, times: np.ndarray) -> list[StragglerVerdict]:
+        """Score one step's per-host times; returns hosts flagged this
+        step (``warn`` after ``patience`` consecutive outliers, ``evict``
+        beyond ``z_evict``)."""
         times = np.asarray(times, np.float64)
         for h in range(self.n_hosts):
             self._hist[h].append(times[h])

@@ -43,7 +43,12 @@ import numpy as np
 from repro.core import MOGDConfig, MOOProblem, ProgressiveFrontier
 from repro.core.dag import ComposedFrontier, JobDAG
 from repro.core.mogd import MOGDSolver, solve_grouped
-from repro.core.progressive_frontier import PFResult, PFState
+from repro.core.progressive_frontier import (
+    PFResult,
+    PFState,
+    export_pf_state,
+    live_seed_points,
+)
 from repro.core.task import Preference, TaskSpec, preference_from_legacy
 from repro.exec import ProbeExecutor
 
@@ -115,6 +120,9 @@ class _Session:
     registry: object | None = None
     workload: str | None = None
     stale: bool = False
+    # durable-vault bookkeeping (DESIGN.md §13): the probe count at the
+    # last vault snapshot — persistence triggers fire only on progress
+    probes_at_snapshot: int = 0
     created_s: float = dataclasses.field(default_factory=time.perf_counter)
 
 
@@ -134,6 +142,8 @@ class MOOService:
         executor: ProbeExecutor | None = None,
         mesh="auto",
         structure_coalescing: bool = True,
+        vault=None,
+        vault_autosave_probes: int = 64,
     ):
         self.default_mogd = mogd
         self.default_mode = mode
@@ -180,6 +190,17 @@ class MOOService:
         # RELEASED — a concurrent stats() call observes them directly.
         self.in_flight_probes = 0
         self.in_flight_dispatches = 0
+        # durable frontier plane (repro.persist.FrontierVault, DESIGN.md
+        # §13): session states snapshot to the vault on convergence, on
+        # close, and every ``vault_autosave_probes`` probes; a cold
+        # restart restores exact-signature entries (zero probes to first
+        # recommend) or seeds PF from an older version's frontier.
+        self.vault = vault
+        self.vault_autosave_probes = max(1, int(vault_autosave_probes))
+        self.vault_restores = 0
+        self.vault_seeds = 0
+        self.vault_snapshots = 0
+        self.vault_tombstones = 0
 
     # ------------------------------------------------------------------
     def _solver_for(self, problem: MOOProblem, signature: tuple,
@@ -222,8 +243,62 @@ class MOOService:
             sid = self._open(problem, sig, spec=spec,
                              mode=mode, mogd=mogd, grid_l=grid_l,
                              batch_rects=batch_rects, target=target)
+            # durable warm restart (DESIGN.md §13): an exact-signature
+            # vault entry restores the full PF state — frontier, pareto
+            # mask, rectangle queue — so recommend serves with ZERO new
+            # probe dispatches
+            self._try_restore_locked(self._sessions[sid])
             self._evict_cold_tasks()  # after _open: new session counts live
             return sid
+
+    def _try_restore_locked(self, sess: _Session) -> bool:
+        """Exact-signature restore from the vault (lock held)."""
+        if self.vault is None or sess.state is not None:
+            return False
+        try:
+            got = self.vault.get_frontier(sess.signature[0])
+            if got is None:
+                return False
+            arrays, meta = got
+            state = sess.engine.import_state(arrays, meta)
+        except Exception as e:  # corrupt/incompatible entry: a restart
+            # must still work — fall through to the cold-solve path
+            warnings.warn(f"vault restore failed for {sess.session_id}: "
+                          f"{e}", RuntimeWarning, stacklevel=2)
+            return False
+        sess.state = state
+        sess.probes_at_snapshot = state.probes
+        self.vault_restores += 1
+        return True
+
+    def _vault_identity(self, sess: _Session) -> tuple:
+        """The ``(workload, version)`` components a vault entry's manifest
+        carries for invalidation / seed-donor scans (None for plain
+        sessions)."""
+        mid = sess.spec.model_id if sess.spec is not None else None
+        if (sess.workload is not None and isinstance(mid, tuple)
+                and len(mid) == 3 and mid[0] == "modelserver"):
+            return sess.workload, int(mid[2])
+        return sess.workload, None
+
+    def _persist_session_locked(self, sess: _Session, reason: str) -> bool:
+        """Export a session's PF state and enqueue a write-behind vault
+        put (lock held; the export makes numpy copies, the disk write
+        happens on the vault's writer thread).  Stale sessions and empty
+        frontiers are never persisted."""
+        if (self.vault is None or sess.state is None or sess.stale
+                or sess.state.store.n_points == 0):
+            return False
+        arrays, meta = export_pf_state(sess.state)
+        meta["reason"] = reason
+        workload, version = self._vault_identity(sess)
+        ok = self.vault.put_frontier(
+            sess.signature[0], arrays, meta,
+            workload=workload, version=version)
+        if ok:
+            sess.probes_at_snapshot = sess.state.probes
+            self.vault_snapshots += 1
+        return ok
 
     def _compile_cached(self, spec: TaskSpec, sig: tuple) -> MOOProblem:
         """Signature-keyed compile-or-reuse (LRU re-insertion on hit)."""
@@ -420,6 +495,12 @@ class MOOService:
             sess = self._sessions.pop(session_id, None)
             if sess is None:
                 return
+            # last-chance durability: closing a session with probes spent
+            # since its last snapshot persists the frontier so the next
+            # process can warm-start it
+            if (sess.state is not None and not sess.stale
+                    and sess.state.probes > sess.probes_at_snapshot):
+                self._persist_session_locked(sess, "close")
             # content signatures are recurring jobs: compiled problems and
             # solvers stay warm for the next submission (bounded by
             # _evict_cold_tasks)
@@ -477,6 +558,21 @@ class MOOService:
             sess.workload = workload
             self._watch.setdefault(workload, set()).add(sid)
             self._recheck_watched(sess)
+            # vault warm-start tier 2 (DESIGN.md §13): no exact-signature
+            # entry (create_session already tried), but a surviving entry
+            # for the SAME workload under an OLDER model version donates
+            # its pareto X as the initial rectangle set — k reference
+            # solves instead of a cold full solve
+            if (self.vault is not None and sess.state is None
+                    and not sess.stale):
+                donor = self.vault.latest_for_workload(workload)
+                if donor is not None:
+                    arrays, _meta = donor
+                    X_old = live_seed_points(arrays)
+                    if len(X_old):
+                        sess.state = sess.engine.seed(X_old)
+                        sess.probes_at_snapshot = sess.state.probes
+                        self.vault_seeds += 1
             return sid
 
     def watch_workload(self, session_id: str, registry,
@@ -549,6 +645,14 @@ class MOOService:
                 # a frontier/solver built against stale predictions
                 self._problems.pop(sess.signature, None)
                 self._solvers.pop(sess.solver_key, None)
+            # drift invalidation extends to the DURABLE plane: frontiers
+            # persisted under the drifted regime must never warm-start a
+            # post-restart session (DESIGN.md §13) — tombstone every vault
+            # entry at or below the drifted version, synchronously
+            if event.kind == "drift" and self.vault is not None:
+                killed = self.vault.tombstone_workload(
+                    event.workload, version=event.version, reason="drift")
+                self.vault_tombstones += killed
 
     def _refresh_stale_locked(self) -> None:
         """Warm re-solve every stale session whose registry now serves a
@@ -781,6 +885,25 @@ class MOOService:
                     out["sessions"] += 1
                     out["per_session"][sess.session_id] = (
                         out["per_session"].get(sess.session_id, 0) + n)
+        # -- write-behind durability sweep (DESIGN.md §13) -------------
+        # snapshot sessions that just converged (queue drained — their
+        # frontier is final) or crossed the autosave probe budget; the
+        # disk write happens on the vault's writer thread, so this only
+        # pays for the numpy export under the lock
+        if self.vault is not None:
+            with self._lock:
+                for sess in sessions:
+                    if self._sessions.get(sess.session_id) is not sess:
+                        continue
+                    st = sess.state
+                    if st is None or sess.stale:
+                        continue
+                    done = not len(st.queue)
+                    due = (st.probes - sess.probes_at_snapshot
+                           >= self.vault_autosave_probes)
+                    if st.probes > sess.probes_at_snapshot and (done or due):
+                        self._persist_session_locked(
+                            sess, "converged" if done else "autosave")
         return out
 
     def run_until(self, min_probes: int, max_rounds: int = 10_000) -> dict:
@@ -859,6 +982,18 @@ class MOOService:
                 frontier_size=len(F),
             )
 
+    def session_exhausted(self, session_id: str) -> bool:
+        """True when a session has a finalized frontier (state exists and
+        its rectangle queue is empty) — a vault-restored session reports
+        True before any probe is dispatched, which lets the frontdesk
+        complete its ticket at submit time (the warm-restart fast path).
+        Unknown ids return False."""
+        with self._lock:
+            sess = self._sessions.get(session_id)
+            if sess is None or sess.state is None:
+                return False
+            return not len(sess.state.queue)
+
     # ------------------------------------------------------------------
     def session_info(self, session_id: str) -> SessionInfo:
         with self._lock:
@@ -917,4 +1052,9 @@ class MOOService:
                     if s.state is None or len(s.state.queue)),
                 "in_flight_probes": self.in_flight_probes,
                 "in_flight_dispatches": self.in_flight_dispatches,
+                # durable frontier plane telemetry (DESIGN.md §13)
+                "vault_restores": self.vault_restores,
+                "vault_seeds": self.vault_seeds,
+                "vault_snapshots": self.vault_snapshots,
+                "vault_tombstones": self.vault_tombstones,
             }

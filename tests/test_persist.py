@@ -1,0 +1,495 @@
+"""Durable frontier plane (DESIGN.md §13): content-addressed store
+atomicity, PF state round-trips through the codecs, FrontierVault
+lifecycle (snapshot, warm restart, drift tombstones), ModelRegistry
+rehydration with bit-exact task signatures, and the frontdesk
+fast-completion path for restored sessions.
+
+The store/codec/vault layers are numpy-only and deterministic; only the
+service-integration class pays for real solves.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MOGDConfig, Objective, continuous
+from repro.core.frontier_store import FrontierStore
+from repro.core.progressive_frontier import (
+    ProgressiveFrontier,
+    export_pf_state,
+    import_pf_state,
+    live_seed_points,
+)
+from repro.core.synthetic import make_sphere2, sphere2_task
+from repro.persist import FrontierVault, entry_id, read_entry, write_entry
+from repro.persist.store import is_entry, sweep_tmp
+from repro.service import MOOService
+
+FAST = MOGDConfig(steps=50, multistart=4)
+
+
+# ---------------------------------------------------------------------
+# store layer: atomic commit, integrity, crash hygiene
+# ---------------------------------------------------------------------
+class TestStore:
+    def test_write_read_roundtrip(self, tmp_path):
+        arrays = {"F": np.arange(6.0).reshape(3, 2),
+                  "mask": np.array([True, False, True])}
+        meta = {"workload": "w1", "nested": {"k": [1, 2]}}
+        p = write_entry(tmp_path, "e1", arrays, meta)
+        assert is_entry(p)
+        got_arrays, got_meta = read_entry(p)
+        np.testing.assert_array_equal(got_arrays["F"], arrays["F"])
+        np.testing.assert_array_equal(got_arrays["mask"], arrays["mask"])
+        assert got_meta["workload"] == "w1"
+        assert got_meta["nested"] == {"k": [1, 2]}
+
+    def test_checksum_corruption_raises(self, tmp_path):
+        p = write_entry(tmp_path, "e1", {"x": np.ones(4)}, {})
+        data = p / "data.npz"
+        raw = bytearray(data.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        data.write_bytes(bytes(raw))
+        with pytest.raises(IOError, match="checksum"):
+            read_entry(p, verify=True)
+
+    def test_crash_mid_write_invisible_and_swept(self, tmp_path,
+                                                 monkeypatch):
+        """A writer dying before the manifest lands leaves a ``.tmp-``
+        dir that is not an entry and that ``sweep_tmp`` removes."""
+        import repro.persist.store as store
+
+        def boom(*a, **kw):
+            raise OSError("disk gone")
+
+        monkeypatch.setattr(store.np, "savez", boom)
+        with pytest.raises(OSError, match="disk gone"):
+            write_entry(tmp_path, "e1", {"x": np.ones(2)}, {})
+        monkeypatch.undo()
+        # no committed entry, nothing loadable
+        assert not (tmp_path / "e1").exists()
+        leftovers = list(tmp_path.iterdir())
+        assert all(not is_entry(d) for d in leftovers)
+        sweep_tmp(tmp_path)
+        assert list(tmp_path.iterdir()) == []
+
+    def test_overwrite_semantics(self, tmp_path):
+        write_entry(tmp_path, "e1", {"x": np.zeros(2)}, {"gen": 1})
+        with pytest.raises(FileExistsError):
+            write_entry(tmp_path, "e1", {"x": np.ones(2)}, {"gen": 2},
+                        overwrite=False)
+        _, meta = read_entry(tmp_path / "e1")
+        assert meta["gen"] == 1  # refused write changed nothing
+        write_entry(tmp_path, "e1", {"x": np.ones(2)}, {"gen": 2})
+        arrays, meta = read_entry(tmp_path / "e1")
+        assert meta["gen"] == 2
+        np.testing.assert_array_equal(arrays["x"], np.ones(2))
+        # no .old- sibling left behind
+        assert [d.name for d in tmp_path.iterdir()] == ["e1"]
+
+    def test_entry_id_content_addressed(self):
+        assert entry_id("frontier", "sig-a") == entry_id("frontier", "sig-a")
+        assert entry_id("frontier", "sig-a") != entry_id("frontier", "sig-b")
+        assert entry_id("frontier", "s") != entry_id("model", "s")
+
+
+# ---------------------------------------------------------------------
+# codecs: FrontierStore / PFState round-trips
+# ---------------------------------------------------------------------
+class TestPFStateCodec:
+    def _state(self, probes=60):
+        problem = make_sphere2()
+        engine = ProgressiveFrontier(problem, mode="AP", mogd=FAST,
+                                     grid_l=2, batch_rects=2)
+        return engine, engine.run(n_probes=probes)
+
+    def test_frontier_store_roundtrip_and_continued_adds(self):
+        rng = np.random.default_rng(0)
+        store = FrontierStore(k=2, dim=3)
+        F = rng.random((40, 2))
+        X = rng.random((40, 3))
+        store.add(F, X)
+        arrays, meta = store.state_dict()
+        clone = FrontierStore.from_state(arrays, meta)
+        f1, x1 = store.frontier()
+        f2, x2 = clone.frontier()
+        np.testing.assert_array_equal(f1, f2)
+        np.testing.assert_array_equal(x1, x2)
+        assert clone.total_offered == store.total_offered
+        assert clone.total_accepted == store.total_accepted
+        # the clone keeps absorbing: duplicates still dedup, dominated
+        # rows still die — internal keys/masks survived the round-trip
+        before = clone.n_points
+        clone.add(f1[:3], x1[:3])
+        assert clone.n_points == before  # exact duplicates refused
+        clone.add(np.full((1, 2), -1.0), np.zeros((1, 3)))
+        assert clone.n_points == 1  # dominator swept the frontier
+
+    def test_pf_state_roundtrip(self):
+        engine, res = self._state()
+        st = res.state
+        arrays, meta = export_pf_state(st)
+        clone = import_pf_state(arrays, meta)
+        f1, x1 = st.store.frontier()
+        f2, x2 = clone.store.frontier()
+        np.testing.assert_array_equal(f1, f2)
+        np.testing.assert_array_equal(x1, x2)
+        assert clone.probes == st.probes
+        assert len(clone.queue) == len(st.queue)
+        # Def 3.7 uncertain fraction must RESUME, not reset: the queue's
+        # initial volume is part of the durable state
+        assert clone.queue.uncertain_fraction == pytest.approx(
+            st.queue.uncertain_fraction)
+        np.testing.assert_array_equal(clone.utopia, st.utopia)
+        np.testing.assert_array_equal(clone.nadir, st.nadir)
+        assert clone.trace == st.trace
+
+    def test_restored_state_keeps_solving(self):
+        engine, res = self._state(probes=40)
+        arrays, meta = export_pf_state(res.state)
+        clone_state = engine.import_state(arrays, meta)
+        before = clone_state.store.n_points
+        out = engine.run(n_probes=40, state=clone_state)
+        assert out.state.probes > meta["probes"]
+        assert out.state.store.n_points >= before
+
+    def test_bounded_store_roundtrip_keeps_excluding(self):
+        """Declared objective bounds and the infeasible ledger survive:
+        the restored store keeps mark-and-excluding out-of-bounds offers."""
+        store = FrontierStore(k=2, dim=2,
+                              bounds=np.array([[0.0, 1.0], [0.0, 1.0]]))
+        store.add(np.array([[0.5, 0.5], [2.0, 0.1]]), np.zeros((2, 2)))
+        assert store.total_infeasible == 1
+        arrays, meta = store.state_dict()
+        clone = FrontierStore.from_state(arrays, meta)
+        assert clone.total_infeasible == 1
+        assert clone.n_points == store.n_points
+        clone.add(np.array([[0.1, 5.0]]), np.ones((1, 2)))  # over bound
+        assert clone.total_infeasible == 2
+        assert clone.n_points == store.n_points  # excluded, not stored
+
+    def test_live_seed_points_excludes_dead_rows(self):
+        store = FrontierStore(k=2, dim=2)
+        # second point dominates the first -> first row goes dead
+        store.add(np.array([[1.0, 1.0]]), np.zeros((1, 2)))
+        store.add(np.array([[0.5, 0.5]]), np.ones((1, 2)))
+        arrays, meta = store.state_dict()
+        X = live_seed_points({f"store/{k}": v for k, v in arrays.items()})
+        np.testing.assert_array_equal(X, np.ones((1, 2)))
+
+
+# ---------------------------------------------------------------------
+# vault: lifecycle, tombstones, write-behind
+# ---------------------------------------------------------------------
+class TestVault:
+    def _arrays(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {"F": rng.random((4, 2))}
+
+    def test_put_get_roundtrip_and_overwrite(self, tmp_path):
+        with FrontierVault(tmp_path, write_behind=False) as v:
+            assert v.put_frontier("sig-a", self._arrays(), {"probes": 9},
+                                  workload="w", version=1)
+            arrays, meta = v.get_frontier("sig-a")
+            np.testing.assert_array_equal(arrays["F"], self._arrays()["F"])
+            assert meta["probes"] == 9
+            assert meta["workload"] == "w" and meta["version"] == 1
+            # snapshots of the same key overwrite (newer frontier wins)
+            v.put_frontier("sig-a", self._arrays(1), {"probes": 20},
+                           workload="w", version=1)
+            _, meta = v.get_frontier("sig-a")
+            assert meta["probes"] == 20
+            assert len(v.frontier_entries()) == 1
+
+    def test_miss_returns_none(self, tmp_path):
+        with FrontierVault(tmp_path, write_behind=False) as v:
+            assert v.get_frontier("nope") is None
+            assert v.latest_for_workload("nope") is None
+
+    def test_tombstone_deletes_and_blocks_future_puts(self, tmp_path):
+        with FrontierVault(tmp_path, write_behind=False) as v:
+            v.put_frontier("sig-a", self._arrays(), {}, workload="w",
+                           version=1)
+            v.put_frontier("sig-b", self._arrays(1), {}, workload="w",
+                           version=2)
+            v.put_frontier("sig-c", self._arrays(2), {}, workload="other",
+                           version=1)
+            killed = v.tombstone_workload("w", version=2, reason="drift")
+            assert killed == 2
+            assert v.get_frontier("sig-a") is None
+            assert v.get_frontier("sig-b") is None
+            assert v.get_frontier("sig-c") is not None  # other workload
+            # a late write-behind put from the dead regime is refused...
+            assert not v.put_frontier("sig-a", self._arrays(), {},
+                                      workload="w", version=2)
+            # ...but a post-promotion (higher-version) frontier passes
+            assert v.put_frontier("sig-d", self._arrays(3), {},
+                                  workload="w", version=3)
+
+    def test_tombstone_survives_restart(self, tmp_path):
+        with FrontierVault(tmp_path, write_behind=False) as v:
+            v.put_frontier("sig-a", self._arrays(), {}, workload="w",
+                           version=1)
+            v.tombstone_workload("w", version=1)
+        with FrontierVault(tmp_path, write_behind=False) as v2:
+            assert v2.get_frontier("sig-a") is None
+            assert not v2.put_frontier("sig-a", self._arrays(), {},
+                                       workload="w", version=1)
+
+    def test_latest_for_workload_picks_highest_version(self, tmp_path):
+        with FrontierVault(tmp_path, write_behind=False) as v:
+            v.put_frontier("sig-1", self._arrays(1), {}, workload="w",
+                           version=1)
+            v.put_frontier("sig-3", self._arrays(3), {}, workload="w",
+                           version=3)
+            v.put_frontier("sig-2", self._arrays(2), {}, workload="w",
+                           version=2)
+            arrays, meta = v.latest_for_workload("w")
+            assert meta["version"] == 3
+            # exclude_version skips the exact-match tier's own entry
+            arrays, meta = v.latest_for_workload("w", exclude_version=3)
+            assert meta["version"] == 2
+
+    def test_write_behind_flush(self, tmp_path):
+        with FrontierVault(tmp_path, write_behind=True) as v:
+            for i in range(8):
+                v.put_frontier(f"sig-{i}", self._arrays(i), {"i": i})
+            v.flush()
+            assert v.stats()["writes"] == 8
+            assert v.stats()["write_errors"] == 0
+            for i in range(8):
+                _, meta = v.get_frontier(f"sig-{i}")
+                assert meta["i"] == i
+
+    def test_corrupt_entry_raises_on_verify(self, tmp_path):
+        with FrontierVault(tmp_path, write_behind=False) as v:
+            v.put_frontier("sig-a", self._arrays(), {})
+            path = v.frontiers_dir / FrontierVault.frontier_key("sig-a")
+            raw = bytearray((path / "data.npz").read_bytes())
+            raw[len(raw) // 2] ^= 0xFF
+            (path / "data.npz").write_bytes(bytes(raw))
+            with pytest.raises(IOError, match="checksum"):
+                v.get_frontier("sig-a")
+
+    def test_open_sweeps_stranded_tmp_dirs(self, tmp_path):
+        v = FrontierVault(tmp_path, write_behind=False)
+        v.put_frontier("sig-a", self._arrays(), {})
+        v.close()
+        stranded = v.frontiers_dir / "abc.tmp-dead"
+        stranded.mkdir()
+        (stranded / "data.npz").write_bytes(b"partial")
+        v2 = FrontierVault(tmp_path, write_behind=False)
+        assert not stranded.exists()
+        assert v2.get_frontier("sig-a") is not None
+        v2.close()
+
+
+# ---------------------------------------------------------------------
+# service integration: snapshot -> cold restart -> warm start
+# ---------------------------------------------------------------------
+class TestServiceRestart:
+    def _service(self, root, **kw):
+        kw.setdefault("mogd", FAST)
+        kw.setdefault("batch_rects", 2)
+        kw.setdefault("grid_l", 2)
+        return MOOService(vault=FrontierVault(root, write_behind=False),
+                          **kw)
+
+    def test_close_persists_and_restart_restores(self, tmp_path):
+        svc = self._service(tmp_path)
+        sid = svc.create_session(sphere2_task())
+        svc.run_until(min_probes=14)
+        F1, X1 = svc.frontier(sid)
+        probes1 = svc.session_info(sid).probes
+        svc.close_session(sid)
+        assert svc.stats()["vault_snapshots"] >= 1
+
+        svc2 = self._service(tmp_path)
+        sid2 = svc2.create_session(sphere2_task())
+        assert svc2.stats()["vault_restores"] == 1
+        # the restored frontier is served with ZERO executor dispatches
+        assert svc2.stats()["executor_dispatches"] == 0
+        F2, X2 = svc2.frontier(sid2)
+        np.testing.assert_array_equal(np.sort(F1, axis=0),
+                                      np.sort(F2, axis=0))
+        np.testing.assert_array_equal(np.sort(X1, axis=0),
+                                      np.sort(X2, axis=0))
+        info = svc2.session_info(sid2)
+        assert info.probes == probes1  # probe ledger resumed, not reset
+        rec = svc2.recommend(sid2)
+        assert rec.frontier_size == len(F2)
+        assert svc2.stats()["executor_dispatches"] == 0
+
+    def test_restored_session_keeps_probing(self, tmp_path):
+        svc = self._service(tmp_path)
+        sid = svc.create_session(sphere2_task())
+        svc.run_until(min_probes=14)
+        probes1 = svc.session_info(sid).probes
+        svc.close_session(sid)
+        svc2 = self._service(tmp_path)
+        sid2 = svc2.create_session(sphere2_task())
+        out = svc2.step_all(rounds=2)
+        assert out["probes"] > 0
+        assert svc2.session_info(sid2).probes > probes1
+
+    def test_autosave_fires_on_probe_budget(self, tmp_path):
+        svc = self._service(tmp_path, vault_autosave_probes=8)
+        svc.create_session(sphere2_task())
+        svc.run_until(min_probes=30)
+        assert svc.stats()["vault_snapshots"] >= 2
+
+    def test_vaultless_service_unchanged(self, tmp_path):
+        svc = MOOService(mogd=FAST, batch_rects=2, grid_l=2)
+        sid = svc.create_session(sphere2_task())
+        svc.run_until(min_probes=14)
+        st = svc.stats()
+        assert st["vault_snapshots"] == 0 and st["vault_restores"] == 0
+        svc.close_session(sid)
+
+
+# ---------------------------------------------------------------------
+# registry rehydration + drift tombstones (the modelserver tier)
+# ---------------------------------------------------------------------
+class TestRegistryRehydration:
+    KNOBS = (continuous("a", 0.0, 1.0), continuous("b", 0.0, 1.0))
+    OBJECTIVES = (Objective("lat"), Objective("cost"))
+
+    @staticmethod
+    def _truth(X, shift=False):
+        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        a = 3.0 if shift else 1.0
+        y1 = a * (X[:, 0] - 0.3) ** 2 + X[:, 1] + 0.5
+        y2 = 1.5 - X[:, 0] + 0.2 * X[:, 1] ** 2 + (1.0 if shift else 0.0)
+        return np.stack([y1, y2], axis=1)
+
+    def _registry(self, vault=None):
+        from repro.modelserver import DriftConfig, ModelRegistry, \
+            TrainerConfig
+        return ModelRegistry(
+            trainer=TrainerConfig(hidden=(24, 24), max_epochs=30, seed=0),
+            drift=DriftConfig(window=16, min_obs=8, mult=3.0, floor=0.1),
+            trim_on_drift=16, vault=vault)
+
+    def _trained(self, vault):
+        rng = np.random.default_rng(0)
+        reg = self._registry(vault)
+        w = reg.register_workload(("toy", "w1"), self.KNOBS,
+                                  self.OBJECTIVES)
+        X = rng.random((160, 2))
+        reg.observe_batch(w, X, self._truth(X))
+        rep = reg.retrain(w)
+        assert rep.improved
+        return reg, w, rng
+
+    def test_rehydrated_signature_is_bit_exact(self, tmp_path):
+        vault = FrontierVault(tmp_path, write_behind=False)
+        reg, w, _ = self._trained(vault)
+        assert reg.workloads_persisted == 1
+        reg2 = self._registry(FrontierVault(tmp_path, write_behind=False))
+        assert reg2.rehydrate() == [w]
+        assert reg2.workloads_rehydrated == 1
+        s1 = reg.task_spec(w)
+        s2 = reg2.task_spec(w)
+        # the whole warm-restart chain hangs on this equality: the vault
+        # keys frontiers by task signature, so a rehydrated registry must
+        # reproduce it bit-exactly
+        assert s1.signature() == s2.signature()
+        # and the rehydrated model predicts identically
+        X = np.random.default_rng(1).random((5, 2))
+        p1 = np.asarray([np.asarray(m(X)) for m in
+                         reg._get(w).active.models])
+        p2 = np.asarray([np.asarray(m(X)) for m in
+                         reg2._get(w).active.models])
+        np.testing.assert_allclose(p1, p2, rtol=1e-12)
+
+    def test_live_registry_wins_over_vault(self, tmp_path):
+        vault = FrontierVault(tmp_path, write_behind=False)
+        reg, w, _rng = self._trained(vault)
+        # rehydrating into a registry that already has the workload
+        # leaves the live record untouched
+        before = reg._get(w).active
+        assert reg.rehydrate(vault) == []
+        assert reg._get(w).active is before
+
+    def test_workload_restart_restores_frontier(self, tmp_path):
+        vault = FrontierVault(tmp_path, write_behind=False)
+        reg, w, _ = self._trained(vault)
+        svc = MOOService(mogd=FAST, batch_rects=2, grid_l=2, vault=vault)
+        sid = svc.create_workload_session(reg, w)
+        svc.run_until(min_probes=14)
+        F1, _ = svc.frontier(sid)
+        svc.close_session(sid)
+
+        vault2 = FrontierVault(tmp_path, write_behind=False)
+        reg2 = self._registry(vault2)
+        reg2.rehydrate()
+        svc2 = MOOService(mogd=FAST, batch_rects=2, grid_l=2, vault=vault2)
+        sid2 = svc2.create_workload_session(reg2, w)
+        assert svc2.stats()["vault_restores"] == 1
+        F2, _ = svc2.frontier(sid2)
+        np.testing.assert_array_equal(np.sort(F1, axis=0),
+                                      np.sort(F2, axis=0))
+
+    def test_drift_tombstones_vault_and_blocks_restart(self, tmp_path):
+        vault = FrontierVault(tmp_path, write_behind=False)
+        reg, w, rng = self._trained(vault)
+        svc = MOOService(mogd=FAST, batch_rects=2, grid_l=2, vault=vault)
+        sid = svc.create_workload_session(reg, w)
+        svc.run_until(min_probes=14)
+        svc.close_session(sid)
+        assert vault.latest_for_workload(w) is not None
+
+        # shifted regime -> drift event -> synchronous tombstone
+        X = rng.random((60, 2))
+        drifted = False
+        for i in range(len(X)):
+            evs = reg.observe(w, X[i], self._truth(X[i:i + 1],
+                                                   shift=True)[0])
+            if any(e.kind == "drift" for e in evs):
+                drifted = True
+                break
+        assert drifted
+        assert svc.stats()["vault_tombstones"] >= 1
+        assert vault.latest_for_workload(w) is None
+
+        # a cold restart after drift must solve fresh — a stale frontier
+        # from the dead regime is never served
+        vault2 = FrontierVault(tmp_path, write_behind=False)
+        reg2 = self._registry(vault2)
+        reg2.rehydrate()
+        svc2 = MOOService(mogd=FAST, batch_rects=2, grid_l=2, vault=vault2)
+        svc2.create_workload_session(reg2, w)
+        st = svc2.stats()
+        assert st["vault_restores"] == 0 and st["vault_seeds"] == 0
+
+
+# ---------------------------------------------------------------------
+# frontdesk fast path for restored (already-final) sessions
+# ---------------------------------------------------------------------
+class TestFrontdeskFastPath:
+    def test_exhausted_session_completes_at_submit(self):
+        from test_frontdesk import StubService, make_desk
+
+        class RestoredStub(StubService):
+            def session_exhausted(self, session_id):
+                return session_id in self.exhausted
+
+        stub = RestoredStub()
+        stub.exhausted.add("a:1")
+        desk, stub, clock = make_desk(stub=stub)
+        t = desk.submit(session_id="a:1", n_probes=8)
+        assert t.state == "done" and t.done
+        assert stub.calls == []  # never dispatched
+        st = desk.stats()
+        assert st["fast_completions"] == 1
+        assert st["live"] == 0  # admission slot released immediately
+        # a non-exhausted session still rides the dispatch path
+        t2 = desk.submit(session_id="a:2", n_probes=8)
+        assert t2.state == "pending"
+
+    def test_legacy_stub_without_probe_keeps_dispatching(self):
+        from test_frontdesk import StubService, make_desk
+
+        desk, stub, clock = make_desk(StubService())
+        t = desk.submit(session_id="a:1", n_probes=8)
+        assert t.state == "pending"
+        assert desk.stats()["fast_completions"] == 0

@@ -91,6 +91,88 @@ class TestCheckpoint:
         out, manifest = mgr.restore_latest(_tree())
         assert manifest["step"] == 4
 
+    def test_resave_refused_before_tmp_write(self, tmp_path):
+        """``overwrite=False`` on an existing step short-circuits BEFORE
+        any tmp dir is created — a refused re-save costs nothing and
+        leaks nothing."""
+        t = _tree()
+        save_checkpoint(tmp_path, 7, t)
+        before = sorted(p.name for p in tmp_path.iterdir())
+        with pytest.raises(FileExistsError):
+            save_checkpoint(tmp_path, 7, _tree(1))
+        after = sorted(p.name for p in tmp_path.iterdir())
+        assert after == before  # no tmp dir, no partial data
+
+    def test_resave_overwrite_replaces_atomically(self, tmp_path):
+        t1, t2 = _tree(1), _tree(2)
+        save_checkpoint(tmp_path, 7, t1, extra={"gen": 1})
+        save_checkpoint(tmp_path, 7, t2, extra={"gen": 2}, overwrite=True)
+        out, manifest = load_checkpoint(tmp_path, t2)
+        assert manifest["extra"]["gen"] == 2
+        for a, b in zip(jax.tree.leaves(t2), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the old step dir was removed, not left as a sibling
+        dirs = [p.name for p in tmp_path.iterdir() if p.is_dir()]
+        assert dirs == ["step_00000007"]
+
+    def test_crash_mid_write_leaves_no_loadable_dir(self, tmp_path,
+                                                    monkeypatch):
+        """A writer dying before the manifest lands must leave nothing
+        that latest_step/load will pick up, and the manager's gc sweep
+        removes any orphaned tmp dir a hard crash would strand."""
+        t = _tree()
+        save_checkpoint(tmp_path, 1, t)
+
+        import repro.runtime.checkpoint as ckpt
+
+        def boom(*a, **kw):
+            raise OSError("disk gone")
+
+        monkeypatch.setattr(ckpt.np, "savez", boom)
+        with pytest.raises(OSError, match="disk gone"):
+            save_checkpoint(tmp_path, 2, t)
+        monkeypatch.undo()
+        assert latest_step(tmp_path) == 1  # step 2 never became visible
+        # simulate a HARD crash: a stranded tmp dir with partial data
+        stranded = tmp_path / "step_00000003.tmp-deadbeef"
+        stranded.mkdir()
+        (stranded / "shard_00000.npz").write_bytes(b"partial")
+        mgr = CheckpointManager(tmp_path, keep=2)
+        mgr.save_async(4, t)
+        mgr.wait()
+        assert not stranded.exists()  # swept by gc
+        assert latest_step(tmp_path) == 4
+
+    def test_async_failure_raises_with_step_attribution(self, tmp_path,
+                                                        monkeypatch):
+        """A failed background write surfaces as CheckpointError naming
+        the failed step — on the next wait() or save_async(), never
+        silently swallowed by an interleaved save."""
+        from repro.runtime.checkpoint import CheckpointError
+
+        import repro.runtime.checkpoint as ckpt
+
+        real_savez = ckpt.np.savez
+        calls = []
+
+        def flaky(path, **arrs):
+            calls.append(str(path))
+            if "step_00000002" in str(path):
+                raise OSError("transient")
+            return real_savez(path, **arrs)
+
+        monkeypatch.setattr(ckpt.np, "savez", flaky)
+        mgr = CheckpointManager(tmp_path, keep=5)
+        mgr.save_async(1, _tree(1))
+        mgr.save_async(2, _tree(2))  # this write will fail...
+        with pytest.raises(CheckpointError) as ei:
+            mgr.save_async(3, _tree(3))  # ...and raise HERE, attributed
+        assert ei.value.steps == [2]
+        # after the raise the manager is clean and usable again
+        mgr.save_async(3, _tree(3))
+        mgr.wait()
+        assert latest_step(tmp_path) == 3
+
 
 class TestStraggler:
     def test_detects_slow_host(self):
