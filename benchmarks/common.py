@@ -42,77 +42,6 @@ def write_json(name: str, payload: dict, quick: bool | None = None) -> str:
     return str(path)
 
 
-class LatencyRecorder:
-    """Shared latency accounting for serving-style benchmarks.
-
-    Collects samples in seconds and reports the standard serving
-    percentiles (p50/p95/p99) plus a log-spaced histogram for the JSON
-    artifact — one implementation reused by ``expt6_adaptive``,
-    ``service_throughput`` and ``expt8_serving`` instead of three
-    hand-rolled ``np.quantile`` variants.
-    """
-
-    def __init__(self, name: str = "latency"):
-        self.name = name
-        self.samples: list[float] = []
-
-    def record(self, seconds: float) -> None:
-        self.samples.append(float(seconds))
-
-    def observe(self, t0: float, t1: float) -> None:
-        self.record(t1 - t0)
-
-    def __len__(self) -> int:
-        return len(self.samples)
-
-    def quantile(self, q: float) -> float:
-        if not self.samples:
-            return float("nan")
-        return float(np.quantile(np.asarray(self.samples), q))
-
-    @property
-    def p50(self) -> float:
-        return self.quantile(0.50)
-
-    @property
-    def p95(self) -> float:
-        return self.quantile(0.95)
-
-    @property
-    def p99(self) -> float:
-        return self.quantile(0.99)
-
-    def summary(self) -> dict:
-        """p50/p95/p99 + count/mean/max, keys flat for `emit` rows."""
-        if not self.samples:
-            return {"count": 0, "mean_s": float("nan"),
-                    "p50_s": float("nan"), "p95_s": float("nan"),
-                    "p99_s": float("nan"), "max_s": float("nan")}
-        a = np.asarray(self.samples)
-        return {
-            "count": int(a.size),
-            "mean_s": float(a.mean()),
-            "p50_s": float(np.quantile(a, 0.50)),
-            "p95_s": float(np.quantile(a, 0.95)),
-            "p99_s": float(np.quantile(a, 0.99)),
-            "max_s": float(a.max()),
-        }
-
-    def histogram(self, n_buckets: int = 24,
-                  lo_s: float = 1e-5, hi_s: float = 100.0) -> dict:
-        """Log-spaced latency histogram (export format: bucket upper
-        edges in seconds -> counts; samples above ``hi_s`` land in the
-        final overflow bucket)."""
-        edges = np.logspace(np.log10(lo_s), np.log10(hi_s), n_buckets)
-        counts = np.zeros(n_buckets + 1, dtype=int)
-        for s in self.samples:
-            counts[int(np.searchsorted(edges, s, side="left"))] += 1
-        return {
-            "edges_s": [float(e) for e in edges],
-            "counts": [int(c) for c in counts],
-        }
-
-
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -51,7 +51,9 @@ from repro.core import (
 from repro.modelserver import DriftConfig, ModelRegistry, TrainerConfig
 from repro.service import MOOService
 
-from .common import LatencyRecorder, Timer, emit, write_json
+from repro.obs import Histogram
+
+from .common import Timer, emit, write_json
 
 MOGD = MOGDConfig(steps=60, multistart=6)
 
@@ -167,7 +169,7 @@ def run(quick: bool = True) -> dict:
     })
 
     # -- the shift + streaming event loop ---------------------------------
-    rec_lat = LatencyRecorder("recommend")
+    rec_lat = Histogram("recommend")
     train_walls, drift_step, bump_step = [], None, None
     for step in range(n_steps):
         Xs, Ys = sample_traces(THETA_POST, step_traces, rng)

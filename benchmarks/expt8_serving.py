@@ -39,7 +39,9 @@ from repro.core.synthetic import mlp_surrogate_task
 from repro.frontdesk import DONE, AdaptiveBatcher, FrontDesk
 from repro.service import MOOService
 
-from .common import LatencyRecorder, emit, write_json
+from repro.obs import Histogram
+
+from .common import emit, write_json
 
 # small per-round compute: the serving plane's win is coalescing many
 # concurrent requests into few dispatches, which small MOGD rounds make
@@ -92,7 +94,7 @@ def _arm_sync(rounds: int) -> tuple[dict, list]:
     each paying its own executor dispatch: the K concurrent consumers
     of a tenant are served one after another, K rounds for K tickets."""
     svc, sids = _setup_arm()
-    rec = LatencyRecorder("recommend")
+    rec = Histogram("recommend")
     t0 = time.perf_counter()
     for _ in range(rounds):
         for sid in sids:
@@ -119,7 +121,7 @@ def _arm_batched(rounds: int) -> tuple[dict, list]:
     desk = FrontDesk(svc, capacity=K_CONCURRENT * N_TENANTS,
                      batcher=AdaptiveBatcher(w_min=1e-4, w_max=5e-3,
                                              w_init=1e-3))
-    rec = LatencyRecorder("recommend")
+    rec = Histogram("recommend")
     t0 = time.perf_counter()
     for _ in range(rounds):
         tickets = [desk.submit(session_id=sid, slo="batch",
@@ -214,10 +216,20 @@ def _run_level(svc: MOOService, sids: list, n_requests: int,
             stop_hammer.set()
             h.join(timeout=5.0)
     st = desk.stats()
-    lat = LatencyRecorder("ticket")
+    lat = Histogram("ticket")
+    phases = {k: 0.0 for k in ("queue_wait_s", "batch_wait_s",
+                               "dispatch_s", "absorb_s", "persist_s")}
+    accounted = e2e = 0.0
+    n_done = 0
     for t in tickets:
         if t.state == DONE and t.latency() is not None:
             lat.record(t.latency())
+            b = t.breakdown()
+            for k in phases:
+                phases[k] += b[k]
+            accounted += b["accounted_s"]
+            e2e += b["e2e_s"]
+            n_done += 1
     row = {
         "arrivals": "burst" if burst else "poisson",
         "offered_qps": float(offered_qps),
@@ -237,6 +249,16 @@ def _run_level(svc: MOOService, sids: list, n_requests: int,
     if hammer_session is not None:
         row["recommend_rps"] = rec_counter["n"] / max(total_wall, 1e-9)
     row["latency_histogram"] = lat.histogram()
+    # per-ticket latency attribution (DESIGN.md §14): mean phase share
+    # of the completed tickets' end-to-end latency — where an SLO miss
+    # at this offered load actually went
+    if n_done:
+        row["breakdown"] = {
+            "completed": n_done,
+            "mean_e2e_s": e2e / n_done,
+            "accounted_frac": accounted / max(e2e, 1e-12),
+            **{f"mean_{k}": v / n_done for k, v in phases.items()},
+        }
     return row
 
 
@@ -276,8 +298,12 @@ def run(quick: bool = True) -> dict:
                        offered_qps=float("inf"), rng=rng, burst=True,
                        capacity=capacity)
     burst["offered_qps"] = -1.0  # sentinel: instantaneous
-    emit([{k: v for k, v in r.items() if k != "latency_histogram"}
+    emit([{k: v for k, v in r.items()
+           if k not in ("latency_histogram", "breakdown")}
           for r in levels + [burst]], "expt8_serving")
+    emit([{"offered_qps": r["offered_qps"], **r["breakdown"]}
+          for r in levels + [burst] if "breakdown" in r],
+         "expt8_attribution")
 
     rej = [r["rejection_frac"] for r in levels]
     completed_rps = [r["completed_rps"] for r in levels]

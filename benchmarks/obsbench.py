@@ -1,0 +1,188 @@
+"""obsbench: instrumentation overhead gates for the observability plane.
+
+Three measurements (DESIGN.md §14 overhead-honesty notes):
+
+1. **Serving-loop overhead** — the expt8-style frontdesk loop (real MLP
+   tenants, coalesced dispatches, pre-warmed compiles) run with span
+   tracing OFF and ON over one shared service, trials strictly
+   alternated so thermal / JIT / frontier drift hits both arms equally.
+   Gate: best-trial throughput with tracing enabled is >= 97% of the
+   disabled arm (<= 3% overhead).  Typed metrics counters are always on
+   in both arms — they ARE the stats() surface — so this gate prices
+   exactly what turning ``trace=True`` adds.
+2. **No-op fast path** — per-call cost of ``tracer.span()`` with the
+   tracer disabled (one attribute read + a shared singleton) and of
+   ``Counter.inc``.  Gate: a disabled span costs < 5 us/call, so
+   leaving instrumented code paths in production is ~free.
+3. **Trace validity** — the enabled arm must actually have recorded
+   spans, and the Chrome-trace export must serialize to valid JSON with
+   the expected event shape.
+
+    PYTHONPATH=src python -m benchmarks.run --only obsbench
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core import MOGDConfig
+from repro.core.synthetic import mlp_surrogate_task
+from repro.frontdesk import AdaptiveBatcher, FrontDesk
+from repro.obs import Observability
+from repro.service import MOOService
+
+from .common import emit, write_json
+
+MOGD = MOGDConfig(steps=24, multistart=4)
+N_TENANTS = 8
+PROBES_PER_TICKET = 4
+OVERHEAD_GATE = 0.97  # tracing-on throughput >= 97% of tracing-off
+NOOP_SPAN_GATE_US = 5.0
+
+
+def _stack() -> tuple[Observability, MOOService]:
+    """One shared service with pre-warmed compiles; the tracer starts
+    disabled and is toggled between trials (same objects both arms)."""
+    obs = Observability(trace=False)
+    svc = MOOService(mogd=MOGD, batch_rects=1, grid_l=2, obs=obs)
+    sids = _sessions(svc, tag="warm")
+    for sid in sids:  # per-session (G=1) bucket
+        svc.step_sessions([sid], origin="warmup")
+    for subset in (sids[:2], sids[:4], sids):  # coalesced buckets
+        svc.step_sessions(subset, origin="warmup")
+    for sid in sids:
+        svc.close_session(sid)
+    return obs, svc
+
+
+def _sessions(svc: MOOService, tag: str) -> list:
+    """Fresh identically-seeded tenants (same structure key, so the
+    warm compile caches hit; fresh rectangle queues and frontiers, so
+    every trial probes identical state — no cross-trial drift)."""
+    return [svc.create_session(mlp_surrogate_task(seed=i, arch=(8, 8),
+                                                  name=f"obs-{tag}-{i}"))
+            for i in range(N_TENANTS)]
+
+
+def _trial(svc: MOOService, n_tickets: int, tag: str) -> float:
+    """One closed-loop pass over fresh sessions: submit ``n_tickets``
+    round-robin against a fresh frontdesk, drain, return completed
+    tickets / second."""
+    sids = _sessions(svc, tag)
+    desk = FrontDesk(svc, capacity=2 * n_tickets,
+                     batcher=AdaptiveBatcher(w_min=1e-4, w_max=5e-3,
+                                             w_init=1e-3),
+                     poll_floor_s=0.01)
+    with desk:
+        t0 = time.perf_counter()
+        tickets = [desk.submit(session_id=sids[i % len(sids)],
+                               slo="standard",
+                               n_probes=PROBES_PER_TICKET)
+                   for i in range(n_tickets)]
+        desk.drain(timeout=60.0)
+        wall = time.perf_counter() - t0
+    done = sum(1 for t in tickets if t.ok)
+    for sid in sids:
+        svc.close_session(sid)
+    return done / max(wall, 1e-9)
+
+
+def _noop_span_cost_us(obs: Observability, n: int = 200_000) -> float:
+    """Per-call microseconds of ``span()`` on the disabled fast path."""
+    tr = obs.tracer
+    assert not tr.enabled
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tr.span("noop"):
+            pass
+    t1 = time.perf_counter()
+    # subtract the bare-loop floor so the number prices span(), not the
+    # Python for statement
+    t2 = time.perf_counter()
+    for _ in range(n):
+        pass
+    t3 = time.perf_counter()
+    return max(0.0, ((t1 - t0) - (t3 - t2)) / n) * 1e6
+
+
+def _counter_inc_cost_us(obs: Observability, n: int = 200_000) -> float:
+    """Per-call microseconds of ``Counter.inc`` (lock + add)."""
+    c = obs.metrics.counter("obsbench.cost", {"bench": "inc"})
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc()
+    t1 = time.perf_counter()
+    return (t1 - t0) / n * 1e6
+
+
+def run(quick: bool = True) -> dict:
+    obs, svc = _stack()
+    n_tickets = 64 if quick else 128
+    trials = 3 if quick else 6
+
+    # A/B over one shared stack with fresh identically-seeded sessions
+    # per trial (no cross-trial frontier drift) and the pair order
+    # swapped every round, so residual warmup / thermal drift lands on
+    # both arms symmetrically
+    rps_off, rps_on = [], []
+    _trial(svc, n_tickets, tag="settle")  # throwaway: settle the path
+    for k in range(trials):
+        order = ((False, rps_off), (True, rps_on))
+        for on, sink in (order if k % 2 == 0 else order[::-1]):
+            obs.tracer.enabled = on
+            sink.append(_trial(svc, n_tickets, tag=f"t{k}{int(on)}"))
+    obs.tracer.enabled = False
+
+    # trace validity: the enabled trials must have produced a loadable
+    # Chrome trace with the request-path span taxonomy
+    spans = obs.tracer.spans()
+    chrome = obs.tracer.chrome_trace()
+    chrome_ok = (bool(spans)
+                 and isinstance(json.loads(json.dumps(chrome)), dict)
+                 and all(ev["ph"] in ("X", "M")
+                         for ev in chrome["traceEvents"]))
+    span_names = {s.name for s in spans}
+
+    noop_us = _noop_span_cost_us(obs)
+    inc_us = _counter_inc_cost_us(obs)
+
+    best_off, best_on = max(rps_off), max(rps_on)
+    overhead = 1.0 - best_on / max(best_off, 1e-9)
+    rows = [
+        {"arm": "trace_off", "best_rps": best_off,
+         "trials": len(rps_off)},
+        {"arm": "trace_on", "best_rps": best_on, "trials": len(rps_on),
+         "overhead_frac": overhead},
+    ]
+    emit(rows, "obsbench")
+    summary = {
+        "rps_off": rps_off,
+        "rps_on": rps_on,
+        "best_rps_off": best_off,
+        "best_rps_on": best_on,
+        "overhead_frac": overhead,
+        "noop_span_us": noop_us,
+        "counter_inc_us": inc_us,
+        "spans_recorded": len(spans),
+        "span_names": sorted(span_names),
+        "chrome_trace_ok": bool(chrome_ok),
+    }
+    write_json("obsbench", summary, quick=quick)
+
+    assert best_on >= OVERHEAD_GATE * best_off, (
+        f"tracing overhead {overhead:.1%} exceeds "
+        f"{1 - OVERHEAD_GATE:.0%}: on={best_on:.1f} off={best_off:.1f} "
+        f"tickets/s")
+    assert noop_us < NOOP_SPAN_GATE_US, (
+        f"disabled-tracer span() costs {noop_us:.2f} us/call "
+        f">= {NOOP_SPAN_GATE_US} us — the no-op fast path regressed")
+    assert chrome_ok and spans, "enabled arm produced no loadable trace"
+    assert {"frontdesk.admit", "frontdesk.dispatch",
+            "service.step_round", "exec.dispatch"} <= span_names, (
+        f"request-path span taxonomy incomplete: {sorted(span_names)}")
+    return summary
+
+
+if __name__ == "__main__":
+    run(quick=True)

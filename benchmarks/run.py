@@ -30,6 +30,7 @@ SUITES = [
     "expt7_scaling",     # device-scaling: mesh probe sharding 1->8 devices
     "expt8_serving",     # frontdesk admission plane: open-loop QPS/SLO
     "expt9_restart",     # durable frontier plane: warm restart from vault
+    "obsbench",          # observability plane: instrumentation overhead
 ]
 
 

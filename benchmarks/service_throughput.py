@@ -37,7 +37,9 @@ from repro.core import (
 )
 from repro.service import MOOService
 
-from .common import LatencyRecorder, Timer, emit, write_json
+from repro.obs import Histogram
+
+from .common import Timer, emit, write_json
 
 MOGD = MOGDConfig(steps=80, multistart=8)
 HV_REF = np.array([1.5, 1.5])
@@ -106,7 +108,7 @@ def _hetero_arm(specs: list, probes: int,
     st = svc.stats()
     # the serving path reads the live frontier — it must stay cheap no
     # matter which coalescing mode drives the probe plane
-    rec = LatencyRecorder("recommend")
+    rec = Histogram("recommend")
     for sid in sids:
         t0 = time.perf_counter()
         svc.recommend(sid)

@@ -42,6 +42,7 @@ WEIGHTS = {
     "test_models.py": 60,
     "test_properties.py": 45,
     "test_persist.py": 40,
+    "test_obs.py": 40,
     "test_dag.py": 30,
 }
 

@@ -28,7 +28,7 @@ RESULTS = REPO / "results"
 # benchmarks with a smoke mode cheap enough for per-PR CI
 DEFAULT = ["service_throughput", "expt5_multistage", "expt6_adaptive",
            "kernelbench", "expt7_scaling", "expt8_serving",
-           "expt9_restart"]
+           "expt9_restart", "obsbench"]
 
 
 def validate_artifact(name: str) -> dict:

@@ -241,7 +241,8 @@ class MOGDSolver:
         return self.solve(single_objective_box(bounds)[None], target=target)
 
 
-def solve_grouped(items, origin: str | None = None) -> COResult:
+def solve_grouped(items, origin: str | None = None,
+                  parent_span=None) -> COResult:
     """One shared executor dispatch over many solvers' box spans.
 
     ``items`` is a list of ``(solver: MOGDSolver, boxes: (B, 2, k),
@@ -252,7 +253,10 @@ def solve_grouped(items, origin: str | None = None) -> COResult:
     concatenated batch.  This is the multi-tenant coalescing primitive
     the service's coalesced step dispatches through (DESIGN.md §10);
     ``origin`` tags the dispatch in executor telemetry (``"frontdesk"``
-    for admission-plane traffic).
+    for admission-plane traffic) and ``parent_span`` (when tracing)
+    parents the executor's compile/dispatch spans — it is only forwarded
+    when set, so executor stand-ins with the legacy two-argument
+    ``solve_requests`` signature keep working.
     """
     executor = items[0][0].executor
     requests = []
@@ -271,7 +275,11 @@ def solve_grouped(items, origin: str | None = None) -> COResult:
                                  solver.problem.dim))
         requests.append(
             solver._request(x0s, boxes[:, 0], boxes[:, 1], target))
-    x, f, feas = executor.solve_requests(requests, origin=origin)
+    if parent_span is not None:
+        x, f, feas = executor.solve_requests(requests, origin=origin,
+                                             parent_span=parent_span)
+    else:
+        x, f, feas = executor.solve_requests(requests, origin=origin)
     return COResult(np.asarray(x), np.asarray(f), np.asarray(feas))
 
 

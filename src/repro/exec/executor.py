@@ -41,6 +41,7 @@ plane's compute body.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 from typing import Any, Callable
 
@@ -280,6 +281,8 @@ class ProbeRequest:
 # The executor
 # ---------------------------------------------------------------------------
 
+_exec_ids = itertools.count()  # per-instance metric label suffix
+
 
 class ProbeExecutor:
     """Structure-keyed compiler + dispatcher for batched MOGD probes.
@@ -315,7 +318,8 @@ class ProbeExecutor:
 
     def __init__(self, mesh="auto", mesh_axis: str | None = None,
                  bucket_fn: Callable[[int], int] = bucket,
-                 max_programs: int = 512, backend: str = "auto"):
+                 max_programs: int = 512, backend: str = "auto",
+                 obs=None):
         if isinstance(mesh, str):
             if mesh != "auto":
                 raise ValueError(f"mesh must be 'auto', None or a Mesh, "
@@ -347,23 +351,84 @@ class ProbeExecutor:
         # structure key -> DescendPlan (fused backend) or None (scan path);
         # populated once per structure by _descend_plan's parity gate
         self._descend_plans: dict[tuple, Any] = {}
-        self.eval_compiles = 0
-        self.dispatches = 0
-        self.probes = 0
-        self.fused_dispatches = 0
-        self.fused_fallbacks = 0
-        self.sharded_dispatches = 0
+        # typed dispatch-plane telemetry (DESIGN.md §14): counters live
+        # in the shared observability registry; the int attribute
+        # surface below stays as read-only views.  Mutations still run
+        # under the executor lock, so the numbers stay exact for shared
+        # executors.
+        from repro.obs import Observability
+
+        self.obs = obs if obs is not None else Observability()
+        m = self.obs.metrics
+        self._labels = {"executor": f"ex{next(_exec_ids)}"}
+        self._c_compiles = m.counter(
+            "exec.compiles", self._labels,
+            help="solve-program jit builds (all structures and buckets)")
+        self._c_eval_compiles = m.counter(
+            "exec.eval_compiles", self._labels)
+        self._c_dispatches = m.counter(
+            "exec.dispatches", self._labels, help="device dispatches")
+        self._c_probes = m.counter(
+            "exec.probes", self._labels, help="useful probe rows solved")
+        self._c_fused_dispatches = m.counter(
+            "exec.fused_dispatches", self._labels)
+        self._c_fused_fallbacks = m.counter(
+            "exec.fused_fallbacks", self._labels)
+        self._c_sharded_dispatches = m.counter(
+            "exec.sharded_dispatches", self._labels)
         self.last_shard_axis: str | None = None
         # batcher seam telemetry (DESIGN.md §12): how full the padded
         # (G, R) buckets actually run — the signal the frontdesk's
         # adaptive micro-batching window exists to maximize — plus a
         # per-origin dispatch count so serving-plane traffic is
         # distinguishable from direct solver calls.
-        self.useful_rows = 0
-        self.padded_rows = 0
+        self._c_useful_rows = m.counter("exec.useful_rows", self._labels)
+        self._c_padded_rows = m.counter("exec.padded_rows", self._labels)
         self.last_bucket: tuple | None = None
         self.last_fill: float = 1.0
-        self.dispatch_origins: dict[str, int] = {}
+
+    # legacy int counter surface: views over the registry ------------------
+    @property
+    def eval_compiles(self) -> int:
+        return int(self._c_eval_compiles.value)
+
+    @property
+    def dispatches(self) -> int:
+        return int(self._c_dispatches.value)
+
+    @property
+    def probes(self) -> int:
+        return int(self._c_probes.value)
+
+    @property
+    def fused_dispatches(self) -> int:
+        return int(self._c_fused_dispatches.value)
+
+    @property
+    def fused_fallbacks(self) -> int:
+        return int(self._c_fused_fallbacks.value)
+
+    @property
+    def sharded_dispatches(self) -> int:
+        return int(self._c_sharded_dispatches.value)
+
+    @property
+    def useful_rows(self) -> int:
+        return int(self._c_useful_rows.value)
+
+    @property
+    def padded_rows(self) -> int:
+        return int(self._c_padded_rows.value)
+
+    @property
+    def dispatch_origins(self) -> dict:
+        """Per-origin dispatch counts, read from the labeled
+        ``exec.dispatches_by_origin`` counters."""
+        out = {}
+        for inst in self.obs.metrics.instruments("exec.dispatches_by_origin"):
+            if all(inst.labels.get(k) == v for k, v in self._labels.items()):
+                out[inst.labels["origin"]] = int(inst.value)
+        return out
 
     # -- telemetry ---------------------------------------------------------
     @property
@@ -501,7 +566,7 @@ class ProbeExecutor:
                     "backend='fused' requires a stacked-MLP program "
                     f"structure; got {req.program.structure[0]!r}")
         elif self.backend == "auto" and not self._parity_check(req, plan):
-            self.fused_fallbacks += 1
+            self._c_fused_fallbacks.inc()
             plan = None
         self._descend_plans[skey] = plan
         return plan
@@ -680,6 +745,7 @@ class ProbeExecutor:
                     out_specs=row_spec, check_rep=False)
             # else: indivisible bucket — unsharded fallback, never fail
         self.compile_counts[skey] = self.compile_counts.get(skey, 0) + 1
+        self._c_compiles.inc()
         return jax.jit(batched)
 
     # -- assembly ----------------------------------------------------------
@@ -714,7 +780,8 @@ class ProbeExecutor:
         return params, tuple(r[:, None] for r in rows), B, 1
 
     # -- dispatch ----------------------------------------------------------
-    def solve_requests(self, requests, origin: str | None = None) -> tuple:
+    def solve_requests(self, requests, origin: str | None = None,
+                       parent_span=None) -> tuple:
         """Concatenate the requests' spans into one padded (G, R) batch,
         solve in a single device dispatch, and slice results back per
         caller.
@@ -725,6 +792,8 @@ class ProbeExecutor:
         concatenated (unpadded) spans, in request order.  ``origin``
         optionally tags the dispatch source (``"frontdesk"`` for the
         async admission plane) in ``dispatch_origins`` telemetry.
+        ``parent_span`` nests the emitted ``exec.compile`` /
+        ``exec.dispatch`` spans under the caller's trace (DESIGN.md §14).
         """
         requests = list(requests)
         if not requests:
@@ -744,13 +813,20 @@ class ProbeExecutor:
         D = int(jnp.shape(parts[0][1][0])[-1])
         k = int(jnp.shape(parts[0][1][1])[-1])
         base_key = (skey, k, S, D)
+        tr = self.obs.tracer
         with self._lock:
             plan = self._descend_plan(r0, skey)
             Gp, Rp, axis = self._choose_buckets(base_key, G, R)
             key = (*base_key, Gp, Rp)
             fn = self._programs.pop(key, None)  # re-insert as newest (LRU)
             if fn is None:
+                tc0 = tr.now()
                 fn = self._build(r0, Gp, Rp, skey, axis, plan)
+                if tr.enabled:
+                    tr.record_span(
+                        "exec.compile", tc0, tr.now(), cat="exec",
+                        parent=parent_span,
+                        args={"bucket": [Gp, Rp], "structure": str(skey)})
                 self._built_buckets.setdefault(base_key, set()).add((Gp, Rp))
             self._programs[key] = fn
             while len(self._programs) > self.max_programs:
@@ -774,7 +850,14 @@ class ProbeExecutor:
         ]
         if Gp != G:
             params, rows = pad_rows((params, rows), Gp - G)
+        td0 = tr.now()
         x, f, feas = fn(params, *rows)
+        if tr.enabled:
+            tr.record_span(
+                "exec.dispatch", td0, tr.now(), cat="exec",
+                parent=parent_span,
+                args={"bucket": [Gp, Rp], "origin": origin,
+                      "fill": sum(p[2] * p[3] for p in parts) / (Gp * Rp)})
         # slice back: group g contributes its first n_rows rows
         outs_x, outs_f, outs_feas = [], [], []
         g0 = 0
@@ -787,19 +870,21 @@ class ProbeExecutor:
                 np.asarray(feas[g0: g0 + n_groups, :n_rows]).reshape(-1))
             g0 += n_groups
         with self._lock:  # shared executors: keep telemetry exact
-            self.dispatches += 1
-            self.probes += sum(p[2] * p[3] for p in parts)
-            self.useful_rows += sum(p[2] * p[3] for p in parts)
-            self.padded_rows += Gp * Rp
+            useful = sum(p[2] * p[3] for p in parts)
+            self._c_dispatches.inc()
+            self._c_probes.inc(useful)
+            self._c_useful_rows.inc(useful)
+            self._c_padded_rows.inc(Gp * Rp)
             self.last_bucket = (Gp, Rp)
-            self.last_fill = sum(p[2] * p[3] for p in parts) / (Gp * Rp)
+            self.last_fill = useful / (Gp * Rp)
             if origin is not None:
-                self.dispatch_origins[origin] = (
-                    self.dispatch_origins.get(origin, 0) + 1)
+                self.obs.metrics.counter(
+                    "exec.dispatches_by_origin",
+                    {**self._labels, "origin": origin}).inc()
             if plan is not None:
-                self.fused_dispatches += 1
+                self._c_fused_dispatches.inc()
             if axis is not None:
-                self.sharded_dispatches += 1
+                self._c_sharded_dispatches.inc()
                 self.last_shard_axis = axis
         return (np.concatenate(outs_x), np.concatenate(outs_f),
                 np.concatenate(outs_feas))
@@ -818,7 +903,7 @@ class ProbeExecutor:
             if fn is None:
                 apply = program.apply
                 fn = jax.jit(jax.vmap(apply, in_axes=(None, 0)))
-                self.eval_compiles += 1
+                self._c_eval_compiles.inc()
             self._evals[key] = fn
             while len(self._evals) > self.max_programs:
                 self._evals.pop(next(iter(self._evals)))

@@ -8,8 +8,13 @@ blocking, which is the backpressure contract: the *client* decides
 whether to retry, degrade, or give up; the plane never queues unbounded
 work.
 
+Admission counters are typed :class:`repro.obs.Counter` / ``Gauge``
+instruments (DESIGN.md §14) — ``snapshot()`` and the legacy int-valued
+properties are views over the registry, so the plane's Prometheus
+endpoint and ``FrontDesk.stats()`` read the *same* numbers.
+
 All mutation happens under the owning ``FrontDesk``'s plane lock; these
-classes hold no locks of their own.
+classes hold no locks of their own beyond the registry's.
 """
 
 from __future__ import annotations
@@ -17,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+
+from repro.obs import MetricsRegistry
 
 # terminal ticket states (the event fires exactly once, on entry)
 PENDING = "pending"
@@ -59,6 +66,11 @@ class Ticket:
     session's rectangle queue is exhausted (its frontier is final, so no
     further probing can help).  ``recommend`` is *not* part of the
     ticket — it stays a synchronous, non-blocking read on the service.
+
+    Latency attribution (DESIGN.md §14): the plane charges every second
+    between submit and the terminal state to exactly one of the
+    ``*_s`` phase fields below, so :meth:`breakdown` components sum to
+    the end-to-end latency — an SLO miss names its culprit.
     """
 
     session_id: str
@@ -71,6 +83,13 @@ class Ticket:
     state: str = PENDING
     credited: int = 0  # probes landed on the session since submit
     finished_at: float | None = None
+    # -- latency attribution (all on the plane's clock) ----------------
+    queue_wait_s: float = 0.0  # admitted but outside any batching hold
+    batch_wait_s: float = 0.0  # deliberately held by the batcher window
+    dispatch_s: float = 0.0  # riding a probe round (device + overhead)
+    absorb_s: float = 0.0  # share of frontier absorb under service lock
+    persist_s: float = 0.0  # share of vault export in its probe rounds
+    last_enqueued_at: float | None = None  # submit or last re-queue
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False)
 
@@ -100,6 +119,20 @@ class Ticket:
             return None
         return self.finished_at - self.submitted_at
 
+    def breakdown(self) -> dict:
+        """Where this ticket's latency went: per-phase seconds plus the
+        accounted total and the end-to-end latency it should match."""
+        out = {
+            "queue_wait_s": self.queue_wait_s,
+            "batch_wait_s": self.batch_wait_s,
+            "dispatch_s": self.dispatch_s,
+            "absorb_s": self.absorb_s,
+            "persist_s": self.persist_s,
+        }
+        out["accounted_s"] = sum(out.values())
+        out["e2e_s"] = self.latency()
+        return out
+
 
 class AdmissionQueue:
     """Bounded admission with explicit rejection (no silent queueing).
@@ -107,39 +140,84 @@ class AdmissionQueue:
     ``capacity`` bounds the number of *live* tickets (queued or mid
     dispatch).  ``try_admit`` either claims a slot or refuses; the
     caller marks the ticket accordingly.  Counters are cumulative and
-    monotone — ``FrontDesk.stats`` exports them.
+    monotone, registered as typed instruments on ``metrics`` (a private
+    registry when standalone) — ``FrontDesk.stats`` exports them.
     """
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256,
+                 metrics: MetricsRegistry | None = None,
+                 labels: dict | None = None):
         if capacity < 1:
             raise ValueError("admission capacity must be >= 1")
         self.capacity = capacity
-        self.live = 0
-        self.submitted = 0
-        self.admitted = 0
-        self.rejected = 0
-        self.shed = 0
-        self.completed = 0
-        self.errors = 0
+        m = metrics if metrics is not None else MetricsRegistry()
+        self.metrics = m
+        self._g_live = m.gauge(
+            "frontdesk.live", labels, help="live tickets (queued or "
+            "mid-dispatch)")
+        self._c_submitted = m.counter(
+            "frontdesk.submitted", labels, help="submit calls")
+        self._c_admitted = m.counter(
+            "frontdesk.admitted", labels, help="tickets admitted")
+        self._c_rejected = m.counter(
+            "frontdesk.rejected", labels, help="tickets rejected at the "
+            "full queue (backpressure)")
+        self._c_shed = m.counter(
+            "frontdesk.shed", labels, help="tickets shed on deadline "
+            "expiry")
+        self._c_completed = m.counter(
+            "frontdesk.completed", labels, help="tickets completed")
+        self._c_errors = m.counter(
+            "frontdesk.errors", labels, help="tickets failed by a "
+            "dispatch error")
+
+    # legacy int-valued counter surface: views over the registry
+    @property
+    def live(self) -> int:
+        return int(self._g_live.value)
+
+    @property
+    def submitted(self) -> int:
+        return int(self._c_submitted.value)
+
+    @property
+    def admitted(self) -> int:
+        return int(self._c_admitted.value)
+
+    @property
+    def rejected(self) -> int:
+        return int(self._c_rejected.value)
+
+    @property
+    def shed(self) -> int:
+        return int(self._c_shed.value)
+
+    @property
+    def completed(self) -> int:
+        return int(self._c_completed.value)
+
+    @property
+    def errors(self) -> int:
+        return int(self._c_errors.value)
 
     def try_admit(self) -> bool:
-        self.submitted += 1
+        self._c_submitted.inc()
         if self.live >= self.capacity:
-            self.rejected += 1
+            self._c_rejected.inc()
             return False
-        self.live += 1
-        self.admitted += 1
+        self._g_live.inc()
+        self._c_admitted.inc()
         return True
 
     def release(self, state: str) -> None:
         """A live ticket reached a terminal state — free its slot."""
-        self.live -= 1
+        self._g_live.dec()
         if state == DONE:
-            self.completed += 1
+            self._c_completed.inc()
         elif state == SHED:
-            self.shed += 1
+            self._c_shed.inc()
         elif state == ERROR:
-            self.errors += 1
+            self._c_errors.inc()
 
     def snapshot(self) -> dict:
         return {

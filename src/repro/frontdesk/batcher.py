@@ -92,6 +92,13 @@ class AdaptiveBatcher:
             return True
         return earliest_deadline - now <= 2.0 * g.ema_wall_s
 
+    def window_opened_at(self, key: tuple) -> float | None:
+        """When the group's current window opened (None — window shut).
+        The frontdesk's latency attribution uses this to split a claimed
+        ticket's wait into queue time vs deliberate batching hold."""
+        g = self._groups.get(key)
+        return None if g is None else g.opened_at
+
     def window_expired(self, key: tuple, now: float) -> bool:
         g = self._group(key)
         return g.opened_at is not None and now - g.opened_at >= g.window_s

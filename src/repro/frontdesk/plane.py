@@ -17,6 +17,14 @@ per structure group), with the dispatcher thread draining probe work so
 frontier under the service lock, which coalesced stepping releases
 around device dispatches.
 
+Observability (DESIGN.md §14): the plane shares one
+:class:`repro.obs.Observability` bundle with its service — counters and
+phase histograms live in the shared registry (``stats()`` is a view over
+it), spans cover admit → schedule → dispatch with explicit parents, and
+every ticket's latency is attributed second-for-second to queue wait /
+batch-window hold / dispatch / absorb / persist, so
+``Ticket.breakdown()`` components sum to its end-to-end latency.
+
 Lock order is strictly plane lock → service lock → executor lock; the
 plane lock is never held across a device dispatch.
 
@@ -27,6 +35,7 @@ starting the thread).
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 
@@ -42,6 +51,13 @@ from repro.frontdesk.admission import (
 )
 from repro.frontdesk.batcher import AdaptiveBatcher
 from repro.frontdesk.scheduler import EDFScheduler
+from repro.obs import Observability
+
+_plane_ids = itertools.count()
+
+#: the attributed latency phases, in pipeline order
+PHASES = ("queue_wait_s", "batch_wait_s", "dispatch_s", "absorb_s",
+          "persist_s")
 
 
 class FrontDesk:
@@ -55,23 +71,83 @@ class FrontDesk:
         session_kwargs: dict | None = None,
         clock=time.monotonic,
         poll_floor_s: float = 0.25,
+        obs: Observability | None = None,
     ):
         self.service = service
-        self.queue = AdmissionQueue(capacity)
+        # share the service's bundle when it has one, so the whole
+        # request path lands in ONE registry / tracer; instruments get a
+        # per-instance label because benchmarks run several desks over
+        # one service and expect independent counts
+        self.obs = (obs if obs is not None
+                    else getattr(service, "obs", None) or Observability())
+        self._labels = {"plane": f"plane{next(_plane_ids)}"}
+        m = self.obs.metrics
+        self.queue = AdmissionQueue(capacity, metrics=m,
+                                    labels=self._labels)
         self.batcher = batcher if batcher is not None else AdaptiveBatcher()
         self.scheduler = EDFScheduler()
         self.session_kwargs = dict(session_kwargs or {})
         self.clock = clock
         self.poll_floor_s = poll_floor_s
-        self.dispatches = 0
-        self.dispatched_probes = 0
-        self.dispatch_errors = 0
-        self.fast_completions = 0  # tickets settled at submit time
-        # because the session's frontier was already final (vault restore)
+        self._c_dispatches = m.counter(
+            "frontdesk.dispatches", self._labels,
+            help="coalesced probe rounds dispatched")
+        self._c_dispatched_probes = m.counter(
+            "frontdesk.dispatched_probes", self._labels,
+            help="probes landed by plane dispatches")
+        self._c_dispatch_errors = m.counter(
+            "frontdesk.dispatch_errors", self._labels,
+            help="probe rounds that raised")
+        self._c_fast_completions = m.counter(
+            "frontdesk.fast_completions", self._labels,
+            help="tickets settled at submit (frontier already final)")
+        # per-phase attribution histograms, recorded at ticket completion
+        self._h = {p: m.histogram(f"frontdesk.{p}", self._labels,
+                                  help=f"completed-ticket {p} share")
+                   for p in PHASES}
+        self._h["e2e_s"] = m.histogram(
+            "frontdesk.e2e_s", self._labels,
+            help="completed-ticket end-to-end latency")
         self._spec_sessions: dict[str, str] = {}
         self._cond = threading.Condition()  # the plane lock
         self._thread: threading.Thread | None = None
         self._stop = False
+
+    # legacy int-valued counters: views over the registry
+    @property
+    def dispatches(self) -> int:
+        return int(self._c_dispatches.value)
+
+    @property
+    def dispatched_probes(self) -> int:
+        return int(self._c_dispatched_probes.value)
+
+    @property
+    def dispatch_errors(self) -> int:
+        return int(self._c_dispatch_errors.value)
+
+    @property
+    def fast_completions(self) -> int:
+        return int(self._c_fast_completions.value)
+
+    # -- ticket settlement ---------------------------------------------
+    def _finish(self, t: Ticket, state: str, now: float) -> None:
+        """Terminal transition + attribution export (plane lock held)."""
+        t.finish(state, now)
+        self.queue.release(state)
+        if state == DONE:
+            for p in PHASES:
+                self._h[p].record(getattr(t, p))
+            self._h["e2e_s"].record(max(0.0, now - t.submitted_at))
+
+    def _trace_admit(self, t: Ticket, t0: float) -> None:
+        """Retroactive admit span (no-op when tracing is off)."""
+        tr = self.obs.tracer
+        if tr.enabled:
+            tr.record_span(
+                "frontdesk.admit", t0, tr.now(), cat="frontdesk",
+                args={"ticket": t.ticket_id, "state": t.state,
+                      "session": t.session_id})
 
     # -- admission -----------------------------------------------------
     def submit(
@@ -97,6 +173,7 @@ class FrontDesk:
             slo = SLO_CLASSES[slo]
         if deadline_s is None:
             deadline_s = slo.deadline_s
+        ta0 = self.obs.tracer.now()
         now = self.clock()
         with self._cond:
             admitted = self.queue.try_admit()
@@ -105,6 +182,7 @@ class FrontDesk:
                        slo=slo, deadline=now + deadline_s,
                        n_probes=n_probes, submitted_at=now)
             t.finish(REJECTED, now)
+            self._trace_admit(t, ta0)
             return t
         try:
             sid = (session_id if session_id is not None
@@ -116,11 +194,11 @@ class FrontDesk:
             raise
         t = Ticket(session_id=sid, group_key=key, slo=slo,
                    deadline=now + deadline_s, n_probes=n_probes,
-                   submitted_at=now)
+                   submitted_at=now, last_enqueued_at=now)
         if slo.sheddable and deadline_s <= 0:
             with self._cond:
-                t.finish(SHED, now)
-                self.queue.release(SHED)
+                self._finish(t, SHED, now)
+            self._trace_admit(t, ta0)
             return t
         # warm-restart fast path (DESIGN.md §13): a session whose frontier
         # is already final — e.g. vault-restored at create_session — has
@@ -131,14 +209,15 @@ class FrontDesk:
         probe_done = getattr(self.service, "session_exhausted", None)
         if probe_done is not None and probe_done(sid):
             with self._cond:
-                t.finish(DONE, now)
-                self.queue.release(DONE)
-                self.fast_completions += 1
+                self._finish(t, DONE, now)
+                self._c_fast_completions.inc()
+            self._trace_admit(t, ta0)
             return t
         with self._cond:
             self.scheduler.add(t)
             self.batcher.note_arrival(key, now)
             self._cond.notify_all()
+        self._trace_admit(t, ta0)
         return t
 
     def _resolve_session(self, spec) -> str:
@@ -164,55 +243,103 @@ class FrontDesk:
         ``step_sessions`` round (plane lock released), settle tickets.
         Tests call this directly with a fake clock; the dispatcher
         thread calls it in a loop."""
+        tr = self.obs.tracer
+        tp0 = tr.now()
         now = self.clock()
         claims: list[tuple[tuple, list[Ticket], bool]] = []
         shed_n = 0
         with self._cond:
             for t in self.scheduler.shed_expired(now):
-                t.finish(SHED, now)
-                self.queue.release(SHED)
+                enq = (t.last_enqueued_at if t.last_enqueued_at is not None
+                       else t.submitted_at)
+                t.queue_wait_s += max(0.0, now - enq)
+                self._finish(t, SHED, now)
                 shed_n += 1
             sizes = self.scheduler.group_sizes()
             for key in self.scheduler.group_order():
                 edl = self.scheduler.earliest_deadline(key)
                 if self.batcher.ready(key, sizes[key], edl, now):
                     expired = self.batcher.window_expired(key, now)
-                    claims.append(
-                        (key, self.scheduler.claim_group(key), expired))
+                    tickets = self.scheduler.claim_group(key)
+                    # split the wait so far: time inside the batcher's
+                    # open window is a deliberate hold (batch_wait),
+                    # everything before it is queueing
+                    opened = self.batcher.window_opened_at(key)
+                    for t in tickets:
+                        enq = (t.last_enqueued_at
+                               if t.last_enqueued_at is not None
+                               else t.submitted_at)
+                        wait = max(0.0, now - enq)
+                        held = (min(wait, max(0.0, now - opened))
+                                if opened is not None else 0.0)
+                        t.batch_wait_s += held
+                        t.queue_wait_s += wait - held
+                    claims.append((key, tickets, expired))
+        if tr.enabled and (claims or shed_n):
+            # retroactive: idle polls (the dispatcher spins) emit nothing
+            tr.record_span("frontdesk.schedule", tp0, tr.now(),
+                           cat="frontdesk",
+                           args={"claims": len(claims), "shed": shed_n})
         probes = 0
         for key, tickets, expired in claims:
             sids = list(dict.fromkeys(t.session_id for t in tickets))
             t0 = self.clock()
+            gap = max(0.0, t0 - now)  # earlier groups' dispatch time
+            for t in tickets:
+                t.queue_wait_s += gap
+            sp = tr.span("frontdesk.dispatch", cat="frontdesk",
+                         args={"group": str(key), "sessions": len(sids),
+                               "tickets": [t.ticket_id
+                                           for t in tickets[:32]]})
             try:
-                out = self.service.step_sessions(sids, origin="frontdesk")
+                with sp:
+                    kw = ({"parent_span": sp} if sp.enabled else {})
+                    out = self.service.step_sessions(
+                        sids, origin="frontdesk", **kw)
+                    sp.set("probes", out["probes"])
             except Exception:
                 with self._cond:
                     end = self.clock()
                     for t in tickets:
-                        t.finish(ERROR, end)
-                        self.queue.release(ERROR)
-                    self.dispatch_errors += 1
+                        t.dispatch_s += max(0.0, end - t0)
+                        self._finish(t, ERROR, end)
+                    self._c_dispatch_errors.inc()
                 continue
-            wall = self.clock() - t0
             with self._cond:
                 end = self.clock()
+                wall = max(0.0, end - t0)
+                # charge the round to dispatch/absorb/persist in the
+                # proportions the service measured (perf_counter); the
+                # plane clock keeps the total exact, so breakdown
+                # components still sum to the end-to-end latency
+                timing = out.get("timing") or {}
+                rw = timing.get("round_wall_s", 0.0)
+                af = timing.get("absorb_s", 0.0) / rw if rw > 0 else 0.0
+                pf = timing.get("persist_s", 0.0) / rw if rw > 0 else 0.0
+                scale = af + pf
+                if scale > 1.0:
+                    af, pf = af / scale, pf / scale
+                d_abs, d_per = wall * af, wall * pf
+                d_dis = wall - d_abs - d_per
                 self.batcher.on_dispatch(key, len(tickets), wall,
                                          expired, end)
                 exhausted = set(out["exhausted"])
                 for t in tickets:
+                    t.dispatch_s += d_dis
+                    t.absorb_s += d_abs
+                    t.persist_s += d_per
                     t.credited += out["per_session"].get(t.session_id, 0)
                     if t.credited >= t.n_probes or t.session_id in exhausted:
-                        t.finish(DONE, end)
-                        self.queue.release(DONE)
+                        self._finish(t, DONE, end)
                     elif t.slo.sheddable and t.deadline <= end:
-                        t.finish(SHED, end)
-                        self.queue.release(SHED)
+                        self._finish(t, SHED, end)
                         shed_n += 1
                     else:  # partial progress — back in the queue
+                        t.last_enqueued_at = end
                         self.scheduler.add(t)
                         self.batcher.note_arrival(key, end)
-                self.dispatches += 1
-                self.dispatched_probes += out["probes"]
+                self._c_dispatches.inc()
+                self._c_dispatched_probes.inc(out["probes"])
                 probes += out["probes"]
         return {"groups": len(claims), "probes": probes, "shed": shed_n}
 
@@ -271,7 +398,8 @@ class FrontDesk:
     # -- telemetry -----------------------------------------------------
     def stats(self) -> dict:
         """Consistent plane snapshot (admission counters, pending depth,
-        dispatch totals, batcher windows)."""
+        dispatch totals, batcher windows, completed-ticket latency
+        attribution) — a view over the shared metrics registry."""
         with self._cond:
             out = self.queue.snapshot()
             out.update(
@@ -283,5 +411,7 @@ class FrontDesk:
                 fast_completions=self.fast_completions,
                 sessions=len(self._spec_sessions),
                 batcher=self.batcher.snapshot(),
+                latency={name: h.summary()
+                         for name, h in self._h.items()},
             )
             return out

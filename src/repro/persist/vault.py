@@ -37,6 +37,7 @@ Lifecycle:
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import pathlib
@@ -47,6 +48,8 @@ import time
 import warnings
 
 from . import store
+
+_vault_ids = itertools.count()  # per-instance metric label suffix
 
 _SENTINEL = object()
 _TOMBSTONE_FILE = "_tombstones.json"
@@ -61,7 +64,7 @@ class FrontierVault:
     """
 
     def __init__(self, root: str | os.PathLike, verify: bool = True,
-                 write_behind: bool = True):
+                 write_behind: bool = True, obs=None):
         self.root = pathlib.Path(root)
         self.verify = verify
         self.write_behind = write_behind
@@ -72,13 +75,39 @@ class FrontierVault:
         self._lock = threading.RLock()
         self._queue: queue.Queue = queue.Queue()
         self._worker: threading.Thread | None = None
-        self.writes = 0
-        self.write_errors = 0
-        self.puts_refused = 0
+        # typed write-path counters (DESIGN.md §14); the int ``writes``
+        # / ``write_errors`` / ``puts_refused`` attributes stay as
+        # read-only views over the registry.
+        from repro.obs import Observability
+
+        self.obs = obs if obs is not None else Observability()
+        m = self.obs.metrics
+        self._labels = {"vault": f"v{next(_vault_ids)}"}
+        self._c_writes = m.counter(
+            "vault.writes", self._labels, help="committed entry writes")
+        self._c_write_errors = m.counter(
+            "vault.write_errors", self._labels,
+            help="writes swallowed by the writer (readers just miss)")
+        self._c_puts_refused = m.counter(
+            "vault.puts_refused", self._labels,
+            help="puts refused by the tombstone ledger")
         # crash hygiene + ledger load happen at open
         self.swept_tmp = (store.sweep_tmp(self.frontiers_dir)
                           + store.sweep_tmp(self.models_dir))
         self._tombstones = self._load_tombstones()
+
+    # legacy int counter surface: views over the registry ------------------
+    @property
+    def writes(self) -> int:
+        return int(self._c_writes.value)
+
+    @property
+    def write_errors(self) -> int:
+        return int(self._c_write_errors.value)
+
+    @property
+    def puts_refused(self) -> int:
+        return int(self._c_puts_refused.value)
 
     # -- tombstone ledger ---------------------------------------------
     def _ledger_path(self) -> pathlib.Path:
@@ -131,7 +160,7 @@ class FrontierVault:
         key = self.frontier_key(task_sig)
         with self._lock:
             if self._refused_locked(key, workload, version):
-                self.puts_refused += 1
+                self._c_puts_refused.inc()
                 return False
         meta = dict(meta)
         meta.update(task_sig=task_sig, workload=workload,
@@ -273,17 +302,23 @@ class FrontierVault:
     def _commit(self, job) -> None:
         kind, key, arrays, meta, workload, version = job
         base = self.frontiers_dir if kind == "frontier" else self.models_dir
+        tr = self.obs.tracer
+        t0 = tr.now()
         try:
             with self._lock:
                 if kind == "frontier" and self._refused_locked(
                         key, workload, version):
-                    self.puts_refused += 1
+                    self._c_puts_refused.inc()
                     return
                 store.write_entry(base, key, arrays, meta, overwrite=True)
-                self.writes += 1
+                self._c_writes.inc()
         except BaseException:  # noqa: BLE001 — a failed write must not
             with self._lock:   # kill the writer thread; readers just miss
-                self.write_errors += 1
+                self._c_write_errors.inc()
+        finally:
+            if tr.enabled:
+                tr.record_span("vault.commit", t0, tr.now(), cat="vault",
+                               args={"kind": kind, "key": key})
 
     def flush(self, timeout: float = 30.0) -> bool:
         """Block until every queued write has committed."""

@@ -51,6 +51,9 @@ from repro.core.progressive_frontier import (
 )
 from repro.core.task import Preference, TaskSpec, preference_from_legacy
 from repro.exec import ProbeExecutor
+from repro.obs import Observability
+
+_svc_ids = itertools.count()  # per-instance metric label suffix
 
 
 @dataclasses.dataclass
@@ -144,6 +147,7 @@ class MOOService:
         structure_coalescing: bool = True,
         vault=None,
         vault_autosave_probes: int = 64,
+        obs: Observability | None = None,
     ):
         self.default_mogd = mogd
         self.default_mode = mode
@@ -153,6 +157,11 @@ class MOOService:
         self.max_cached_tasks = max_cached_tasks
         self.use_kernel = use_kernel
         self.kernel_interpret = kernel_interpret
+        # one observability bundle for the whole request path (DESIGN.md
+        # §14): an executor the service constructs shares it, and a
+        # FrontDesk in front of this service adopts it, so metrics land
+        # in one registry and spans in one tracer
+        self.obs = obs if obs is not None else Observability()
         # The service's dispatch plane (DESIGN.md §10): ALL MOGD work of
         # every session goes through this one executor, so compiled
         # programs — and their compile-count telemetry — are shared
@@ -160,7 +169,7 @@ class MOOService:
         # axis whenever more than one device exists — no opt-in; pass
         # mesh=None to disable (see repro.distributed.sharding).
         self.executor = (executor if executor is not None
-                         else ProbeExecutor(mesh=mesh))
+                         else ProbeExecutor(mesh=mesh, obs=self.obs))
         # structure_coalescing=False restores the legacy per-tenant
         # dispatch (group by exact solver identity, opaque closures) —
         # kept as the benchmark baseline.
@@ -179,17 +188,31 @@ class MOOService:
         # model-server subscriptions: workload sig -> watching session ids
         self._watch: dict[str, set[str]] = {}
         self._registries: list = []
-        self.solver_cache_hits = 0
-        self.problem_cache_hits = 0
-        self.coalesced_batches = 0
-        self.coalesced_probes = 0
-        self.frontier_invalidations = 0
-        self.warm_resolves = 0
+        # typed service counters (DESIGN.md §14) — stats() is a view
+        # over the shared registry; the int compat properties below keep
+        # the pre-registry attribute surface working
+        m = self.obs.metrics
+        self._labels = {"service": f"svc{next(_svc_ids)}"}
+        self._c_solver_cache_hits = m.counter(
+            "service.solver_cache_hits", self._labels)
+        self._c_problem_cache_hits = m.counter(
+            "service.problem_cache_hits", self._labels)
+        self._c_coalesced_batches = m.counter(
+            "service.coalesced_batches", self._labels)
+        self._c_coalesced_probes = m.counter(
+            "service.coalesced_probes", self._labels)
+        self._c_frontier_invalidations = m.counter(
+            "service.frontier_invalidations", self._labels)
+        self._c_warm_resolves = m.counter(
+            "service.warm_resolves", self._labels)
         # in-flight telemetry for the async admission plane (DESIGN.md
         # §12): probe rows currently being solved with the service lock
         # RELEASED — a concurrent stats() call observes them directly.
-        self.in_flight_probes = 0
-        self.in_flight_dispatches = 0
+        self._g_in_flight_probes = m.gauge(
+            "service.in_flight_probes", self._labels,
+            help="probe rows solving with the service lock released")
+        self._g_in_flight_dispatches = m.gauge(
+            "service.in_flight_dispatches", self._labels)
         # durable frontier plane (repro.persist.FrontierVault, DESIGN.md
         # §13): session states snapshot to the vault on convergence, on
         # close, and every ``vault_autosave_probes`` probes; a cold
@@ -197,17 +220,76 @@ class MOOService:
         # recommend) or seeds PF from an older version's frontier.
         self.vault = vault
         self.vault_autosave_probes = max(1, int(vault_autosave_probes))
-        self.vault_restores = 0
-        self.vault_seeds = 0
-        self.vault_snapshots = 0
-        self.vault_tombstones = 0
+        self._c_vault_restores = m.counter(
+            "service.vault_restores", self._labels)
+        self._c_vault_seeds = m.counter(
+            "service.vault_seeds", self._labels)
+        self._c_vault_snapshots = m.counter(
+            "service.vault_snapshots", self._labels)
+        self._c_vault_tombstones = m.counter(
+            "service.vault_tombstones", self._labels)
+        # per-phase round timing (perf_counter seconds; always measured,
+        # tracing on or off — the frontdesk's latency attribution
+        # divides each ticket's round wall by these proportions)
+        self._h_round = {
+            p: m.histogram(f"service.round_{p}", self._labels)
+            for p in ("prepare_s", "solve_s", "absorb_s", "persist_s")}
+
+    # -- legacy int counter surface (views over the registry) ----------
+    @property
+    def solver_cache_hits(self) -> int:
+        return int(self._c_solver_cache_hits.value)
+
+    @property
+    def problem_cache_hits(self) -> int:
+        return int(self._c_problem_cache_hits.value)
+
+    @property
+    def coalesced_batches(self) -> int:
+        return int(self._c_coalesced_batches.value)
+
+    @property
+    def coalesced_probes(self) -> int:
+        return int(self._c_coalesced_probes.value)
+
+    @property
+    def frontier_invalidations(self) -> int:
+        return int(self._c_frontier_invalidations.value)
+
+    @property
+    def warm_resolves(self) -> int:
+        return int(self._c_warm_resolves.value)
+
+    @property
+    def in_flight_probes(self) -> int:
+        return int(self._g_in_flight_probes.value)
+
+    @property
+    def in_flight_dispatches(self) -> int:
+        return int(self._g_in_flight_dispatches.value)
+
+    @property
+    def vault_restores(self) -> int:
+        return int(self._c_vault_restores.value)
+
+    @property
+    def vault_seeds(self) -> int:
+        return int(self._c_vault_seeds.value)
+
+    @property
+    def vault_snapshots(self) -> int:
+        return int(self._c_vault_snapshots.value)
+
+    @property
+    def vault_tombstones(self) -> int:
+        return int(self._c_vault_tombstones.value)
 
     # ------------------------------------------------------------------
     def _solver_for(self, problem: MOOProblem, signature: tuple,
                     mogd: MOGDConfig) -> MOGDSolver:
         key = (signature, mogd)
         if key in self._solvers:
-            self.solver_cache_hits += 1
+            self._c_solver_cache_hits.inc()
             return self._solvers[key][0]
         # solvers are thin frontends over the service executor: a new
         # solver whose problem shares a program structure with earlier
@@ -268,7 +350,7 @@ class MOOService:
             return False
         sess.state = state
         sess.probes_at_snapshot = state.probes
-        self.vault_restores += 1
+        self._c_vault_restores.inc()
         return True
 
     def _vault_identity(self, sess: _Session) -> tuple:
@@ -297,7 +379,7 @@ class MOOService:
             workload=workload, version=version)
         if ok:
             sess.probes_at_snapshot = sess.state.probes
-            self.vault_snapshots += 1
+            self._c_vault_snapshots.inc()
         return ok
 
     def _compile_cached(self, spec: TaskSpec, sig: tuple) -> MOOProblem:
@@ -306,7 +388,7 @@ class MOOService:
         if problem is None:
             problem = spec.compile()
         else:
-            self.problem_cache_hits += 1
+            self._c_problem_cache_hits.inc()
         self._problems[sig] = problem
         return problem
 
@@ -572,7 +654,7 @@ class MOOService:
                     if len(X_old):
                         sess.state = sess.engine.seed(X_old)
                         sess.probes_at_snapshot = sess.state.probes
-                        self.vault_seeds += 1
+                        self._c_vault_seeds.inc()
             return sid
 
     def watch_workload(self, session_id: str, registry,
@@ -599,7 +681,7 @@ class MOOService:
         current = (self._registry_spec_for(sess).signature(),)
         if current != sess.signature and not sess.stale:
             sess.stale = True
-            self.frontier_invalidations += 1
+            self._c_frontier_invalidations.inc()
             self._problems.pop(sess.signature, None)
             self._solvers.pop(sess.solver_key, None)
 
@@ -639,7 +721,7 @@ class MOOService:
                 if sess is None or sess.stale:
                     continue
                 sess.stale = True
-                self.frontier_invalidations += 1
+                self._c_frontier_invalidations.inc()
                 # drop the signature-keyed caches for the outdated model:
                 # the next compile under this signature must not resurrect
                 # a frontier/solver built against stale predictions
@@ -652,7 +734,7 @@ class MOOService:
             if event.kind == "drift" and self.vault is not None:
                 killed = self.vault.tombstone_workload(
                     event.workload, version=event.version, reason="drift")
-                self.vault_tombstones += killed
+                self._c_vault_tombstones.inc(killed)
 
     def _refresh_stale_locked(self) -> None:
         """Warm re-solve every stale session whose registry now serves a
@@ -690,7 +772,7 @@ class MOOService:
             sess.engine = engine
             sess.state = state
             sess.stale = False
-            self.warm_resolves += 1
+            self._c_warm_resolves.inc()
             self._evict_cold_tasks()
 
     def __len__(self) -> int:
@@ -757,25 +839,33 @@ class MOOService:
         return stats
 
     def step_sessions(self, session_ids,
-                      origin: str | None = "frontdesk") -> dict:
+                      origin: str | None = "frontdesk",
+                      parent_span=None) -> dict:
         """One coalesced probe round over exactly the named sessions —
         the frontdesk scheduler's dispatch seam (DESIGN.md §12): EDF
         decides *which* sessions' work drains next, this method turns the
         chosen set into (at most one per structure group) executor
         dispatches.  Unknown or closed ids are skipped silently — a
         tenant leaving between schedule and dispatch is normal traffic.
+        ``parent_span`` (explicit context propagation, DESIGN.md §14)
+        parents this round's spans under the caller's dispatch span.
 
         Returns ``{"batches", "probes", "sessions", "per_session":
-        {sid: probes}, "exhausted": [sid, ...]}`` where ``exhausted``
-        names sessions whose rectangle queue is now empty (their frontier
-        is final — pending tickets can complete immediately)."""
+        {sid: probes}, "exhausted": [sid, ...], "timing": {...}}`` where
+        ``exhausted`` names sessions whose rectangle queue is now empty
+        (their frontier is final — pending tickets can complete
+        immediately) and ``timing`` carries the round's measured
+        prepare/solve/absorb/persist seconds (the frontdesk's per-ticket
+        latency attribution divides by these)."""
         with self._lock:
             sessions = [self._sessions[s] for s in session_ids
                         if s in self._sessions]
-        return self._step_round(sessions, origin=origin)
+        return self._step_round(sessions, origin=origin,
+                                parent_span=parent_span)
 
     def _step_round(self, sessions: list[_Session],
-                    origin: str | None = None) -> dict:
+                    origin: str | None = None,
+                    parent_span=None) -> dict:
         """One probe round over ``sessions``: prepare (pop probe cells)
         under the service lock, solve each structure group's batch with
         the lock RELEASED, re-acquire to absorb results.  ``recommend``
@@ -786,8 +876,33 @@ class MOOService:
 
         Must be called WITHOUT the service lock held (the lock is
         re-entrant, so a holder would silently serialize the dispatch)."""
+        tr = self.obs.tracer
+        timing = {"prepare_s": 0.0, "solve_s": 0.0, "absorb_s": 0.0,
+                  "persist_s": 0.0, "round_wall_s": 0.0}
+        t_round0 = time.perf_counter()
+        round_sp = tr.span("service.step_round", cat="service",
+                           parent=parent_span,
+                           args={"sessions": len(sessions),
+                                 "origin": origin})
+        try:
+            out = self._step_round_inner(sessions, origin, timing,
+                                         round_sp)
+        finally:
+            timing["round_wall_s"] = time.perf_counter() - t_round0
+            for p in ("prepare_s", "solve_s", "absorb_s", "persist_s"):
+                self._h_round[p].record(timing[p])
+            round_sp.end()
+        out["timing"] = timing
+        return out
+
+    def _step_round_inner(self, sessions: list[_Session], origin,
+                          timing: dict, round_sp) -> dict:
+        """The body of :meth:`_step_round` (timing/span scaffolding
+        lives in the wrapper)."""
+        tr = self.obs.tracer
         out = {"batches": 0, "probes": 0, "sessions": 0,
                "per_session": {}, "exhausted": []}
+        t_prep0 = time.perf_counter()
         with self._lock:
             self._refresh_stale_locked()
             groups: dict[tuple, list[_Session]] = {}
@@ -816,8 +931,15 @@ class MOOService:
                 if prepared:
                     prepared_groups.append(prepared)
             n_rows = sum(b.shape[0] for g in prepared_groups for *_, b in g)
-            self.in_flight_probes += n_rows
-            self.in_flight_dispatches += len(prepared_groups)
+            self._g_in_flight_probes.inc(n_rows)
+            self._g_in_flight_dispatches.inc(len(prepared_groups))
+        t_prep1 = time.perf_counter()
+        timing["prepare_s"] += t_prep1 - t_prep0
+        if tr.enabled:
+            tr.record_span("service.prepare", t_prep0, t_prep1,
+                           cat="service", parent=round_sp,
+                           args={"rows": n_rows,
+                                 "groups": len(prepared_groups)})
         # -- device dispatches: service lock RELEASED -----------------
         pending = list(prepared_groups)
         try:
@@ -825,14 +947,23 @@ class MOOService:
                 prepared = pending.pop(0)
                 total = sum(b.shape[0] for *_, b in prepared)
                 t0 = time.perf_counter()
+                solve_sp = tr.span("service.solve", cat="service",
+                                   parent=round_sp,
+                                   args={"rows": total,
+                                         "tenants": len(prepared)})
                 try:
-                    res = solve_grouped(
-                        [(s.engine.solver, boxes, s.engine.target)
-                         for s, _, boxes in prepared], origin=origin)
+                    with solve_sp:
+                        res = solve_grouped(
+                            [(s.engine.solver, boxes, s.engine.target)
+                             for s, _, boxes in prepared], origin=origin,
+                            parent_span=(solve_sp if solve_sp.enabled
+                                         else None))
                 except Exception:
                     pending.insert(0, prepared)  # restore this group too
                     raise
                 wall = time.perf_counter() - t0
+                timing["solve_s"] += wall
+                t_abs0 = time.perf_counter()
                 with self._lock:
                     off = 0
                     for s, cells, boxes in prepared:
@@ -849,13 +980,19 @@ class MOOService:
                         if not len(s.state.queue):
                             out["exhausted"].append(s.session_id)
                         off += n
-                    self.in_flight_probes -= total
-                    self.in_flight_dispatches -= 1
-                    self.coalesced_batches += 1
-                    self.coalesced_probes += total
+                    self._g_in_flight_probes.dec(total)
+                    self._g_in_flight_dispatches.dec()
+                    self._c_coalesced_batches.inc()
+                    self._c_coalesced_probes.inc(total)
                     out["batches"] += 1
                     out["probes"] += total
                     out["sessions"] += len(prepared)
+                t_abs1 = time.perf_counter()
+                timing["absorb_s"] += t_abs1 - t_abs0
+                if tr.enabled:
+                    tr.record_span("service.absorb", t_abs0, t_abs1,
+                                   cat="service", parent=round_sp,
+                                   args={"rows": total})
         except Exception:
             # a failed shared dispatch must not leak any tenant's popped
             # uncertain space — return every unsolved cell to its queue
@@ -863,9 +1000,9 @@ class MOOService:
                 for prepared in pending:
                     for s, cells, boxes in prepared:
                         s.engine.restore(s.state, cells)
-                    self.in_flight_probes -= sum(
-                        b.shape[0] for *_, b in prepared)
-                    self.in_flight_dispatches -= 1
+                    self._g_in_flight_probes.dec(sum(
+                        b.shape[0] for *_, b in prepared))
+                    self._g_in_flight_dispatches.dec()
             raise
         # -- sequential (PF-S / PF-AS) sessions stay under the lock ----
         if singles:
@@ -891,6 +1028,8 @@ class MOOService:
         # disk write happens on the vault's writer thread, so this only
         # pays for the numpy export under the lock
         if self.vault is not None:
+            t_per0 = time.perf_counter()
+            persisted = 0
             with self._lock:
                 for sess in sessions:
                     if self._sessions.get(sess.session_id) is not sess:
@@ -902,8 +1041,15 @@ class MOOService:
                     due = (st.probes - sess.probes_at_snapshot
                            >= self.vault_autosave_probes)
                     if st.probes > sess.probes_at_snapshot and (done or due):
-                        self._persist_session_locked(
-                            sess, "converged" if done else "autosave")
+                        if self._persist_session_locked(
+                                sess, "converged" if done else "autosave"):
+                            persisted += 1
+            t_per1 = time.perf_counter()
+            timing["persist_s"] += t_per1 - t_per0
+            if tr.enabled and persisted:
+                tr.record_span("service.persist", t_per0, t_per1,
+                               cat="service", parent=round_sp,
+                               args={"snapshots": persisted})
         return out
 
     def run_until(self, min_probes: int, max_rounds: int = 10_000) -> dict:
