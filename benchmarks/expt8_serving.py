@@ -249,6 +249,9 @@ def _run_level(svc: MOOService, sids: list, n_requests: int,
     if hammer_session is not None:
         row["recommend_rps"] = rec_counter["n"] / max(total_wall, 1e-9)
     row["latency_histogram"] = lat.histogram()
+    # per-SLO-class budget telemetry (DESIGN.md §15): where this level's
+    # probe credits landed and which classes got shed
+    row["budget"] = st["budget"]
     # per-ticket latency attribution (DESIGN.md §14): mean phase share
     # of the completed tickets' end-to-end latency — where an SLO miss
     # at this offered load actually went
@@ -299,9 +302,13 @@ def run(quick: bool = True) -> dict:
                        capacity=capacity)
     burst["offered_qps"] = -1.0  # sentinel: instantaneous
     emit([{k: v for k, v in r.items()
-           if k not in ("latency_histogram", "breakdown")}
+           if k not in ("latency_histogram", "breakdown", "budget")}
           for r in levels + [burst]], "expt8_serving")
-    emit([{"offered_qps": r["offered_qps"], **r["breakdown"]}
+    emit([{"offered_qps": r["offered_qps"], **r["breakdown"],
+           **{f"credits_{slo}": n for slo, n
+              in sorted(r["budget"]["credits"].items())},
+           **{f"shed_{slo}": n for slo, n
+              in sorted(r["budget"]["shed"].items())}}
           for r in levels + [burst] if "breakdown" in r],
          "expt8_attribution")
 

@@ -31,6 +31,7 @@ SUITES = [
     "expt8_serving",     # frontdesk admission plane: open-loop QPS/SLO
     "expt9_restart",     # durable frontier plane: warm restart from vault
     "obsbench",          # observability plane: instrumentation overhead
+    "expt10_budget",     # learned probe-budget routing: bandit vs uniform
 ]
 
 

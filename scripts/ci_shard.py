@@ -36,6 +36,7 @@ WEIGHTS = {
     "test_serving_sharded.py": 120,
     "test_executor.py": 100,
     "test_frontdesk.py": 45,
+    "test_alloc.py": 40,
     "test_mogd_descend.py": 60,
     "test_launch.py": 90,
     "test_modelserver.py": 70,

@@ -4,7 +4,9 @@
 Runs the named benchmark modules (``benchmarks/<name>.py``), requires each
 to persist a machine-readable ``results/BENCH_<name>.json``, and fails
 loudly on missing, malformed, or empty output — the perf trajectory is
-only useful if every run leaves a valid artifact behind.
+only useful if every run leaves a valid artifact behind.  A cross-suite
+roll-up (each suite's summary plus its ``_wall_s`` wall time) lands in
+``results/bench_summary.json``.
 
     PYTHONPATH=src python scripts/run_benchmarks.py --smoke
     PYTHONPATH=src python scripts/run_benchmarks.py --only expt5_multistage
@@ -28,7 +30,7 @@ RESULTS = REPO / "results"
 # benchmarks with a smoke mode cheap enough for per-PR CI
 DEFAULT = ["service_throughput", "expt5_multistage", "expt6_adaptive",
            "kernelbench", "expt7_scaling", "expt8_serving",
-           "expt9_restart", "obsbench"]
+           "expt9_restart", "obsbench", "expt10_budget"]
 
 
 def validate_artifact(name: str) -> dict:
@@ -67,7 +69,15 @@ def main() -> None:
         sys.path.insert(0, str(REPO))  # import benchmarks.* from anywhere
         from benchmarks.run import run_suite  # the one orchestration path
 
-        _, failures = run_suite(names, quick=args.smoke)
+        summaries, failures = run_suite(names, quick=args.smoke)
+        # one cross-suite roll-up with per-suite wall time (_wall_s) so
+        # CI runs leave a perf trajectory, not just pass/fail artifacts
+        try:
+            RESULTS.mkdir(parents=True, exist_ok=True)
+            (RESULTS / "bench_summary.json").write_text(
+                json.dumps(summaries, indent=1, default=str))
+        except OSError as e:
+            failures.append(("bench_summary", repr(e)))
     for name in names:
         if any(f[0] == name for f in failures):
             continue

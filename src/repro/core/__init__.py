@@ -66,9 +66,11 @@ from .task import (
 from .progressive_frontier import (
     PFResult,
     PFState,
+    PopInfo,
     ProgressiveFrontier,
     coalesce_step,
     export_pf_state,
+    frontier_hypervolume,
     import_pf_state,
     live_seed_points,
     solve_pf,

@@ -121,6 +121,12 @@ class RectangleQueue:
         self.total_volume -= rect.volume
         return rect
 
+    def peek(self) -> Rectangle | None:
+        """The rectangle the next ``pop`` would return (None if empty) —
+        the budget plane's head-of-queue volume feature reads this
+        without disturbing the heap."""
+        return self._heap[0] if self._heap else None
+
     def __len__(self) -> int:
         return len(self._heap)
 

@@ -46,6 +46,25 @@ from .task import as_problem
 
 
 @dataclasses.dataclass
+class PopInfo:
+    """Metadata of one ``prepare_parallel`` pop: what uncertain volume was
+    taken off the queue and how many probe cells each rectangle turned
+    into — the raw material of gain attribution (DESIGN.md §15), surfaced
+    instead of discarded so the budget plane never re-derives it."""
+
+    rect_volumes: list  # per popped rectangle, in pop (max-volume) order
+    cells_per_rect: list  # aligned with ``rect_volumes``
+
+    @property
+    def n_rects(self) -> int:
+        return len(self.rect_volumes)
+
+    @property
+    def popped_volume(self) -> float:
+        return float(sum(self.rect_volumes))
+
+
+@dataclasses.dataclass
 class PFState:
     """Resumable solver state (the paper's incrementality requirement)."""
 
@@ -57,11 +76,50 @@ class PFState:
     probes: int = 0
     elapsed: float = 0.0
     trace: list = dataclasses.field(default_factory=list)  # (t, unc, npts)
+    # gain-attribution telemetry (DESIGN.md §15): the normalized dominated
+    # hypervolume of the live frontier within the [utopia, nadir] box, and
+    # one log row per absorbed probe batch — (probes_after, hv_delta,
+    # popped_volume, n_cells) — i.e. what each batch of probes *bought*.
+    # The budget-allocation plane (repro.alloc) feeds on these.
+    hv: float = 0.0
+    gain_log: list = dataclasses.field(default_factory=list)
 
     def record(self) -> None:
         self.trace.append(
             (self.elapsed, self.queue.uncertain_fraction, self.store.n_points)
         )
+
+    def record_gain(self, popped_volume: float, n_cells: int) -> float:
+        """Refresh ``hv`` after an absorb and log the delta the batch
+        bought; returns the (possibly zero) hypervolume delta."""
+        hv = frontier_hypervolume(self)
+        delta = hv - self.hv
+        self.hv = hv
+        self.gain_log.append(
+            (float(self.probes), float(delta), float(popped_volume),
+             float(n_cells)))
+        return delta
+
+
+def frontier_hypervolume(state: PFState) -> float:
+    """Dominated hypervolume of the live frontier w.r.t. the global Nadir,
+    normalized by the [utopia, nadir] box volume so gains are comparable
+    across tenants (the bandit's reward currency, DESIGN.md §15).
+
+    Exact for k<=3 (``pareto.hypervolume``); for k>3 the decided-space
+    fraction ``1 - uncertain_fraction`` stands in — a volume proxy with
+    the same "more probes decided more space" monotonicity, not a true
+    hypervolume."""
+    span = np.maximum(state.nadir - state.utopia, 1e-12)
+    box = float(np.prod(span))
+    if state.store.n_points == 0 or box <= 0.0:
+        return 0.0
+    if len(state.utopia) <= 3:
+        from .pareto import hypervolume
+
+        F, _ = state.store.frontier()
+        return float(hypervolume(F, state.nadir)) / box
+    return 1.0 - state.queue.uncertain_fraction
 
 
 def export_pf_state(state: PFState) -> tuple[dict, dict]:
@@ -88,11 +146,14 @@ def export_pf_state(state: PFState) -> tuple[dict, dict]:
     arrays["nadir"] = np.asarray(state.nadir, dtype=np.float64)
     arrays["bounds"] = np.asarray(state.bounds, dtype=np.float64)
     arrays["trace"] = np.asarray(state.trace, dtype=np.float64).reshape(-1, 3)
+    arrays["gain_log"] = np.asarray(
+        state.gain_log, dtype=np.float64).reshape(-1, 4)
     meta = {
         "store": s_meta,
         "probes": state.probes,
         "elapsed": state.elapsed,
         "initial_volume": state.queue.initial_volume,
+        "hv": float(state.hv),
     }
     return arrays, meta
 
@@ -113,7 +174,7 @@ def import_pf_state(arrays: dict, meta: dict, use_kernel: bool = False,
              for u, n in zip(arrays["queue_utopia"], arrays["queue_nadir"])]
     queue = RectangleQueue.from_rects(
         rects, initial_volume=float(meta["initial_volume"]))
-    return PFState(
+    state = PFState(
         queue=queue,
         store=store,
         utopia=np.asarray(arrays["utopia"], dtype=np.float64),
@@ -122,7 +183,16 @@ def import_pf_state(arrays: dict, meta: dict, use_kernel: bool = False,
         probes=int(meta["probes"]),
         elapsed=float(meta["elapsed"]),
         trace=[tuple(row) for row in np.asarray(arrays["trace"])],
+        # pre-gain-telemetry vault entries (PR <=9) lack these fields:
+        # an absent log resumes empty and hv is recomputed from the
+        # restored frontier so the first post-restore delta stays honest
+        gain_log=[tuple(row) for row in
+                  np.asarray(arrays.get("gain_log",
+                                        np.zeros((0, 4)))).reshape(-1, 4)],
     )
+    state.hv = (float(meta["hv"]) if "hv" in meta
+                else frontier_hypervolume(state))
+    return state
 
 
 def live_seed_points(arrays: dict) -> np.ndarray:
@@ -247,6 +317,7 @@ class ProgressiveFrontier:
             bounds=bounds,
             probes=self._k,
         )
+        state.hv = frontier_hypervolume(state)
         state.elapsed = time.perf_counter() - t0
         state.record()
         return state
@@ -255,6 +326,7 @@ class ProgressiveFrontier:
     def _step_sequential(self, state: PFState) -> None:
         """One middle-point probe (PF-S / PF-AS; Alg. 1 lines 9-23)."""
         rect = state.queue.pop()
+        popped_volume = float(rect.volume)
         u, n = rect.utopia, rect.nadir
         mid = (u + n) / 2.0
         box = np.stack([u, mid])  # probe the lower half-box (Def. 3.6)
@@ -273,6 +345,7 @@ class ProgressiveFrontier:
                 state.queue.push(sub)
             upper = make_rectangle(mid, n)
             state.queue.push(upper)
+        state.record_gain(popped_volume, 1)
 
     # ------------------------------------------------------------------
     # PF-AP is split into prepare/absorb so the service layer can coalesce
@@ -280,29 +353,36 @@ class ProgressiveFrontier:
     # DESIGN.md §5).  ``_step_parallel`` is simply prepare -> solve -> absorb.
     def prepare_parallel(
         self, state: PFState, max_rects: int | None = None
-    ) -> tuple[list[Rectangle], np.ndarray | None]:
+    ) -> tuple[list[Rectangle], np.ndarray | None, PopInfo]:
         """Pop the top-B rectangles and grid them into probe cells.
 
-        Returns ``(cells, boxes)`` with ``boxes: (B·l^k, 2, k)`` aligned to
-        ``cells``, or ``([], None)`` when the queue is exhausted."""
+        Returns ``(cells, boxes, info)`` with ``boxes: (B·l^k, 2, k)``
+        aligned to ``cells`` and ``info`` the per-rectangle pop metadata
+        (volumes and cell counts, no longer discarded), or
+        ``([], None, info)`` when the queue is exhausted."""
         budget = self.batch_rects if max_rects is None else max_rects
         rects: list[Rectangle] = []
         while len(rects) < budget and len(state.queue):
             rects.append(state.queue.pop())
-        cells = [
-            c
-            for r in rects
-            for c in grid_cells(r.utopia, r.nadir, self.grid_l)
-        ]
+        cells: list[Rectangle] = []
+        info = PopInfo(rect_volumes=[], cells_per_rect=[])
+        for r in rects:
+            rc = grid_cells(r.utopia, r.nadir, self.grid_l)
+            cells.extend(rc)
+            info.rect_volumes.append(float(r.volume))
+            info.cells_per_rect.append(len(rc))
         if not cells:
-            return [], None
+            return [], None, info
         boxes = np.stack([np.stack([c.utopia, c.nadir]) for c in cells])
-        return cells, boxes
+        return cells, boxes, info
 
-    def absorb(self, state: PFState, cells: list[Rectangle], res: COResult) -> None:
+    def absorb(self, state: PFState, cells: list[Rectangle], res: COResult,
+               pop: PopInfo | None = None) -> None:
         """Fold one batched probe result back into the state: push the
         uncertain sub-rectangles and offer all feasible points to the
-        frontier store in a single incremental dominance pass."""
+        frontier store in a single incremental dominance pass.  ``pop``
+        (the matching ``prepare_parallel`` metadata, when available)
+        attributes the popped volume to the gain-log row."""
         state.probes += len(cells)
         fs, xs = [], []
         for c, ok, f, x in zip(cells, res.feasible, res.f, res.x):
@@ -315,6 +395,8 @@ class ProgressiveFrontier:
                 state.queue.push(sub)
         if fs:
             state.store.add(np.stack(fs), np.stack(xs))
+        state.record_gain(pop.popped_volume if pop is not None else 0.0,
+                          len(cells))
 
     def restore(self, state: PFState, cells: list[Rectangle]) -> None:
         """Return prepared-but-unsolved cells to the queue (a failed probe
@@ -326,7 +408,7 @@ class ProgressiveFrontier:
     def _step_parallel(self, state: PFState) -> None:
         """One PF-AP iteration (§4.3): grid the popped rectangles, solve all
         cell CO problems in a single batched MOGD call."""
-        cells, boxes = self.prepare_parallel(state)
+        cells, boxes, pop = self.prepare_parallel(state)
         if boxes is None:
             return
         try:
@@ -334,7 +416,7 @@ class ProgressiveFrontier:
         except Exception:
             self.restore(state, cells)
             raise
-        self.absorb(state, cells, res)
+        self.absorb(state, cells, res, pop=pop)
 
     # ------------------------------------------------------------------
     def run(
@@ -419,6 +501,9 @@ class ProgressiveFrontier:
                     break
         for r in rects:
             state.queue.push(r)
+        # seeds move the frontier without spending probes: refresh hv so
+        # the next absorb's gain-log delta credits only what probes bought
+        state.hv = frontier_hypervolume(state)
         state.elapsed += time.perf_counter() - t0
         state.record()
         return state
@@ -465,10 +550,12 @@ def coalesce_step(entries, solve) -> int:
     (``repro.core.dag``) — DESIGN.md §5/§8.
     """
     prepared = []
+    pops = {}
     for engine, state in entries:
-        cells, boxes = engine.prepare_parallel(state)
+        cells, boxes, pop = engine.prepare_parallel(state)
         if boxes is not None:
             prepared.append((engine, state, cells, boxes))
+            pops[id(state)] = pop
     if not prepared:
         return 0
     all_boxes = np.concatenate([b for *_, b in prepared], axis=0)
@@ -492,7 +579,7 @@ def coalesce_step(entries, solve) -> int:
             f=res.f[off: off + n],
             feasible=res.feasible[off: off + n],
         )
-        engine.absorb(state, cells, sub)
+        engine.absorb(state, cells, sub, pop=pops[id(state)])
         # charge each session its share of the shared dispatch
         state.elapsed += wall * (n / total)
         state.record()

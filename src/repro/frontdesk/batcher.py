@@ -99,6 +99,13 @@ class AdaptiveBatcher:
         g = self._groups.get(key)
         return None if g is None else g.opened_at
 
+    def wall_ema(self, key: tuple) -> float:
+        """The group's recent dispatch wall-time EMA (0.0 for a group
+        never dispatched) — the budget policy's deadline guard compares
+        ticket slack against this (DESIGN.md §15)."""
+        g = self._groups.get(key)
+        return 0.0 if g is None else float(g.ema_wall_s)
+
     def window_expired(self, key: tuple, now: float) -> bool:
         g = self._group(key)
         return g.opened_at is not None and now - g.opened_at >= g.window_s

@@ -101,6 +101,12 @@ class FrontDesk:
         self._c_fast_completions = m.counter(
             "frontdesk.fast_completions", self._labels,
             help="tickets settled at submit (frontier already final)")
+        # per-SLO-class budget telemetry (DESIGN.md §15): probe credits
+        # actually landed per class vs tickets shed per class — the
+        # bandit's spending is auditable by tenant class.  Lazily keyed
+        # by class name so custom SLOClass instances get counted too.
+        self._c_credits_by_slo: dict[str, object] = {}
+        self._c_shed_by_slo: dict[str, object] = {}
         # per-phase attribution histograms, recorded at ticket completion
         self._h = {p: m.histogram(f"frontdesk.{p}", self._labels,
                                   help=f"completed-ticket {p} share")
@@ -130,11 +136,24 @@ class FrontDesk:
     def fast_completions(self) -> int:
         return int(self._c_fast_completions.value)
 
+    def _slo_counter(self, table: dict, kind: str, slo_name: str):
+        """Per-SLO-class counter, created on first use (shared registry,
+        labeled ``{"slo": <class>}`` on top of the plane label)."""
+        c = table.get(slo_name)
+        if c is None:
+            c = self.obs.metrics.counter(
+                f"frontdesk.{kind}", {**self._labels, "slo": slo_name})
+            table[slo_name] = c
+        return c
+
     # -- ticket settlement ---------------------------------------------
     def _finish(self, t: Ticket, state: str, now: float) -> None:
         """Terminal transition + attribution export (plane lock held)."""
         t.finish(state, now)
         self.queue.release(state)
+        if state == SHED:
+            self._slo_counter(self._c_shed_by_slo, "shed_by_slo",
+                              t.slo.name).inc()
         if state == DONE:
             for p in PHASES:
                 self._h[p].record(getattr(t, p))
@@ -294,6 +313,15 @@ class FrontDesk:
             try:
                 with sp:
                     kw = ({"parent_span": sp} if sp.enabled else {})
+                    # budget-policy context (DESIGN.md §15): each
+                    # session's tightest deadline slack, SLO class, and
+                    # the group's dispatch wall EMA become allocation
+                    # features; only built for budget-aware services so
+                    # minimal step_sessions implementations keep working
+                    if getattr(self.service, "budget_policy",
+                               None) is not None:
+                        kw["context"] = self._budget_context(
+                            tickets, key, t0)
                     out = self.service.step_sessions(
                         sids, origin="frontdesk", **kw)
                     sp.set("probes", out["probes"])
@@ -328,7 +356,12 @@ class FrontDesk:
                     t.dispatch_s += d_dis
                     t.absorb_s += d_abs
                     t.persist_s += d_per
-                    t.credited += out["per_session"].get(t.session_id, 0)
+                    got = out["per_session"].get(t.session_id, 0)
+                    t.credited += got
+                    if got:
+                        self._slo_counter(self._c_credits_by_slo,
+                                          "credits_by_slo",
+                                          t.slo.name).inc(got)
                     if t.credited >= t.n_probes or t.session_id in exhausted:
                         self._finish(t, DONE, end)
                     elif t.slo.sheddable and t.deadline <= end:
@@ -342,6 +375,26 @@ class FrontDesk:
                 self._c_dispatched_probes.inc(out["probes"])
                 probes += out["probes"]
         return {"groups": len(claims), "probes": probes, "shed": shed_n}
+
+    def _budget_context(self, tickets: list[Ticket], key: tuple,
+                        now: float) -> dict:
+        """Per-session serving facts for the budget policy: the
+        TIGHTEST deadline slack across the session's claimed tickets
+        (the guard must protect the most urgent one), its SLO class and
+        sheddability, and the group's dispatch wall EMA."""
+        wall = self.batcher.wall_ema(key)
+        ctx: dict[str, dict] = {}
+        for t in tickets:
+            slack = t.deadline - now
+            cur = ctx.get(t.session_id)
+            if cur is None or slack < cur["deadline_slack_s"]:
+                ctx[t.session_id] = {
+                    "slo": t.slo.name,
+                    "deadline_slack_s": slack,
+                    "wall_ema_s": wall,
+                    "sheddable": t.slo.sheddable,
+                }
+        return ctx
 
     # -- dispatcher thread ---------------------------------------------
     def start(self) -> "FrontDesk":
@@ -413,5 +466,13 @@ class FrontDesk:
                 batcher=self.batcher.snapshot(),
                 latency={name: h.summary()
                          for name, h in self._h.items()},
+                # per-SLO-class budget telemetry (DESIGN.md §15):
+                # probe credits landed / tickets shed, by class
+                budget={
+                    "credits": {name: int(c.value) for name, c
+                                in self._c_credits_by_slo.items()},
+                    "shed": {name: int(c.value) for name, c
+                             in self._c_shed_by_slo.items()},
+                },
             )
             return out

@@ -40,6 +40,7 @@ import warnings
 
 import numpy as np
 
+from repro.alloc import Candidate
 from repro.core import MOGDConfig, MOOProblem, ProgressiveFrontier
 from repro.core.dag import ComposedFrontier, JobDAG
 from repro.core.mogd import MOGDSolver, solve_grouped
@@ -126,6 +127,11 @@ class _Session:
     # durable-vault bookkeeping (DESIGN.md §13): the probe count at the
     # last vault snapshot — persistence triggers fire only on progress
     probes_at_snapshot: int = 0
+    # budget-plane telemetry (DESIGN.md §15): EMA of hypervolume delta
+    # per probe across absorbs, and rounds since the policy last gave
+    # this session a non-zero allocation (the staleness feature)
+    gain_ema: float = 0.0
+    rounds_idle: int = 0
     created_s: float = dataclasses.field(default_factory=time.perf_counter)
 
 
@@ -148,6 +154,7 @@ class MOOService:
         vault=None,
         vault_autosave_probes: int = 64,
         obs: Observability | None = None,
+        budget_policy=None,
     ):
         self.default_mogd = mogd
         self.default_mode = mode
@@ -234,6 +241,21 @@ class MOOService:
         self._h_round = {
             p: m.histogram(f"service.round_{p}", self._labels)
             for p in ("prepare_s", "solve_s", "absorb_s", "persist_s")}
+        # probe-budget allocation plane (repro.alloc, DESIGN.md §15):
+        # None keeps the legacy uniform schedule with zero policy calls
+        # on the hot path; the counters make the bandit's spending
+        # auditable — rects it granted vs rects the legacy schedule
+        # would have spent
+        self.budget_policy = budget_policy
+        self._c_budget_rounds = m.counter(
+            "service.budget_rounds", self._labels)
+        self._c_budget_rects_granted = m.counter(
+            "service.budget_rects_granted", self._labels)
+        self._c_budget_rects_legacy = m.counter(
+            "service.budget_rects_legacy", self._labels)
+        self._h_hv_gain = m.histogram(
+            "service.hv_gain", self._labels,
+            help="normalized hypervolume delta per absorbed batch")
 
     # -- legacy int counter surface (views over the registry) ----------
     @property
@@ -818,6 +840,67 @@ class MOOService:
                 return ("sequential", *sess.solver_key)
             return self._group_key(sess)
 
+    def _budget_allocations(self, groups: dict, context: dict) -> dict:
+        """Ask the budget policy for per-session rectangle allowances,
+        one candidate set per coalescing group (DESIGN.md §15).
+
+        The bucket-safe cap comes from the executor's own planner: with
+        G sessions in the group and the LEGACY per-session row count R,
+        ``plan_buckets(G, R)`` names the padded bucket this round would
+        compile anyway — any allowance whose rows fit inside ``want_r``
+        reuses that compiled program (plus the executor's 4x reuse
+        window for smaller batches), so learned routing never triggers
+        a fresh compile.  Called with the service lock held.  Returns
+        ``{sid: n_rects}`` (missing sid -> legacy ``batch_rects``)."""
+        policy = self.budget_policy
+        alloc: dict[str, int] = {}
+        granted = legacy = 0
+        for key, sess_list in groups.items():
+            r_legacy = max(
+                s.engine.batch_rects * (s.engine.grid_l ** s.problem.k)
+                for s in sess_list)
+            _, want_r = self.executor.plan_buckets(len(sess_list), r_legacy)
+            candidates, caps = [], {}
+            for s in sess_list:
+                lk = s.engine.grid_l ** s.problem.k
+                cap = max(s.engine.batch_rects, want_r // max(lk, 1))
+                caps[s.session_id] = cap
+                st = s.state
+                ctx = context.get(s.session_id, {})
+                top = st.queue.peek()
+                candidates.append(Candidate(
+                    session_id=s.session_id,
+                    group_key=key,
+                    batch_rects=s.engine.batch_rects,
+                    cap_rects=cap,
+                    queue_len=len(st.queue),
+                    uncertain_volume=st.queue.total_volume,
+                    uncertain_fraction=st.queue.uncertain_fraction,
+                    top_rect_volume=(top.volume if top is not None else 0.0),
+                    probes=st.probes,
+                    frontier_points=st.store.n_points,
+                    gain_ema=s.gain_ema,
+                    rounds_idle=s.rounds_idle,
+                    slo=ctx.get("slo", "standard"),
+                    deadline_slack_s=ctx.get("deadline_slack_s",
+                                             float("inf")),
+                    wall_ema_s=ctx.get("wall_ema_s", 0.0),
+                    sheddable=ctx.get("sheddable", True),
+                ))
+            decided = policy.allocate(candidates)
+            for c in candidates:
+                want = decided.get(c.session_id, c.batch_rects)
+                # defensive clamp: a policy bug must not blow the bucket
+                n = max(0, min(int(want), caps[c.session_id]))
+                alloc[c.session_id] = n
+                granted += n
+                legacy += c.batch_rects
+        if alloc:
+            self._c_budget_rounds.inc()
+            self._c_budget_rects_granted.inc(granted)
+            self._c_budget_rects_legacy.inc(legacy)
+        return alloc
+
     def step_all(self, rounds: int = 1) -> dict:
         """Coalesced scheduling: for each group of active sessions sharing
         a compiled program structure, pop every session's top rectangles
@@ -840,7 +923,8 @@ class MOOService:
 
     def step_sessions(self, session_ids,
                       origin: str | None = "frontdesk",
-                      parent_span=None) -> dict:
+                      parent_span=None,
+                      context: dict | None = None) -> dict:
         """One coalesced probe round over exactly the named sessions —
         the frontdesk scheduler's dispatch seam (DESIGN.md §12): EDF
         decides *which* sessions' work drains next, this method turns the
@@ -856,16 +940,23 @@ class MOOService:
         (their frontier is final — pending tickets can complete
         immediately) and ``timing`` carries the round's measured
         prepare/solve/absorb/persist seconds (the frontdesk's per-ticket
-        latency attribution divides by these)."""
+        latency attribution divides by these).
+
+        ``context`` (optional) carries per-session serving facts for the
+        budget policy — ``{sid: {"slo", "deadline_slack_s", "wall_ema_s",
+        "sheddable"}}`` — the frontdesk fills it from its tickets and
+        batcher EMAs (DESIGN.md §15); it is ignored when no
+        ``budget_policy`` is configured."""
         with self._lock:
             sessions = [self._sessions[s] for s in session_ids
                         if s in self._sessions]
         return self._step_round(sessions, origin=origin,
-                                parent_span=parent_span)
+                                parent_span=parent_span, context=context)
 
     def _step_round(self, sessions: list[_Session],
                     origin: str | None = None,
-                    parent_span=None) -> dict:
+                    parent_span=None,
+                    context: dict | None = None) -> dict:
         """One probe round over ``sessions``: prepare (pop probe cells)
         under the service lock, solve each structure group's batch with
         the lock RELEASED, re-acquire to absorb results.  ``recommend``
@@ -886,7 +977,7 @@ class MOOService:
                                  "origin": origin})
         try:
             out = self._step_round_inner(sessions, origin, timing,
-                                         round_sp)
+                                         round_sp, context)
         finally:
             timing["round_wall_s"] = time.perf_counter() - t_round0
             for p in ("prepare_s", "solve_s", "absorb_s", "persist_s"):
@@ -896,7 +987,7 @@ class MOOService:
         return out
 
     def _step_round_inner(self, sessions: list[_Session], origin,
-                          timing: dict, round_sp) -> dict:
+                          timing: dict, round_sp, context=None) -> dict:
         """The body of :meth:`_step_round` (timing/span scaffolding
         lives in the wrapper)."""
         tr = self.obs.tracer
@@ -919,18 +1010,33 @@ class MOOService:
                     groups.setdefault(self._group_key(sess), []).append(sess)
                 else:
                     singles.append(sess)
+            # budget plane (DESIGN.md §15): the policy decides each
+            # session's rectangle allowance BEFORE the pop; None (no
+            # policy) keeps the legacy uniform schedule with zero
+            # policy calls on this path
+            alloc = (self._budget_allocations(groups, context or {})
+                     if self.budget_policy is not None else None)
             prepared_groups = []
             for sess_list in groups.values():
                 prepared = []
                 for s in sess_list:
-                    cells, boxes = s.engine.prepare_parallel(s.state)
+                    budget = (None if alloc is None
+                              else alloc.get(s.session_id))
+                    if budget is not None and budget <= 0:
+                        # skipped this round: idle, NOT exhausted — its
+                        # queue is untouched and staleness accrues
+                        s.rounds_idle += 1
+                        continue
+                    cells, boxes, pop = s.engine.prepare_parallel(
+                        s.state, max_rects=budget)
                     if boxes is not None:
-                        prepared.append((s, cells, boxes))
+                        prepared.append((s, cells, boxes, pop))
                     elif not len(s.state.queue):
                         out["exhausted"].append(s.session_id)
                 if prepared:
                     prepared_groups.append(prepared)
-            n_rows = sum(b.shape[0] for g in prepared_groups for *_, b in g)
+            n_rows = sum(b.shape[0]
+                         for g in prepared_groups for _, _, b, _ in g)
             self._g_in_flight_probes.inc(n_rows)
             self._g_in_flight_dispatches.inc(len(prepared_groups))
         t_prep1 = time.perf_counter()
@@ -945,7 +1051,7 @@ class MOOService:
         try:
             while pending:
                 prepared = pending.pop(0)
-                total = sum(b.shape[0] for *_, b in prepared)
+                total = sum(b.shape[0] for _, _, b, _ in prepared)
                 t0 = time.perf_counter()
                 solve_sp = tr.span("service.solve", cat="service",
                                    parent=round_sp,
@@ -955,7 +1061,7 @@ class MOOService:
                     with solve_sp:
                         res = solve_grouped(
                             [(s.engine.solver, boxes, s.engine.target)
-                             for s, _, boxes in prepared], origin=origin,
+                             for s, _, boxes, _ in prepared], origin=origin,
                             parent_span=(solve_sp if solve_sp.enabled
                                          else None))
                 except Exception:
@@ -966,15 +1072,28 @@ class MOOService:
                 t_abs0 = time.perf_counter()
                 with self._lock:
                     off = 0
-                    for s, cells, boxes in prepared:
+                    for s, cells, boxes, pop in prepared:
                         n = boxes.shape[0]
                         sub = dataclasses.replace(
                             res, x=res.x[off: off + n], f=res.f[off: off + n],
                             feasible=res.feasible[off: off + n])
-                        s.engine.absorb(s.state, cells, sub)
+                        s.engine.absorb(s.state, cells, sub, pop=pop)
                         # charge each session its share of the dispatch
                         s.state.elapsed += wall * (n / total)
                         s.state.record()
+                        # gain attribution (DESIGN.md §15): the absorb
+                        # just logged the hv delta this batch bought —
+                        # fold it into the session's per-probe EMA and
+                        # feed the policy its realized reward
+                        delta = s.state.gain_log[-1][1]
+                        self._h_hv_gain.record(delta)
+                        s.gain_ema = (0.7 * s.gain_ema
+                                      + 0.3 * (delta / max(n, 1)))
+                        s.rounds_idle = 0
+                        if self.budget_policy is not None:
+                            self.budget_policy.observe(
+                                s.session_id, probes=n, hv_delta=delta,
+                                wall_s=wall * (n / total))
                         out["per_session"][s.session_id] = (
                             out["per_session"].get(s.session_id, 0) + n)
                         if not len(s.state.queue):
@@ -998,10 +1117,10 @@ class MOOService:
             # uncertain space — return every unsolved cell to its queue
             with self._lock:
                 for prepared in pending:
-                    for s, cells, boxes in prepared:
+                    for s, cells, boxes, _ in prepared:
                         s.engine.restore(s.state, cells)
                     self._g_in_flight_probes.dec(sum(
-                        b.shape[0] for *_, b in prepared))
+                        b.shape[0] for _, _, b, _ in prepared))
                     self._g_in_flight_dispatches.dec()
             raise
         # -- sequential (PF-S / PF-AS) sessions stay under the lock ----
@@ -1018,6 +1137,9 @@ class MOOService:
                     sess.state.elapsed += time.perf_counter() - t0
                     sess.state.record()
                     n = sess.state.probes - before
+                    delta = sess.state.gain_log[-1][1]
+                    sess.gain_ema = (0.7 * sess.gain_ema
+                                     + 0.3 * (delta / max(n, 1)))
                     out["probes"] += n
                     out["sessions"] += 1
                     out["per_session"][sess.session_id] = (
@@ -1203,4 +1325,16 @@ class MOOService:
                 "vault_seeds": self.vault_seeds,
                 "vault_snapshots": self.vault_snapshots,
                 "vault_tombstones": self.vault_tombstones,
+                # probe-budget plane telemetry (DESIGN.md §15): what the
+                # policy granted vs what the legacy uniform schedule
+                # would have spent, over the same rounds
+                "budget": {
+                    "policy": (getattr(self.budget_policy, "name",
+                                       type(self.budget_policy).__name__)
+                               if self.budget_policy is not None else None),
+                    "rounds": int(self._c_budget_rounds.value),
+                    "rects_granted": int(
+                        self._c_budget_rects_granted.value),
+                    "rects_legacy": int(self._c_budget_rects_legacy.value),
+                },
             }

@@ -1,0 +1,291 @@
+"""Probe-budget allocation plane (repro.alloc, DESIGN.md §15).
+
+Covers the ISSUE-10 policy guarantees:
+
+- **parity**: ``UniformPolicy`` reproduces the policy-free legacy probe
+  schedule exactly — same per-round per-session probe counts, same
+  dispatch keys, bit-equal frontiers — over randomized session mixes;
+- **starvation**: the min-rect floor holds even under a pathological
+  one-hot bandit that scores a single tenant;
+- **deadline guard**: the bandit never routes budget away from a
+  session whose slack is inside ``deadline_guard`` x its wall EMA;
+- **bucket safety**: enabling the bandit on a warm service triggers
+  zero fresh executor compiles;
+- **telemetry**: gain-attribution rows flow from the PF absorb through
+  ``_Session.gain_ema`` and the persist codec round-trips them.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.alloc import (
+    FEATURE_NAMES,
+    Candidate,
+    GainBanditPolicy,
+    UniformPolicy,
+    feature_matrix,
+)
+from repro.core import MOGDConfig
+from repro.core.progressive_frontier import (
+    export_pf_state,
+    frontier_hypervolume,
+    import_pf_state,
+)
+from repro.core.synthetic import mlp_surrogate_task, zdt1_task
+from repro.service import MOOService
+
+FAST = MOGDConfig(steps=40, multistart=4)
+
+
+def _cand(sid, **kw):
+    kw.setdefault("batch_rects", 2)
+    kw.setdefault("cap_rects", 4)
+    kw.setdefault("queue_len", 50)
+    kw.setdefault("uncertain_volume", 1.0)
+    return Candidate(session_id=sid, **kw)
+
+
+# ---------------------------------------------------------------------------
+class TestFeatures:
+    def test_bounded_and_aligned(self):
+        cands = [
+            _cand("a", uncertain_volume=3.0, gain_ema=0.2, probes=100,
+                  rounds_idle=5, slo="interactive", deadline_slack_s=0.1),
+            _cand("b", uncertain_volume=1.0, gain_ema=0.0, probes=0,
+                  slo="batch", deadline_slack_s=math.inf),
+        ]
+        X = feature_matrix(cands)
+        assert X.shape == (2, len(FEATURE_NAMES))
+        assert np.all(X >= 0.0) and np.all(X <= 1.0)
+        i = FEATURE_NAMES.index("volume_share")
+        assert X[0, i] == pytest.approx(0.75)
+        assert X[1, i] == pytest.approx(0.25)
+        # inf slack -> zero deadline pressure; 0.1s slack -> high
+        j = FEATURE_NAMES.index("deadline_pressure")
+        assert X[1, j] == 0.0 and X[0, j] > 0.9
+
+    def test_empty(self):
+        assert feature_matrix([]).shape == (0, len(FEATURE_NAMES))
+
+
+# ---------------------------------------------------------------------------
+class TestUniformParity:
+    """UniformPolicy == legacy schedule, bit for bit (ISSUE-10 sat. 3)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_randomized_mix_parity(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(2, 5))
+        archs = [(8,), (8, 8)]
+        picks = [int(rng.integers(0, len(archs))) for _ in range(n)]
+        rects = [int(rng.integers(1, 4)) for _ in range(n)]
+
+        def build(policy):
+            svc = MOOService(mogd=FAST, grid_l=2, budget_policy=policy)
+            sids = []
+            for i, (p, br) in enumerate(zip(picks, rects)):
+                spec = mlp_surrogate_task(seed=100 + i, d=3, arch=archs[p])
+                sids.append(svc.create_session(spec, batch_rects=br))
+            return svc, sids
+
+        legacy, l_sids = build(None)
+        uniform, u_sids = build(UniformPolicy())
+        # same structure grouping on both sides
+        for ls, us in zip(l_sids, u_sids):
+            assert (legacy.session_dispatch_key(ls)
+                    == uniform.session_dispatch_key(us))
+        remap = dict(zip(u_sids, l_sids))
+        for _ in range(4):
+            lo = legacy.step_sessions(l_sids, origin=None)
+            uo = uniform.step_sessions(u_sids, origin=None)
+            assert ({remap[s]: p for s, p in uo["per_session"].items()}
+                    == lo["per_session"])
+            assert (sorted(remap[s] for s in uo["exhausted"])
+                    == sorted(lo["exhausted"]))
+            assert uo["batches"] == lo["batches"]
+        for ls, us in zip(l_sids, u_sids):
+            Fl, Xl = legacy.frontier(ls)
+            Fu, Xu = uniform.frontier(us)
+            np.testing.assert_array_equal(Fl, Fu)
+            np.testing.assert_array_equal(Xl, Xu)
+
+    def test_uniform_allocate_is_batch_rects(self):
+        cands = [_cand("a", batch_rects=3), _cand("b", batch_rects=1)]
+        assert UniformPolicy().allocate(cands) == {"a": 3, "b": 1}
+
+
+# ---------------------------------------------------------------------------
+class TestGainBandit:
+    def test_min_floor_under_one_hot_bandit(self):
+        """A pathological one-hot weight vector must not starve anyone."""
+        pol = GainBanditPolicy(epsilon=0.0, min_rects=1, seed=0)
+        pol.w[:] = 0.0
+        pol.w[FEATURE_NAMES.index("volume_share")] = 5.0  # one-hot
+        cands = [_cand(f"s{i}", uncertain_volume=(100.0 if i == 0 else 0.01))
+                 for i in range(6)]
+        alloc = pol.allocate(cands)
+        assert all(alloc[c.session_id] >= 1 for c in cands)
+        # ... and the hot tenant still wins the extra slots
+        assert alloc["s0"] == max(alloc.values())
+
+    def test_floor_respects_queue_len(self):
+        pol = GainBanditPolicy(epsilon=0.0, min_rects=2, seed=0)
+        cands = [_cand("a", queue_len=1), _cand("b", queue_len=10)]
+        alloc = pol.allocate(cands)
+        assert alloc["a"] == 1  # can't pop more rects than are queued
+        assert alloc["b"] >= 2
+
+    def test_deadline_guard_protects_tight_ticket(self):
+        """Slack inside 2x wall EMA keeps the full legacy allowance even
+        when the bandit scores that session at the bottom."""
+        pol = GainBanditPolicy(epsilon=0.0, deadline_guard=2.0, seed=0)
+        pol.w[:] = 0.0
+        pol.w[FEATURE_NAMES.index("gain_share")] = 5.0
+        tight = _cand("tight", batch_rects=3, gain_ema=0.0,
+                      deadline_slack_s=0.05, wall_ema_s=0.1)
+        hot = _cand("hot", batch_rects=3, gain_ema=1.0)
+        alloc = pol.allocate([tight, hot])
+        assert alloc["tight"] >= 3  # protected: full batch_rects
+        # a comfortable slack (>2x wall EMA) is NOT protected
+        loose = _cand("loose", batch_rects=3, gain_ema=0.0,
+                      deadline_slack_s=5.0, wall_ema_s=0.1)
+        alloc2 = pol.allocate([loose, hot])
+        assert alloc2["loose"] == 1  # floor only
+
+    def test_budget_fraction_shrinks_spend(self):
+        pol = GainBanditPolicy(budget_fraction=0.5, epsilon=0.0, seed=0)
+        cands = [_cand(f"s{i}", batch_rects=4, cap_rects=8)
+                 for i in range(4)]
+        alloc = pol.allocate(cands)
+        assert sum(alloc.values()) <= int(round(0.5 * 16)) or all(
+            v == 1 for v in alloc.values())
+        assert sum(alloc.values()) < 16  # strictly below legacy spend
+
+    def test_cap_rects_is_hard(self):
+        pol = GainBanditPolicy(budget_fraction=1.0, epsilon=0.0, seed=0)
+        cands = [_cand("a", batch_rects=8, cap_rects=2),
+                 _cand("b", batch_rects=8, cap_rects=2)]
+        alloc = pol.allocate(cands)
+        assert all(v <= 2 for v in alloc.values())
+
+    def test_observe_moves_weights_toward_reward(self):
+        pol = GainBanditPolicy(epsilon=0.0, lr=0.5, seed=0)
+        cands = [_cand("a", gain_ema=1.0), _cand("b", gain_ema=0.0)]
+        pol.allocate(cands)
+        w0 = pol.w.copy()
+        pol.observe("a", probes=8, hv_delta=0.5, wall_s=0.01)
+        assert pol.updates == 1
+        assert not np.array_equal(pol.w, w0)
+        # unknown session or zero probes: no update
+        pol.observe("nope", probes=8, hv_delta=0.5, wall_s=0.01)
+        pol.observe("b", probes=0, hv_delta=0.5, wall_s=0.01)
+        assert pol.updates == 1
+
+    def test_allocation_is_deterministic_for_seed(self):
+        def run(seed):
+            pol = GainBanditPolicy(epsilon=0.3, seed=seed)
+            cands = [_cand(f"s{i}", uncertain_volume=float(i + 1))
+                     for i in range(5)]
+            return pol.allocate(cands)
+        assert run(7) == run(7)
+
+
+# ---------------------------------------------------------------------------
+class TestServiceWiring:
+    def test_bandit_never_triggers_fresh_compiles(self):
+        """Learned routing must reuse the warm (G, R) buckets."""
+        svc = MOOService(mogd=FAST, grid_l=2,
+                         budget_policy=GainBanditPolicy(seed=0))
+        sids = [svc.create_session(
+            mlp_surrogate_task(seed=i, d=3, arch=(8,)), batch_rects=3)
+            for i in range(4)]
+        # warm until the queues outgrow the startup phase (the first
+        # rounds compile larger buckets as queues fill — legacy does the
+        # same); past that, routed allocations must reuse the buckets
+        for _ in range(3):
+            svc.step_sessions(sids, origin=None)
+        warm = svc.stats()["executor_compiles"]
+        for _ in range(5):
+            svc.step_sessions(sids, origin=None)
+        assert svc.stats()["executor_compiles"] == warm
+
+    def test_budget_stats_and_gain_ema(self):
+        svc = MOOService(mogd=FAST, grid_l=2,
+                         budget_policy=GainBanditPolicy(seed=0))
+        sids = [svc.create_session(zdt1_task(), batch_rects=2)
+                for _ in range(2)]
+        svc.step_sessions(sids, origin=None)
+        b = svc.stats()["budget"]
+        assert b["policy"] == "gain_bandit"
+        assert b["rounds"] >= 1
+        assert 0 < b["rects_granted"] <= b["rects_legacy"]
+        stepped = [s for s in sids
+                   if svc._sessions[s].state.probes > 2]
+        assert stepped  # somebody got budget
+        assert any(len(svc._sessions[s].state.gain_log) > 0
+                   for s in stepped)
+
+    def test_no_policy_stats_report_none(self):
+        svc = MOOService(mogd=FAST)
+        assert svc.stats()["budget"]["policy"] is None
+
+    def test_context_deadline_guard_end_to_end(self):
+        """A tight-deadline session keeps its legacy allowance through
+        the step_sessions context seam."""
+        pol = GainBanditPolicy(epsilon=0.0, seed=0)
+        pol.w[:] = 0.0
+        pol.w[FEATURE_NAMES.index("gain_share")] = 5.0
+        svc = MOOService(mogd=FAST, grid_l=2, budget_policy=pol)
+        specs = [mlp_surrogate_task(seed=i, d=3, arch=(8,))
+                 for i in range(3)]
+        sids = [svc.create_session(s, batch_rects=2) for s in specs]
+        svc.step_sessions(sids, origin=None)  # init + first gains
+        ctx = {sids[0]: {"slo": "interactive", "deadline_slack_s": 0.01,
+                         "wall_ema_s": 0.05, "sheddable": True}}
+        out = svc.step_sessions(sids, origin=None, context=ctx)
+        lk = 2 ** 2  # grid_l^k probe rows per rectangle
+        if sids[0] in out["per_session"]:
+            assert out["per_session"][sids[0]] >= 2 * lk
+
+
+# ---------------------------------------------------------------------------
+class TestGainTelemetry:
+    def test_gain_log_monotone_probes_and_hv(self):
+        svc = MOOService(mogd=FAST, grid_l=2)
+        sid = svc.create_session(zdt1_task(), batch_rects=2)
+        for _ in range(3):
+            svc.step_sessions([sid], origin=None)
+        st = svc._sessions[sid].state
+        assert len(st.gain_log) >= 3
+        probes = [row[0] for row in st.gain_log]
+        assert probes == sorted(probes)
+        assert st.hv == pytest.approx(frontier_hypervolume(st))
+        assert 0.0 <= st.hv <= 1.0
+
+    def test_codec_roundtrips_gain_fields(self):
+        svc = MOOService(mogd=FAST, grid_l=2)
+        sid = svc.create_session(zdt1_task(), batch_rects=2)
+        svc.step_sessions([sid], origin=None)
+        st = svc._sessions[sid].state
+        arrays, meta = export_pf_state(st)
+        assert arrays["gain_log"].shape == (len(st.gain_log), 4)
+        back = import_pf_state(arrays, meta)
+        assert back.hv == pytest.approx(st.hv)
+        assert [tuple(r) for r in back.gain_log] == [
+            tuple(r) for r in st.gain_log]
+
+    def test_codec_tolerates_legacy_entries(self):
+        """Pre-PR-10 vault entries have no gain fields: hv is recomputed
+        from the restored frontier, the log resumes empty."""
+        svc = MOOService(mogd=FAST, grid_l=2)
+        sid = svc.create_session(zdt1_task(), batch_rects=2)
+        svc.step_sessions([sid], origin=None)
+        st = svc._sessions[sid].state
+        arrays, meta = export_pf_state(st)
+        del arrays["gain_log"]
+        meta = {k: v for k, v in meta.items() if k != "hv"}
+        back = import_pf_state(arrays, meta)
+        assert back.gain_log == []
+        assert back.hv == pytest.approx(frontier_hypervolume(back))

@@ -230,15 +230,23 @@ class TestProgressiveFrontier:
     def test_cross_rectangle_respects_queue_budget(self, zdt1):
         pf = ProgressiveFrontier(zdt1, mode="AP", mogd=FAST, batch_rects=4)
         state = pf.initialize()
-        cells, boxes = pf.prepare_parallel(state)
+        cells, boxes, pop = pf.prepare_parallel(state)
         # first iteration has a single rectangle -> l^k cells
         assert len(cells) == pf.grid_l ** zdt1.k
         assert boxes.shape == (len(cells), 2, zdt1.k)
+        # pop metadata surfaces what was taken off the queue
+        assert pop.n_rects == 1 and pop.cells_per_rect == [len(cells)]
+        assert pop.popped_volume > 0.0
         res = pf._probe(boxes)
-        pf.absorb(state, cells, res)
+        pf.absorb(state, cells, res, pop=pop)
         assert state.probes == zdt1.k + len(cells)
+        # the absorb logged the hv delta the batch bought
+        assert len(state.gain_log) == 1
+        probes_after, delta, vol, n_cells = state.gain_log[-1]
+        assert probes_after == state.probes and n_cells == len(cells)
+        assert vol == pytest.approx(pop.popped_volume)
         if len(state.queue) >= 2:
-            cells2, _ = pf.prepare_parallel(state)
+            cells2, _, _ = pf.prepare_parallel(state)
             assert len(cells2) > len(cells) or len(state.queue) == 0
 
 
